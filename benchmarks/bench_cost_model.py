@@ -1,0 +1,35 @@
+"""Paper Table I / Eq. (1): the latency model and the §II-A worked example.
+
+Derived values: the round-term share of total latency per tier for the
+10 GB / 20,000-round example — the paper's motivation that the C*RTT term
+dominates on TCP remote memory (10s vs 8s) but not on SSD (2s vs 19s).
+"""
+
+from __future__ import annotations
+
+from repro.core import TABLE_I
+from benchmarks.common import Row, timed
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    d_bytes, c = 10e9, 20_000
+    for name in ("ssd", "tcp", "rdma", "dram"):
+        tier = TABLE_I[name]
+
+        def total():
+            return tier.latency_seconds_bytes(d_bytes, c)
+
+        us, t = timed(total, repeats=1000)
+        round_share = (c * tier.rtt) / t
+        rows.append((f"eq1_{name}_round_share", us, round(round_share, 4)))
+    # The motivating comparison: on TCP the round term exceeds the volume term.
+    tcp = TABLE_I["tcp"]
+    rows.append(("eq1_tcp_round_term_dominates", 0.0,
+                 int(c * tcp.rtt > d_bytes / tcp.bandwidth)))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,52 @@
+"""Paper Fig. 6a: EHJ write-pool sweep (R_w build handles, R_s staging rows).
+
+Derived values: write-round reduction of the Property-6 waterfill pools vs
+starved 1-page pools (DuckDB's default-size analogue), across partition
+counts P in {4, 8, 16} — the paper reports modest (~4.6%) runtime gains with
+the same direction.
+"""
+
+from __future__ import annotations
+
+from repro.core import TABLE_I, TESTBED
+from repro.core.policies import EHJPlan, ehj_plan
+from repro.remote import RemoteMemory, ehj, make_relation
+from benchmarks.common import Row, timed
+
+TIER = TABLE_I["tcp"]  # paper Table I constants (see bench_bnlj)
+
+
+def _run(plan, seed=0, b_pages=96, q_pages=192, rows=8, domain=64):
+    remote = RemoteMemory(TIER)
+    build = make_relation(remote, b_pages * rows, rows, domain, seed=seed)
+    probe = make_relation(remote, q_pages * rows, rows, domain, seed=seed + 1)
+    res = ehj(remote, build, probe, plan)
+    return res.c_write, remote.latency_seconds(), res.output_rows
+
+
+def run() -> list[Row]:
+    rows_out: list[Row] = []
+    m_b, sigma = 24.0, 0.5
+    for parts in (4, 8, 16):
+        remop = ehj_plan(96, 192, 64, m_b, parts, sigma)
+        starved = EHJPlan(m_b=m_b, partitions=parts, sigma=sigma,
+                          p1=(m_b - 1, 1.0), p2=(m_b - 2, 1.0, 1.0),
+                          p3=(m_b - 1, 1.0))
+
+        def run_pair():
+            w_s, lat_s, out_s = _run(starved)
+            w_r, lat_r, out_r = _run(remop)
+            assert out_s == out_r
+            return w_s, w_r, lat_s, lat_r
+
+        us, (w_s, w_r, lat_s, lat_r) = timed(run_pair, repeats=1)
+        rows_out.append((f"fig6a_ehj_P{parts}_write_round_reduction", us,
+                         round(1 - w_r / w_s, 4)))
+        rows_out.append((f"fig6a_ehj_P{parts}_sim_latency_reduction", 0.0,
+                         round(1 - lat_r / lat_s, 4)))
+    return rows_out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,73 @@
+"""Paper Fig. 5 + §II-C(b): EMS fan-in / buffer-ratio sweep on the simulator.
+
+Derived values: round reduction of k=4 (Property 5 split) vs DuckDB's 2-way
+merge (paper: ~25% in the RTT-dominated limit), simulated-latency reduction
+vs the conventional max-fan-in policy, and the exact §II-C round counts.
+"""
+
+from __future__ import annotations
+
+from repro.core import TABLE_I, TESTBED
+from repro.core.policies import (EMSPlan, ems_costs_exact, ems_duckdb,
+                                 ems_split_opt)
+from repro.remote import RemoteMemory, ems_sort
+from repro.remote.simulator import make_key_pages
+from benchmarks.common import Row, timed
+
+TIER = TABLE_I["tcp"]  # paper Table I constants (see bench_bnlj)
+
+
+def _run_plan(plan, n_pages=256, rows=8, seed=0):
+    remote = RemoteMemory(TIER)
+    ids = make_key_pages(remote, n_pages, rows, seed=seed)
+    res = ems_sort(remote, ids, plan, rows_per_page=rows,
+                   count_run_formation=False)
+    return res.c_read + res.c_write, remote.latency_seconds(), res.passes
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    m = 12.0
+
+    def duck():
+        return _run_plan(ems_duckdb(m))
+
+    us_duck, (rounds_duck, lat_duck, _) = timed(duck, repeats=1)
+
+    # Fig. 5 (left): sweep fan-in at the Property-5 split.
+    best = None
+    for k in (2, 3, 4, 6, 8):
+        plan = EMSPlan(m=m, k=k, r_in=ems_split_opt(k))
+        rounds, lat, passes = _run_plan(plan)
+        if k == 4:
+            rows.append(("fig5_ems_k4_round_reduction_vs_duckdb", us_duck,
+                         round(1 - rounds / rounds_duck, 4)))
+        if best is None or lat < best[1]:
+            best = (k, lat)
+    rows.append((f"fig5_ems_latency_best_k{best[0]}", 0.0,
+                 round(1 - best[1] / lat_duck, 4)))
+
+    # Fig. 5 (right): r_in sweep at k=4 — latency should be least sensitive.
+    lats = []
+    for r_in in (0.4, 0.5, 0.6, 0.7, 0.8):
+        _, lat, _ = _run_plan(EMSPlan(m=m, k=4, r_in=r_in))
+        lats.append(lat)
+    spread = (max(lats) - min(lats)) / min(lats)
+    rows.append(("fig5_ems_rin_sweep_latency_spread", 0.0, round(spread, 4)))
+
+    # §II-C(b) exact worked example.
+    def worked():
+        _, c1, _ = ems_costs_exact(13_000, 101, 100, 100)
+        _, c2, _ = ems_costs_exact(13_000, 101, 4, 67)
+        return c1, c2
+
+    us, (c1, c2) = timed(worked, repeats=100)
+    rows.append(("sec2c_ems_conv_rounds", us, c1))
+    rows.append(("sec2c_ems_k4_rounds", 0.0, c2))
+    rows.append(("sec2c_ems_round_reduction_factor", 0.0, round(c1 / c2, 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

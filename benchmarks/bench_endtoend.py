@@ -1,0 +1,95 @@
+"""Paper Fig. 7/8 analogue: end-to-end multi-operator query mixes.
+
+We compose "queries" from the three operators over shared synthetic
+relations under one memory budget — the spill-heavy TPC subset stand-in —
+and compare vanilla policies (conventional/DuckDB knobs) vs REMOP policies
+(+prefetch) on simulated latency (Eq. 1, REMON TCP tier).
+
+Derived values: geometric-mean latency reduction across queries (paper:
+-22.7% TPC-H / -26.4% TPC-DS on spilling subsets), plus the per-query range.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core import TABLE_I, TESTBED
+from repro.core.policies import (BNLJPlan, EMSPlan, bnlj_conventional,
+                                 bnlj_plan, ehj_plan, EHJPlan, ems_duckdb,
+                                 ems_plan)
+from repro.remote import RemoteMemory, bnlj, ehj, ems_sort, make_relation
+from repro.remote.simulator import make_key_pages
+from benchmarks.common import Row, timed
+
+TIER = TABLE_I["tcp"]  # paper Table I constants (see bench_bnlj)
+M = 13.0  # per-operator budget (pages): tight => everything spills
+M_B = 24.0
+
+
+def _q_join(remote, remop: bool, seed: int):
+    outer = make_relation(remote, 90 * 8, 8, 2048, seed=seed)
+    inner = make_relation(remote, 180 * 8, 8, 2048, seed=seed + 1)
+    plan = (bnlj_plan(M, TIER.tau_pages, 1 / 2048) if remop
+            else bnlj_conventional(M))
+    bnlj(remote, outer, inner, plan, prefetch=remop)
+
+
+def _q_sort(remote, remop: bool, seed: int):
+    ids = make_key_pages(remote, 200, 8, seed=seed)
+    plan = ems_plan(200, M, TIER.tau_pages, k_cap=8) if remop else ems_duckdb(M)
+    ems_sort(remote, ids, plan, rows_per_page=8, prefetch=remop,
+             count_run_formation=False)
+
+
+def _q_hash(remote, remop: bool, seed: int):
+    build = make_relation(remote, 80 * 8, 8, 96, seed=seed)
+    probe = make_relation(remote, 160 * 8, 8, 96, seed=seed + 1)
+    if remop:
+        plan = ehj_plan(80, 160, 48, M_B, 16, 0.5)
+    else:
+        plan = EHJPlan(m_b=M_B, partitions=16, sigma=0.5,
+                       p1=(M_B - 1, 1.0), p2=(M_B - 2, 1.0, 1.0),
+                       p3=(M_B - 1, 1.0))
+    ehj(remote, build, probe, plan, prefetch=remop)
+
+
+QUERIES = {
+    "q_join_heavy": [(_q_join, 0), (_q_join, 10)],
+    "q_sort_join": [(_q_sort, 20), (_q_join, 30)],
+    "q_hash_sort": [(_q_hash, 40), (_q_sort, 50)],
+    "q_mixed": [(_q_join, 60), (_q_hash, 70), (_q_sort, 80)],
+}
+
+
+def _latency(remop: bool, query) -> float:
+    remote = RemoteMemory(TIER)
+    for fn, seed in query:
+        fn(remote, remop, seed)
+    return remote.ledger.latency_seconds(TIER, prefetch=remop)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    reductions = []
+
+    def run_all():
+        out = {}
+        for name, query in QUERIES.items():
+            lv = _latency(False, query)
+            lr = _latency(True, query)
+            out[name] = (lv, lr)
+        return out
+
+    us, results = timed(run_all, repeats=1)
+    for name, (lv, lr) in results.items():
+        red = 1 - lr / lv
+        reductions.append(lr / lv)
+        rows.append((f"fig7_{name}_latency_reduction", 0.0, round(red, 4)))
+    geo = 1 - math.exp(sum(math.log(r) for r in reductions) / len(reductions))
+    rows.append(("fig7_geomean_latency_reduction", us, round(geo, 4)))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

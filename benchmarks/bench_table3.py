@@ -1,0 +1,36 @@
+"""Paper Table III: optimal BNLJ input ratio r_in*(alpha, beta).
+
+Derived value: max |ours - paper| over all 35 published cells (target < 0.002).
+"""
+
+from __future__ import annotations
+
+from repro.core.policies import bnlj_rin_opt
+from benchmarks.common import Row, timed
+
+PAPER_TABLE_III = {
+    (1e-2, 1e-2): 0.966, (1e-1, 1e-2): 0.967, (1, 1e-2): 0.970,
+    (10, 1e-2): 0.980, (1e2, 1e-2): 0.991, (1e3, 1e-2): 0.997, (1e4, 1e-2): 0.999,
+    (1e-2, 1e-1): 0.904, (1e-1, 1e-1): 0.905, (1, 1e-1): 0.912,
+    (10, 1e-1): 0.940, (1e2, 1e-1): 0.973, (1e3, 1e-1): 0.991, (1e4, 1e-1): 0.997,
+    (1e-2, 1): 0.764, (1e-1, 1): 0.765, (1, 1): 0.778,
+    (10, 1): 0.836, (1e2, 1): 0.921, (1e3, 1): 0.971, (1e4, 1): 0.990,
+    (1e-2, 10): 0.547, (1e-1, 10): 0.549, (1, 10): 0.560,
+    (10, 10): 0.633, (1e2, 10): 0.789, (1e3, 10): 0.913, (1e4, 10): 0.970,
+    (1e-2, 1e2): 0.330, (1e-1, 1e2): 0.331, (1, 1e2): 0.337,
+    (10, 1e2): 0.384, (1e2, 1e2): 0.549, (1e3, 1e2): 0.769, (1e4, 1e2): 0.910,
+}
+
+
+def run() -> list[Row]:
+    def solve_all():
+        return {cell: bnlj_rin_opt(*cell) for cell in PAPER_TABLE_III}
+
+    us, got = timed(solve_all)
+    max_err = max(abs(got[c] - v) for c, v in PAPER_TABLE_III.items())
+    return [("table3_rin_grid_35cells_max_abs_err", us, round(max_err, 5))]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

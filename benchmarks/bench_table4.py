@@ -1,0 +1,25 @@
+"""Paper Table IV: optimal EMS fan-in k*(alpha).
+
+Derived value: number of mismatches vs the published row (target 0).
+"""
+
+from __future__ import annotations
+
+from repro.core.policies import ems_kopt
+from benchmarks.common import Row, timed
+
+PAPER_TABLE_IV = {1e-9: 4, 1: 5, 4: 8, 16: 17, 64: 43, 256: 126, 1024: 396}
+
+
+def run() -> list[Row]:
+    def solve():
+        return {a: ems_kopt(a) for a in PAPER_TABLE_IV}
+
+    us, got = timed(solve)
+    mism = sum(1 for a, k in PAPER_TABLE_IV.items() if got[a] != k)
+    return [("table4_kopt_7cells_mismatches", us, mism)]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

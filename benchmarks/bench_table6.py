@@ -1,0 +1,34 @@
+"""Paper Table VI: EHJ per-phase optimal buffer splits (Property 6).
+
+Derived value: max relative error between the measured round cost at the
+waterfill allocation and the closed-form C_i* across a grid of (sigma, P)
+configurations (target ~ 0: Cauchy-Schwarz is exact).
+"""
+
+from __future__ import annotations
+
+from repro.core.policies import ehj_optimal_round_costs, ehj_plan, ehj_round_costs
+from benchmarks.common import Row, timed
+
+
+def run() -> list[Row]:
+    b, q, out, m_b = 4000.0, 16000.0, 8000.0, 256.0
+    grid = [(s, p) for s in (0.25, 0.5, 0.75) for p in (4, 16, 64)]
+
+    def check_all():
+        worst = 0.0
+        for sigma, parts in grid:
+            plan = ehj_plan(b, q, out, m_b, parts, sigma)
+            got = ehj_round_costs(b, q, out, plan)
+            want = ehj_optimal_round_costs(b, q, out, m_b, parts, sigma)
+            for g, w in zip(got, want):
+                worst = max(worst, abs(g - w) / w)
+        return worst
+
+    us, worst = timed(check_all)
+    return [("table6_ehj_splits_9cfgs_max_rel_err", us, round(worst, 8))]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

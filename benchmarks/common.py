@@ -1,0 +1,23 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, float]
+
+
+def timed(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    """(microseconds per call, last result)."""
+    result = fn()  # warmup / correctness
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        result = fn()
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return us, result
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

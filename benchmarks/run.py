@@ -1,0 +1,43 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (bench_bnlj, bench_cost_model, bench_ehj, bench_ems,
+                        bench_endtoend, bench_kernel_policy, bench_prefetch,
+                        bench_sensitivity, bench_table3, bench_table4,
+                        bench_table6)
+from benchmarks.common import emit
+
+MODULES = [
+    ("table1_eq1", bench_cost_model),
+    ("table3", bench_table3),
+    ("table4", bench_table4),
+    ("table6", bench_table6),
+    ("fig4_bnlj", bench_bnlj),
+    ("fig5_ems", bench_ems),
+    ("fig6a_ehj", bench_ehj),
+    ("fig6b_prefetch", bench_prefetch),
+    ("fig9_fig12_sensitivity", bench_sensitivity),
+    ("fig7_fig8_endtoend", bench_endtoend),
+    ("tpu_policies", bench_kernel_policy),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in MODULES:
+        try:
+            emit(mod.run())
+        except Exception:
+            failures += 1
+            print(f"{tag}_FAILED,0.0,nan")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

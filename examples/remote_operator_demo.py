@@ -1,0 +1,75 @@
+"""Paper walkthrough: all three operators under four policies and three tiers.
+
+Reproduces the shape of the paper's evaluation story in one script:
+conventional vs DuckDB-like vs REMOP vs REMOP+prefetch, across SSD / TCP /
+RDMA tiers, reporting D, C, and Eq.-(1) latency.
+
+Run:  PYTHONPATH=src python examples/remote_operator_demo.py
+"""
+
+from repro.core import TABLE_I
+from repro.core.policies import (EHJPlan, EMSPlan, bnlj_conventional,
+                                 bnlj_plan, ehj_plan, ems_duckdb, ems_plan)
+from repro.remote import RemoteMemory, bnlj, ehj, ems_sort, make_relation
+from repro.remote.simulator import make_key_pages
+
+M, M_B = 13.0, 24.0
+
+
+def run_bnlj(remote, plan, prefetch=False):
+    outer = make_relation(remote, 60 * 8, 8, 512, seed=0)
+    inner = make_relation(remote, 120 * 8, 8, 512, seed=1)
+    remote.reset_accounting()
+    bnlj(remote, outer, inner, plan, prefetch=prefetch)
+
+
+def run_ems(remote, plan, prefetch=False):
+    ids = make_key_pages(remote, 128, 8, seed=2)
+    remote.reset_accounting()
+    ems_sort(remote, ids, plan, rows_per_page=8, prefetch=prefetch,
+             count_run_formation=False)
+
+
+def run_ehj(remote, plan, prefetch=False):
+    build = make_relation(remote, 48 * 8, 8, 64, seed=3)
+    probe = make_relation(remote, 96 * 8, 8, 64, seed=4)
+    remote.reset_accounting()
+    ehj(remote, build, probe, plan, prefetch=prefetch)
+
+
+def main():
+    for tier_name in ("ssd", "tcp", "rdma"):
+        tier = TABLE_I[tier_name]
+        tau = tier.tau_pages
+        print(f"\n=== tier {tier_name}: tau = {tau:.3f} pages ===")
+        ops = {
+            "bnlj": (run_bnlj, {
+                "conventional": bnlj_conventional(M),
+                "remop": bnlj_plan(M, tau, 1 / 512),
+            }),
+            "ems": (run_ems, {
+                "duckdb-2way": ems_duckdb(M),
+                "remop": ems_plan(128, M, tau, k_cap=8),
+            }),
+            "ehj": (run_ehj, {
+                "starved-pools": EHJPlan(m_b=M_B, partitions=16, sigma=0.5,
+                                         p1=(M_B - 1, 1.0),
+                                         p2=(M_B - 2, 1.0, 1.0),
+                                         p3=(M_B - 1, 1.0)),
+                "remop": ehj_plan(48, 96, 36, M_B, 16, 0.5),
+            }),
+        }
+        for op_name, (runner, plans) in ops.items():
+            for plan_name, plan in plans.items():
+                for prefetch in ((False, True) if plan_name == "remop" else (False,)):
+                    remote = RemoteMemory(tier)
+                    runner(remote, plan, prefetch=prefetch)
+                    led = remote.ledger
+                    tag = plan_name + ("+prefetch" if prefetch else "")
+                    print(f"  {op_name:5s} {tag:22s} D={led.d_total:7.0f} "
+                          f"C={led.c_total:6d} "
+                          f"latency={led.latency_seconds(tier, prefetch=prefetch)*1e3:9.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Serving example: batched greedy decoding with continuous batching.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    results = serve_main([
+        "--arch", "gemma-2b",
+        "--requests", "6",
+        "--prompt-len", "16",
+        "--max-new-tokens", "8",
+        "--max-len", "64",
+        "--slots", "3",
+    ])
+    assert len(results) == 6
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro — REMOP (REmote-Memory-aware OPerator Optimization) in JAX.
+
+Layers:
+  core/        cost model L = D + tau*C, policies (Prop. 4/5/6), TPU planner
+  remote/      faithful paper reproduction over a simulated remote-memory tier
+  models/      assigned architectures (dense/MoE/SSM/hybrid/enc-dec/VLM/audio)
+  kernels/     Pallas TPU kernels sized by the REMOP planner
+  distributed/ sharding rules, bucketed collectives, offload
+  optim/       AdamW (ZeRO-1), gradient compression
+  data/        synthetic sharded pipeline with double-buffered prefetch
+  checkpoint/  async checkpoint store with elastic resharding
+  runtime/     fault-tolerant train/serve loops
+  launch/      production mesh, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,22 @@
+"""REMOP core: latency cost model, buffer-allocation policies, TPU planner."""
+
+from repro.core.cost_model import (
+    TABLE_I,
+    TESTBED,
+    TPU_TIERS,
+    TPU_V5E,
+    TierSpec,
+    TPUSpec,
+    TransferLedger,
+    alpha,
+    beta,
+    latency_cost,
+)
+from repro.core import policies, planner, roofline
+
+__all__ = [
+    "TABLE_I", "TESTBED", "TPU_TIERS", "TPU_V5E",
+    "TierSpec", "TPUSpec", "TransferLedger",
+    "alpha", "beta", "latency_cost",
+    "policies", "planner", "roofline",
+]

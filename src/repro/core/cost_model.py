@@ -1,0 +1,196 @@
+"""REMOP latency cost model (paper §II).
+
+The central object is Eq. (1):
+
+    Latency = sum_i (d_i / BW + RTT) = D / BW + C * RTT
+
+where ``D`` is total data volume, ``C`` the number of *transfer rounds*, and
+``(BW, RTT)`` characterize the tier holding spilled data.  Definition 3
+normalizes this to the dimensionless latency cost
+
+    L = D + tau * C,        tau = BW * RTT / unit
+
+measured in the same unit as ``D`` (pages or bytes).  ``tau -> 0`` recovers the
+classical min-volume objective; large ``tau`` makes round count first-order.
+
+Tier constants come from the paper's Table I (order-of-magnitude media) and
+Table IX (the CloudLab testbed), plus the TPU-side tiers used by the framework
+adaptation (DESIGN.md §3): HBM<->VMEM DMA, ICI collectives, PCIe host offload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+# --------------------------------------------------------------------------
+# Tier specifications
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """A storage/memory tier reachable from the operator's local budget.
+
+    Attributes:
+      name: human-readable identifier.
+      bandwidth: sustained transfer bandwidth, bytes/second.
+      rtt: fixed per-round overhead, seconds (network RTT, DMA issue
+        overhead, collective launch latency, ... depending on the tier).
+      page_bytes: the batching unit used when expressing D in pages.
+    """
+
+    name: str
+    bandwidth: float
+    rtt: float
+    page_bytes: int = 256 * 1024  # DuckDB block size used by the paper.
+
+    @property
+    def tau_bytes(self) -> float:
+        """tau with D measured in bytes: RTT expressed as equivalent bytes."""
+        return self.bandwidth * self.rtt
+
+    @property
+    def tau_pages(self) -> float:
+        """tau with D measured in pages (the paper's convention)."""
+        return self.bandwidth * self.rtt / self.page_bytes
+
+    def latency_seconds(self, d_pages: float, c_rounds: float) -> float:
+        """Eq. (1): D/BW + C*RTT with D given in pages."""
+        return d_pages * self.page_bytes / self.bandwidth + c_rounds * self.rtt
+
+    def latency_seconds_bytes(self, d_bytes: float, c_rounds: float) -> float:
+        return d_bytes / self.bandwidth + c_rounds * self.rtt
+
+
+def latency_cost(d: float, c: float, tau: float) -> float:
+    """Definition 3: L = D + tau * C (unit must match between d and tau)."""
+    return d + tau * c
+
+
+# Paper Table I (order of magnitude) -----------------------------------------
+TABLE_I: Dict[str, TierSpec] = {
+    "dram": TierSpec("dram", bandwidth=25.6e9, rtt=100e-9),
+    "ssd": TierSpec("ssd", bandwidth=0.53e9, rtt=100e-6),
+    "tcp": TierSpec("tcp", bandwidth=1.25e9, rtt=500e-6),
+    "rdma": TierSpec("rdma", bandwidth=6.8e9, rtt=1e-6),
+}
+
+# Paper Table IX (CloudLab c6220 testbed) ------------------------------------
+TESTBED: Dict[str, TierSpec] = {
+    # 10 GbE TCP, RTT 0.155 ms.
+    "remon_tcp": TierSpec("remon_tcp", bandwidth=1.25e9, rtt=155e-6),
+    # 48.6 Gb/s InfiniBand RDMA, RTT 1.16 us.
+    "infiniswap_rdma": TierSpec("infiniswap_rdma", bandwidth=6.075e9, rtt=1.16e-6),
+    # Local SSD spill (DuckDB temp files) for the backend comparison.
+    "disk": TierSpec("disk", bandwidth=0.53e9, rtt=100e-6),
+}
+
+# TPU-side tiers for the framework adaptation (DESIGN.md §3). ----------------
+# "RTT" here is the fixed per-round cost of the mechanism: DMA issue +
+# pipeline-bubble overhead per Pallas grid step for HBM<->VMEM; collective
+# launch/setup latency for ICI; kernel-launch + descriptor overhead for PCIe.
+TPU_TIERS: Dict[str, TierSpec] = {
+    "hbm_dma": TierSpec("hbm_dma", bandwidth=819e9, rtt=1e-6, page_bytes=1024),
+    "ici": TierSpec("ici", bandwidth=50e9, rtt=10e-6, page_bytes=1024),
+    "pcie_host": TierSpec("pcie_host", bandwidth=16e9, rtt=20e-6, page_bytes=4096),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """Hardware constants for the roofline target (TPU v5e-class chip)."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bandwidth: float = 819e9  # bytes/s per chip
+    ici_bandwidth: float = 50e9  # bytes/s per link
+    vmem_bytes: int = 128 * 1024 * 1024
+    hbm_bytes: int = 16 * 1024 * 1024 * 1024
+    dma_overhead_s: float = 1e-6
+    collective_launch_s: float = 10e-6
+
+    @property
+    def tau_dma_bytes(self) -> float:
+        """Per-DMA fixed cost as equivalent HBM bytes (REMOP tau for tiling)."""
+        return self.hbm_bandwidth * self.dma_overhead_s
+
+    @property
+    def tau_ici_bytes(self) -> float:
+        """Per-collective fixed cost as equivalent ICI bytes."""
+        return self.ici_bandwidth * self.collective_launch_s
+
+
+TPU_V5E = TPUSpec()
+
+
+# --------------------------------------------------------------------------
+# Transfer ledger — D/C accounting shared by the simulator and the planner
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TransferLedger:
+    """Counts transferred pages (D) and transfer rounds (C), split by direction.
+
+    This is the bookkeeping abstraction behind Definitions 1 and 2: the
+    remote-memory simulator increments it on every batched swap-in/flush-out,
+    and the analytical policies produce closed-form predictions that tests
+    compare against it.
+    """
+
+    d_read: float = 0.0
+    d_write: float = 0.0
+    c_read: int = 0
+    c_write: int = 0
+    # Rounds whose RTT was hidden by the prefetch double buffer (§IV-E).
+    c_prefetch_hidden: int = 0
+
+    @property
+    def d_total(self) -> float:
+        return self.d_read + self.d_write
+
+    @property
+    def c_total(self) -> int:
+        return self.c_read + self.c_write
+
+    def read(self, pages: float) -> None:
+        self.d_read += pages
+        self.c_read += 1
+
+    def write(self, pages: float) -> None:
+        self.d_write += pages
+        self.c_write += 1
+
+    def merge(self, other: "TransferLedger") -> None:
+        self.d_read += other.d_read
+        self.d_write += other.d_write
+        self.c_read += other.c_read
+        self.c_write += other.c_write
+        self.c_prefetch_hidden += other.c_prefetch_hidden
+
+    def latency_seconds(self, tier: TierSpec, prefetch: bool = False) -> float:
+        """Eq. (1) over the ledger; with prefetch, hidden rounds pay no RTT."""
+        c_paying = self.c_total - (self.c_prefetch_hidden if prefetch else 0)
+        return tier.latency_seconds(self.d_total, max(c_paying, 0))
+
+    def latency_cost(self, tau: float) -> float:
+        return latency_cost(self.d_total, self.c_total, tau)
+
+    def reset(self) -> None:
+        self.d_read = self.d_write = 0.0
+        self.c_read = self.c_write = 0
+        self.c_prefetch_hidden = 0
+
+
+def alpha(m_pages: float, tau: float) -> float:
+    """Memory-scaled network parameter alpha = M / tau (Table II)."""
+    if tau <= 0:
+        return math.inf
+    return m_pages / tau
+
+
+def beta(selectivity: float, m_pages: float) -> float:
+    """Selectivity-memory parameter beta = f * M (Table II)."""
+    return selectivity * m_pages

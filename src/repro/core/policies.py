@@ -1,0 +1,387 @@
+"""REMOP operator buffer-allocation policies (paper §III).
+
+Each operator family gets:
+  * closed-form / numerical cost functions ``D(params)``, ``C(params)`` and the
+    latency objective ``L = D + tau * C``;
+  * the paper's optimal policy (Properties 4, 5, 6; Tables III, IV, VI);
+  * the conventional / DuckDB baselines it is compared against (Table VII).
+
+All sizes are in *pages* unless noted.  The same algebra is reused by the TPU
+planner (``core/planner.py``) with tau calibrated from DMA / collective launch
+overheads instead of network RTT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+# ==========================================================================
+# Generic allocator (Property 6 machinery)
+# ==========================================================================
+
+
+def waterfill(coeffs: Sequence[float], budget: float) -> Tuple[List[float], float]:
+    """Minimize sum_j a_j / R_j subject to sum_j R_j = budget.
+
+    By Cauchy-Schwarz the optimum is R_j proportional to sqrt(a_j) with minimum
+    value (sum_j sqrt(a_j))^2 / budget (paper Property 6).
+
+    Returns:
+      (allocation list, minimal round cost C*).
+    """
+    roots = [math.sqrt(max(a, 0.0)) for a in coeffs]
+    total = sum(roots)
+    if total == 0.0 or budget <= 0.0:
+        return [budget / max(len(coeffs), 1)] * len(coeffs), 0.0
+    alloc = [budget * r / total for r in roots]
+    c_star = total * total / budget
+    return alloc, c_star
+
+
+def round_cost(coeffs: Sequence[float], alloc: Sequence[float]) -> float:
+    """Evaluate sum_j a_j / R_j for a concrete allocation."""
+    c = 0.0
+    for a, r in zip(coeffs, alloc):
+        if a == 0.0:
+            continue
+        if r <= 0.0:
+            return math.inf
+        c += a / r
+    return c
+
+
+def _golden_min(f, lo: float, hi: float, iters: int = 200) -> float:
+    """Golden-section minimizer for a unimodal objective on [lo, hi]."""
+    invphi = (math.sqrt(5.0) - 1.0) / 2.0
+    a, b = lo, hi
+    c = b - invphi * (b - a)
+    d = a + invphi * (b - a)
+    fc, fd = f(c), f(d)
+    for _ in range(iters):
+        if fc < fd:
+            b, d, fd = d, c, fc
+            c = b - invphi * (b - a)
+            fc = f(c)
+        else:
+            a, c, fc = c, d, fd
+            d = a + invphi * (b - a)
+            fd = f(d)
+        if abs(b - a) < 1e-12:
+            break
+    return (a + b) / 2.0
+
+
+# ==========================================================================
+# Blocked nested-loop join (§III-A)
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class BNLJPlan:
+    m: float  # total budget (pages)
+    r_in: float  # input-region fraction
+    p_r: float  # outer fraction of the input region
+    # Derived absolute sizes.
+    @property
+    def input_pages(self) -> float:
+        return self.r_in * self.m
+
+    @property
+    def output_pages(self) -> float:
+        return self.m - self.input_pages
+
+    @property
+    def outer_pages(self) -> float:
+        return self.p_r * self.input_pages
+
+    @property
+    def inner_pages(self) -> float:
+        return (1.0 - self.p_r) * self.input_pages
+
+
+def bnlj_costs_exact(
+    size_r: int, size_s: int, out: float, p_r_pages: int, p_s_pages: int, r_out_pages: int
+) -> Tuple[float, float]:
+    """Exact (ceil-based) D and C for BNLJ — matches the §II-C worked example.
+
+    D_read = ceil(|R|/P_R)*|S| + |R|;  C_read = ceil(|R|/P_R)*ceil(|S|/P_S)
+    + ceil(|R|/P_R); writes add O pages in ceil(O/R_out) rounds.
+    """
+    blocks_r = math.ceil(size_r / p_r_pages)
+    blocks_s = math.ceil(size_s / p_s_pages)
+    d = blocks_r * size_s + size_r + out
+    c = blocks_r * blocks_s + blocks_r + (math.ceil(out / r_out_pages) if out else 0)
+    return float(d), float(c)
+
+
+def bnlj_costs(
+    size_r: float, size_s: float, out: float, plan: BNLJPlan
+) -> Tuple[float, float]:
+    """Smooth approximations of D and C used by the optimizer (§III-A b)."""
+    p_r_pages = max(plan.outer_pages, 1e-9)
+    p_s_pages = max(plan.inner_pages, 1e-9)
+    r_out = max(plan.output_pages, 1e-9)
+    d = size_r + size_r * size_s / p_r_pages + out
+    c = size_r * size_s / (p_r_pages * p_s_pages) + size_r / p_r_pages + out / r_out
+    return d, c
+
+
+def bnlj_latency(size_r, size_s, out, plan: BNLJPlan, tau: float) -> float:
+    d, c = bnlj_costs(size_r, size_s, out, plan)
+    return d + tau * c
+
+
+def bnlj_split_opt(r_in_pages: float, tau: float) -> float:
+    """Property 4: p_R*/p_S* = sqrt(1 + R_in/tau), with p_R* + p_S* = 1."""
+    if tau <= 0.0:
+        return 1.0  # volume-dominated limit: outer-heavy
+    ratio = math.sqrt(1.0 + r_in_pages / tau)
+    return ratio / (1.0 + ratio)
+
+
+def bnlj_rin_objective(r_in: float, a: float, b: float) -> float:
+    """Objective g(r_in) from §III-A(d), parameterized by alpha=M/tau, beta=fM.
+
+    g = 1/(p_R* r_in) + 1/(alpha r_in^2 p_R*(1-p_R*)) + beta/(alpha (1-r_in)),
+    with p_R* from Property 4 evaluated at R_in/tau = r_in * alpha.
+    """
+    if not (0.0 < r_in < 1.0):
+        return math.inf
+    p_r = _p_r_of(r_in, a)
+    return (
+        1.0 / (p_r * r_in)
+        + 1.0 / (a * r_in * r_in * p_r * (1.0 - p_r))
+        + b / (a * (1.0 - r_in))
+    )
+
+
+def _p_r_of(r_in: float, a: float) -> float:
+    # R_in / tau = r_in * M / tau = r_in * alpha.
+    ratio = math.sqrt(1.0 + r_in * a)
+    return ratio / (1.0 + ratio)
+
+
+def bnlj_rin_opt(a: float, b: float) -> float:
+    """Optimal input fraction r_in*(alpha, beta) — reproduces Table III."""
+    return _golden_min(lambda r: bnlj_rin_objective(r, a, b), 1e-6, 1.0 - 1e-6)
+
+
+def bnlj_plan(
+    m: float, tau: float, selectivity: float = 0.0
+) -> BNLJPlan:
+    """Full REMOP BNLJ policy: r_in from Table III, p_R from Property 4."""
+    if tau <= 0.0:
+        # Volume-dominated: conventional outer-heavy allocation.
+        return bnlj_conventional(m)
+    a = m / tau
+    b = selectivity * m
+    r_in = bnlj_rin_opt(a, b)
+    p_r = bnlj_split_opt(r_in * m, tau)
+    return BNLJPlan(m=m, r_in=r_in, p_r=p_r)
+
+
+def bnlj_conventional(m: float) -> BNLJPlan:
+    """Disk-oriented default: P_R = M-2, P_S = 1, R_out = 1 (§III-A e)."""
+    r_in = (m - 1.0) / m
+    p_r = (m - 2.0) / (m - 1.0)
+    return BNLJPlan(m=m, r_in=r_in, p_r=p_r)
+
+
+# ==========================================================================
+# k-way external merge sort (§III-B)
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class EMSPlan:
+    m: float
+    k: int
+    r_in: float
+
+    @property
+    def input_pages(self) -> float:
+        return self.r_in * self.m
+
+    @property
+    def output_pages(self) -> float:
+        return self.m - self.input_pages
+
+    @property
+    def per_run_pages(self) -> float:
+        return self.input_pages / self.k
+
+
+def ems_split_opt(k: int) -> float:
+    """Property 5: R_in : R_out = sqrt(k) : 1  =>  r_in = sqrt(k)/(sqrt(k)+1)."""
+    s = math.sqrt(k)
+    return s / (s + 1.0)
+
+
+def ems_passes(n: float, m: float, k: int) -> int:
+    runs = math.ceil(n / m)
+    if runs <= 1:
+        return 0
+    return max(1, math.ceil(math.log(runs) / math.log(k)))
+
+
+def ems_costs(n: float, m: float, plan: EMSPlan) -> Tuple[float, float, int]:
+    """(D, C, passes) for the merge phase (§III-B b).
+
+    Per pass: D = 2N; C = k*N/R_in + N/R_out (refills through R_in/k-page
+    buffers plus output flushes).
+    """
+    p = ems_passes(n, m, plan.k)
+    d = 2.0 * n * p
+    c_pass = plan.k * n / max(plan.input_pages, 1e-9) + n / max(plan.output_pages, 1e-9)
+    return d, c_pass * p, p
+
+
+def ems_costs_exact(n: int, m: int, k: int, r_in_pages: int) -> Tuple[float, float, int]:
+    """Exact (ceil/floor) merge-phase costs — matches the §II-C worked example.
+
+    Per pass: reads refill through floor(R_in/k)-page per-run buffers and the
+    output flushes through R_out = M - R_in pages, so
+    C_pass = ceil(N / floor(R_in/k)) + ceil(N / R_out); D_pass = 2N.
+    """
+    r_out = m - r_in_pages
+    per_run = max(1, r_in_pages // k)
+    p = ems_passes(n, m, k)
+    c_pass = math.ceil(n / per_run) + math.ceil(n / max(r_out, 1))
+    return float(2 * n * p), float(c_pass * p), p
+
+
+def ems_latency(n: float, m: float, plan: EMSPlan, tau: float) -> float:
+    d, c, _ = ems_costs(n, m, plan)
+    return d + tau * c
+
+
+def ems_h(k: float, a: float) -> float:
+    """h(k) = [2 + (sqrt(k)+1)^2 / alpha] / log2(k) (§III-B d)."""
+    if k <= 1.0:
+        return math.inf
+    return (2.0 + (math.sqrt(k) + 1.0) ** 2 / a) / math.log2(k)
+
+
+def ems_kopt(a: float, k_max: int = 1 << 20) -> int:
+    """Optimal integer fan-in k*(alpha) — reproduces Table IV.
+
+    As alpha -> 0 (RTT-dominated) k* = 4; as alpha grows, k* grows toward the
+    maximum feasible fan-in.
+    """
+    if a <= 0.0:
+        return 4
+    best_k, best_h = 2, ems_h(2, a)
+    # h is unimodal in k; scan integers with geometric stride then refine.
+    k = 2
+    while k <= k_max:
+        h = ems_h(k, a)
+        if h < best_h:
+            best_k, best_h = k, h
+        k += max(1, k // 64)
+    for kk in range(max(2, best_k - 70), min(k_max, best_k + 70) + 1):
+        h = ems_h(kk, a)
+        if h < best_h:
+            best_k, best_h = kk, h
+    return best_k
+
+
+def ems_plan(n: float, m: float, tau: float, k_cap: int | None = None) -> EMSPlan:
+    """Full REMOP EMS policy: k from Table IV, split from Property 5."""
+    if tau <= 0.0:
+        k = max(2, int(m - 1))
+    else:
+        k = ems_kopt(m / tau)
+    if k_cap is not None:
+        k = min(k, k_cap)
+    k = max(2, min(k, max(2, int(m - 1))))
+    return EMSPlan(m=m, k=k, r_in=ems_split_opt(k))
+
+
+def ems_conventional(m: float) -> EMSPlan:
+    """Max fan-in: k = M-1, one page per input and output (§III-B e)."""
+    k = max(2, int(m) - 1)
+    return EMSPlan(m=m, k=k, r_in=(m - 1.0) / m)
+
+
+def ems_duckdb(m: float) -> EMSPlan:
+    """DuckDB v1.0.0: 2-way merge, R_in = 2M/3, R_out = M/3."""
+    return EMSPlan(m=m, k=2, r_in=2.0 / 3.0)
+
+
+# ==========================================================================
+# External hash join (§III-C)
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class EHJPlan:
+    m_b: float  # I/O buffer-pool budget (pages)
+    partitions: int  # radix P
+    sigma: float  # spilled partition fraction (system-determined)
+    # Per-phase allocations [R_r, R_w] / [R_r, R_s, R_o] / [R_r, R_o].
+    p1: Tuple[float, ...] = ()
+    p2: Tuple[float, ...] = ()
+    p3: Tuple[float, ...] = ()
+
+
+def ehj_phase_coeffs(
+    b: float, q: float, out: float, partitions: int, sigma: float
+) -> Tuple[Tuple[float, ...], Tuple[float, ...], Tuple[float, ...]]:
+    """Round-cost coefficients a_j per phase (Table V numerators)."""
+    p1 = (b, sigma * sigma * partitions * b)
+    p2 = (q, sigma * sigma * partitions * q, (1.0 - sigma) * out)
+    p3 = (sigma * (b + q), sigma * out)
+    return p1, p2, p3
+
+
+def ehj_data_costs(b: float, q: float, out: float, sigma: float) -> Tuple[float, float, float]:
+    """Per-phase D_i (Table V): allocation-independent."""
+    d1 = (1.0 + sigma) * b
+    d2 = (1.0 + sigma) * q + (1.0 - sigma) * out
+    d3 = sigma * (b + q) + sigma * out
+    return d1, d2, d3
+
+
+def ehj_plan(
+    b: float, q: float, out: float, m_b: float, partitions: int, sigma: float
+) -> EHJPlan:
+    """Property 6: per-phase allocation R_j proportional to sqrt(a_j)."""
+    c1, c2, c3 = ehj_phase_coeffs(b, q, out, partitions, sigma)
+    a1, _ = waterfill(c1, m_b)
+    a2, _ = waterfill(c2, m_b)
+    a3, _ = waterfill(c3, m_b)
+    return EHJPlan(
+        m_b=m_b, partitions=partitions, sigma=sigma,
+        p1=tuple(a1), p2=tuple(a2), p3=tuple(a3),
+    )
+
+
+def ehj_round_costs(
+    b: float, q: float, out: float, plan: EHJPlan
+) -> Tuple[float, float, float]:
+    """Evaluate Table V's C_i for a concrete plan."""
+    c1, c2, c3 = ehj_phase_coeffs(b, q, out, plan.partitions, plan.sigma)
+    return (
+        round_cost(c1, plan.p1),
+        round_cost(c2, plan.p2),
+        round_cost(c3, plan.p3),
+    )
+
+
+def ehj_optimal_round_costs(
+    b: float, q: float, out: float, m_b: float, partitions: int, sigma: float
+) -> Tuple[float, float, float]:
+    """Closed forms C_i* from Table VI."""
+    p = partitions
+    c1 = b * (1.0 + sigma * math.sqrt(p)) ** 2 / m_b
+    c2 = (math.sqrt(q) + sigma * math.sqrt(p * q) + math.sqrt((1.0 - sigma) * out)) ** 2 / m_b
+    c3 = sigma * (math.sqrt(b + q) + math.sqrt(out)) ** 2 / m_b
+    return c1, c2, c3
+
+
+def ehj_latency(b: float, q: float, out: float, plan: EHJPlan, tau: float) -> float:
+    d = sum(ehj_data_costs(b, q, out, plan.sigma))
+    c = sum(ehj_round_costs(b, q, out, plan))
+    return d + tau * c

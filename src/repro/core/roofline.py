@@ -1,0 +1,277 @@
+"""Roofline-term derivation from compiled XLA artifacts (task §ROOFLINE).
+
+``cost_analysis()`` on an SPMD-partitioned module reports **per-device**
+quantities (calibrated empirically: a (1024,1024)x(1024,1024) matmul sharded
+over 8 host devices reports 2*1024^3/8 flops).  The three terms are therefore
+computed per-device over per-device rates, which equals the task's
+``global / (chips * rate)`` formulation:
+
+    compute    = flops_pd / peak_flops
+    memory     = hbm_bytes_pd / hbm_bw
+    collective = wire_bytes_pd / ici_bw
+
+Collective bytes are not in ``cost_analysis()``; we parse the optimized HLO
+text, resolve operand names through a symbol table (operand shapes are not
+inline in modern HLO), and sum operand sizes per collective op.  We also model
+"wire bytes" per device with the standard ring factors so the collective term
+reflects actual link occupancy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+from repro.core.cost_model import TPU_V5E, TPUSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],\{\}\s/]+?)\s+([\w\-]+)\(")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Sum byte sizes of every dtype[dims] token in a shape string (tuples ok)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    name: str
+    operand_bytes: int
+    output_bytes: int
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        """Per-device link bytes under ring/bidirectional schedules."""
+        g = max(self.group_size, 1)
+        if g == 1:
+            return 0.0
+        frac = (g - 1) / g
+        if self.kind == "all-reduce":
+            return 2.0 * self.operand_bytes * frac
+        if self.kind == "all-gather":
+            return self.output_bytes * frac  # output = full gathered buffer
+        if self.kind == "reduce-scatter":
+            return self.operand_bytes * frac
+        if self.kind in ("all-to-all", "ragged-all-to-all"):
+            return self.operand_bytes * frac
+        if self.kind == "collective-permute":
+            return float(self.operand_bytes)
+        return float(self.operand_bytes)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    if "source_target_pairs" in line:
+        return 2
+    return default
+
+
+def parse_hlo_collectives(hlo_text: str, default_group: int = 1) -> List[CollectiveOp]:
+    """Extract every collective op with operand/output byte sizes.
+
+    Handles async pairs (`all-reduce-start`/`-done`) by counting only the
+    `-start`; plain sync ops are counted directly.
+    """
+    # Pass 1: symbol table name -> shape text.
+    shapes: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, opcode = m.group(1), m.group(2), m.group(3)
+        kind = opcode
+        if kind.endswith("-start"):
+            kind = kind[: -len("-start")]
+        elif kind.endswith("-done"):
+            continue
+        if kind not in _COLLECTIVES:
+            continue
+        # Operands: %names inside the call parens.
+        call = line[line.index(opcode) + len(opcode):]
+        depth, args_text = 0, ""
+        for ch in call:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args_text += ch
+        operand_names = re.findall(r"%([\w\.\-]+)", args_text)
+        operand_bytes = sum(shape_bytes(shapes.get(n, "")) for n in operand_names)
+        if operand_bytes == 0:
+            # Fall back to output size (all-reduce: in == out).
+            operand_bytes = shape_bytes(out_shape)
+        ops.append(CollectiveOp(
+            kind=kind, name=name,
+            operand_bytes=operand_bytes,
+            output_bytes=shape_bytes(out_shape),
+            group_size=_group_size(line, default_group),
+        ))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for op in ops:
+        d = out.setdefault(op.kind, {"count": 0, "operand_bytes": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += op.operand_bytes
+        d["wire_bytes"] += op.wire_bytes
+    return out
+
+
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    """Per-(arch x shape x mesh) roofline record (EXPERIMENTS.md §Roofline)."""
+
+    name: str
+    chips: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_operand_bytes: float  # task-spec definition (sum operand sizes)
+    collective_wire_bytes: float  # ring-modeled link bytes per device
+    collective_counts: Dict[str, Dict[str, float]]
+    model_flops: float  # 6*N*D (train) / 2*N*D (inference), global
+    # Resident bytes (args + outputs + temps from memory_analysis): touching
+    # each resident byte once is a *lower bound* on HBM traffic.  cost_analysis
+    # "bytes accessed" on the CPU backend is an UNFUSED upper bound (every HLO
+    # intermediate counted), so we report both and classify dominance with the
+    # lower bound — if memory dominates even optimistically, it really does.
+    resident_bytes_per_device: float = 0.0
+    spec: TPUSpec = dataclasses.field(default_factory=lambda: TPU_V5E)
+
+    @property
+    def compute_seconds(self) -> float:
+        return self.flops_per_device / self.spec.peak_flops
+
+    @property
+    def memory_seconds(self) -> float:
+        """Upper bound: unfused HLO bytes accessed."""
+        return self.hbm_bytes_per_device / self.spec.hbm_bandwidth
+
+    @property
+    def memory_seconds_lower(self) -> float:
+        """Lower bound: each resident byte touched once."""
+        return self.resident_bytes_per_device / self.spec.hbm_bandwidth
+
+    @property
+    def collective_seconds(self) -> float:
+        return self.collective_wire_bytes / self.spec.ici_bandwidth
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_seconds,
+            "memory": self.memory_seconds_lower,
+            "collective": self.collective_seconds,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_seconds(self) -> float:
+        """Roofline step-time bound: max of the three overlappable terms."""
+        return max(self.compute_seconds, self.memory_seconds_lower,
+                   self.collective_seconds)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global); catches remat/redundancy waste."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (the perf score)."""
+        t = self.step_seconds
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * self.spec.peak_flops * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_operand_bytes": self.collective_operand_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_counts": self.collective_counts,
+            "model_flops": self.model_flops,
+            "resident_bytes_per_device": self.resident_bytes_per_device,
+            "compute_seconds": self.compute_seconds,
+            "memory_seconds": self.memory_seconds,
+            "memory_seconds_lower": self.memory_seconds_lower,
+            "collective_seconds": self.collective_seconds,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def report_from_compiled(
+    name: str,
+    compiled,
+    chips: int,
+    model_flops: float,
+    spec: TPUSpec = TPU_V5E,
+) -> RooflineReport:
+    """Build a RooflineReport from a jax Compiled object."""
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    ops = parse_hlo_collectives(compiled.as_text())
+    summary = collective_summary(ops)
+    return RooflineReport(
+        name=name,
+        chips=chips,
+        flops_per_device=flops,
+        hbm_bytes_per_device=byts,
+        collective_operand_bytes=float(sum(o.operand_bytes for o in ops)),
+        collective_wire_bytes=float(sum(o.wire_bytes for o in ops)),
+        collective_counts=summary,
+        model_flops=model_flops,
+        spec=spec,
+    )

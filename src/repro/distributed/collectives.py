@@ -1,0 +1,86 @@
+"""Round-aware bucketed collectives (the ICI tier of the REMOP model).
+
+Each collective launch pays a fixed cost (the "RTT" of the ICI tier), so the
+number of collective *rounds* is a first-order term exactly as in Eq. (1).
+``bucketed_psum`` coalesces a gradient pytree into ~equal-byte buckets sized
+by ``core.planner.plan_grad_buckets`` (fewer rounds), while keeping enough
+buckets that the backward pass can overlap them (the §IV-E prefetch trade).
+
+Under pjit, XLA already fuses same-shape all-reduces; this module is for the
+explicit shard_map/manual paths and for the cross-pod hop where we also
+compress (``optim.compression``) before reducing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import TPU_V5E
+from repro.core.planner import BucketPlan, plan_grad_buckets
+
+
+def partition_buckets(tree, n_buckets: int) -> List[List[int]]:
+    """Greedy partition of leaf indices into ~equal-byte buckets."""
+    leaves = jax.tree.leaves(tree)
+    sizes = [(i, l.size * l.dtype.itemsize) for i, l in enumerate(leaves)]
+    sizes.sort(key=lambda t: -t[1])
+    buckets: List[List[int]] = [[] for _ in range(max(1, n_buckets))]
+    loads = [0] * len(buckets)
+    for i, b in sizes:
+        j = loads.index(min(loads))
+        buckets[j].append(i)
+        loads[j] += b
+    return [b for b in buckets if b]
+
+
+def bucketed_psum(tree, axis_name: str, plan: BucketPlan | None = None,
+                  backward_seconds: float = 0.05, group_size: int = 16):
+    """psum a pytree in REMOP-planned buckets (inside shard_map).
+
+    Each bucket is flattened into one f32 vector => one all-reduce round.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    total = sum(l.size * 4 for l in leaves)
+    if plan is None:
+        plan = plan_grad_buckets(total, backward_seconds, group_size)
+    buckets = partition_buckets(tree, plan.n_buckets)
+    out: List[Any] = [None] * len(leaves)
+    for idx in buckets:
+        flat = jnp.concatenate(
+            [leaves[i].astype(jnp.float32).reshape(-1) for i in idx])
+        flat = jax.lax.psum(flat, axis_name)  # 1 round
+        off = 0
+        for i in idx:
+            n = leaves[i].size
+            out[i] = flat[off:off + n].reshape(leaves[i].shape).astype(
+                leaves[i].dtype)
+            off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def hierarchical_grad_reduce(tree, intra_axis: str, inter_axis: str | None):
+    """Reduce-scatter intra-pod, all-reduce across pods, all-gather intra-pod.
+
+    The canonical multi-pod schedule: the slow inter-pod hop moves only
+    1/pod_size of the bytes.  Usable inside shard_map with both axes manual.
+    """
+    def one(g):
+        g = g.astype(jnp.float32)
+        flat = g.reshape(-1)
+        n = jax.lax.axis_size(intra_axis)
+        pad = (-flat.size) % n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        shard = jax.lax.psum_scatter(flat.reshape(n, -1), intra_axis,
+                                     scatter_dimension=0, tiled=False)
+        if inter_axis is not None:
+            shard = jax.lax.psum(shard, inter_axis)
+        full = jax.lax.all_gather(shard, intra_axis, tiled=False).reshape(-1)
+        if pad:
+            full = full[:-pad]
+        return full.reshape(g.shape)
+
+    return jax.tree.map(one, tree)

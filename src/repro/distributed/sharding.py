@@ -1,0 +1,249 @@
+"""Logical-axis sharding: one set of model code, any mesh.
+
+Model code annotates activations with *logical* names (``batch``, ``seq``,
+``heads``, ``ff``, ``vocab``, ``expert``...).  A :class:`Sharder` installed by
+the launcher maps logical names to mesh axes and applies
+``with_sharding_constraint``; with no sharder installed (unit tests, smoke
+tests on one CPU device) the annotations are no-ops.
+
+Parameter shardings are produced by path-pattern rules over the params
+pytree (``param_specs``), giving TP on the ``model`` axis, EP for expert
+stacks, and replication elsewhere; ZeRO-1 additionally shards optimizer
+state over the ``data`` axis (``zero1_specs``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+# Logical axis name -> mesh axis (or tuple of mesh axes).
+# ``seq`` maps to the model axis between blocks: Megatron-style sequence
+# parallelism, which shards the residual stream and turns the TP all-reduce
+# into all-gather + reduce-scatter pairs (same volume, less activation memory).
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "d_model": None,
+    "state": ("model",),
+    # decode KV-cache sequence dim: unsharded by default; the "kv_seq"
+    # hillclimb variant maps it to the model axis (flash-decoding style
+    # sharded-KV attention) for MQA archs whose single KV head cannot be
+    # head-sharded.
+    "kv_seq": None,
+}
+
+
+class Sharder:
+    def __init__(self, mesh: Mesh, rules: Dict[str, Optional[Tuple[str, ...]]] | None = None,
+                 sequence_parallel: bool = True):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        if sequence_parallel:
+            self.rules["seq"] = self.rules.get("seq_sp", ("model",))
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(self, logical: Sequence[Optional[str]], shape: Sequence[int] | None = None) -> P:
+        axes = []
+        used = set()
+        for i, name in enumerate(logical):
+            if name is None:
+                axes.append(None)
+                continue
+            mesh_axes = self.rules.get(name)
+            if mesh_axes is None:
+                axes.append(None)
+                continue
+            mesh_axes = tuple(a for a in mesh_axes if a in self.axis_sizes and a not in used)
+            if not mesh_axes:
+                axes.append(None)
+                continue
+            if shape is not None:
+                # Only shard divisible dims: avoids GSPMD padding blowups on
+                # head counts like 24 or 10 that don't divide the model axis.
+                total = 1
+                for a in mesh_axes:
+                    total *= self.axis_sizes[a]
+                if shape[i] % total != 0:
+                    axes.append(None)
+                    continue
+            used.update(mesh_axes)
+            axes.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        return P(*axes)
+
+    def constrain(self, x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+        if len(logical) != x.ndim:
+            raise ValueError(f"logical axes {logical} vs rank {x.ndim}")
+        spec = self.spec(logical, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, logical: Sequence[Optional[str]], shape: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+def current_sharder() -> Optional[Sharder]:
+    return getattr(_state, "sharder", None)
+
+
+@contextlib.contextmanager
+def use_sharder(sharder: Optional[Sharder]):
+    prev = getattr(_state, "sharder", None)
+    _state.sharder = sharder
+    try:
+        yield
+    finally:
+        _state.sharder = prev
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate activations with logical axes (no-op without a sharder)."""
+    s = current_sharder()
+    if s is None:
+        return x
+    return s.constrain(x, logical)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-pattern based)
+# ---------------------------------------------------------------------------
+
+# Patterns are matched against "/"-joined param paths; the FIRST match wins.
+# Specs are logical names per dim, resolved through the sharder rules; a
+# leading "layer" dim (stacked scan params) is always unsharded.
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed/table", ("vocab", None)),
+    (r"(frontend|proj_in)/.*w", (None, None)),
+    # attention projections (2-D, layer-stacked to 3-D handled generically)
+    (r"attn/wq/w", (None, "heads_flat")),
+    (r"attn/wk/w", (None, "kv_flat")),
+    (r"attn/wv/w", (None, "kv_flat")),
+    (r"attn/wo/w", ("heads_flat", None)),
+    # MLA
+    (r"attn/w_dq/w", (None, None)),
+    (r"attn/w_uq/w", (None, "heads_flat")),
+    (r"attn/w_dkv/w", (None, None)),
+    (r"attn/w_uk/w", (None, "heads_flat")),
+    (r"attn/w_uv/w", (None, "heads_flat")),
+    (r"attn/w_kr/w", (None, None)),
+    # dense mlp
+    (r"mlp/w_(gate|up)/w", (None, "ff")),
+    (r"mlp/w_down/w", ("ff", None)),
+    # MoE experts: [E, d, ff] / [E, ff, d] — expert-parallel on the model axis
+    (r"moe/experts/w_(gate|up)", ("expert", None, None)),
+    (r"moe/experts/w_down", ("expert", None, None)),
+    (r"moe/router/w", (None, None)),
+    (r"moe/shared/w_(gate|up)/w", (None, "ff")),
+    (r"moe/shared/w_down/w", ("ff", None)),
+    # mamba2 / SSD
+    (r"ssm/w_in/w", (None, "ff")),
+    (r"ssm/w_out/w", ("ff", None)),
+    (r"ssm/(a_log|dt_bias|d_skip)", ("state_heads",)),
+    (r"ssm/conv/w", (None, "ff")),
+    # RG-LRU
+    (r"rec/w_(x|gate)/w", (None, "ff")),
+    (r"rec/w_out/w", ("ff", None)),
+    (r"rec/(a_param|a_gate|x_gate)", ("ff",)) ,
+    (r"rec/conv/w", (None, "ff")),
+    # norms / biases / scalars: replicate
+    (r".*", None),
+)
+
+_LOGICAL_FALLBACK = {
+    "heads_flat": ("model",),
+    "kv_flat": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "state_heads": ("model",),
+}
+
+
+def _resolve_logical(name: Optional[str], sharder: Sharder) -> Optional[Tuple[str, ...]]:
+    if name is None:
+        return None
+    if name in sharder.rules:
+        return sharder.rules[name]
+    return _LOGICAL_FALLBACK.get(name)
+
+
+def param_specs(params, sharder: Sharder):
+    """PartitionSpec pytree for a params pytree (TP/EP on the model axis)."""
+
+    def spec_for(path: str, shape: Tuple[int, ...]) -> P:
+        for pattern, logical in PARAM_RULES:
+            if re.search(pattern, path):
+                if logical is None:
+                    return P()
+                # Right-align logical names to trailing dims (stacked layer
+                # dims on the left stay unsharded).
+                names: list = [None] * len(shape)
+                for off, nm in enumerate(reversed(logical)):
+                    idx = len(shape) - 1 - off
+                    if idx < 0:
+                        continue
+                    mesh_axes = _resolve_logical(nm, sharder)
+                    if mesh_axes is None:
+                        continue
+                    total = 1
+                    for a in mesh_axes:
+                        total *= sharder.axis_sizes.get(a, 1)
+                    if shape[idx] % total == 0 and total > 1:
+                        names[idx] = mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+                return P(*names)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        path_str = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        specs.append(spec_for(path_str, leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_specs(param_spec_tree, sharder: Sharder):
+    """Optimizer-state specs: params' TP sharding + ZeRO-1 over 'data'.
+
+    Each m/v leaf adds the data axis on the first dimension the param spec
+    leaves unsharded and whose size divides the data-axis size.
+    """
+    data_axes = tuple(a for a in ("data",) if a in sharder.axis_sizes)
+    if not data_axes:
+        return param_spec_tree
+
+    def add_data(spec: P, shape: Tuple[int, ...]) -> P:
+        names = list(spec) + [None] * (len(shape) - len(spec))
+        dsize = sharder.axis_sizes["data"]
+        for i, (nm, dim) in enumerate(zip(names, shape)):
+            if nm is None and dim % dsize == 0 and dim >= dsize:
+                names[i] = "data"
+                return P(*names)
+        return P(*names)
+
+    # We need shapes: caller zips specs with params via tree_map.
+    return add_data  # used via tree_map(lambda spec, p: add_data(spec, p.shape))
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

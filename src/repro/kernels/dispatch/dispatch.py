@@ -1,0 +1,54 @@
+"""MoE dispatch gather — the EHJ radix-partition analogue in Pallas.
+
+After the merge-sort kernel orders assignments by expert (the paper's radix
+partitioning), moving token rows into per-expert contiguous buffers is a pure
+gather.  The kernel below is that gather: the row index vector is a
+scalar-prefetch operand consumed by the BlockSpec index_map, so each grid
+step DMAs exactly one source row-block HBM->VMEM->HBM — one transfer round
+per block, with Pallas double-buffering adjacent steps (§IV-E prefetch).
+
+Staging-pool sizing (how many rows per all-to-all round when experts live on
+other chips) comes from ``core.planner.plan_dispatch`` (Property 6 waterfill).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def gather_rows(x: jnp.ndarray, idx: jnp.ndarray, rows_per_block: int = 1,
+                interpret: bool = True) -> jnp.ndarray:
+    """out[i] = x[idx[i]] with blocked row DMA.
+
+    idx must have length divisible by rows_per_block and contiguous runs when
+    rows_per_block > 1 (the sorted-dispatch property); rows_per_block=1 is
+    always correct.
+    """
+    t, d = x.shape
+    n = idx.shape[0]
+    assert n % rows_per_block == 0
+    grid = (n // rows_per_block,)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((rows_per_block, d),
+                             lambda i, idx_ref: (idx_ref[i * rows_per_block]
+                                                 // rows_per_block
+                                                 if rows_per_block > 1
+                                                 else idx_ref[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((rows_per_block, d), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(idx, x)

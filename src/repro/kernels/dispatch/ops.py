@@ -1,0 +1,57 @@
+"""Jitted MoE dispatch/combine built on the sort + gather kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch.dispatch import gather_rows
+from repro.kernels.merge_sort.ops import argsort_by_key
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "capacity", "interpret"))
+def remop_dispatch(x: jnp.ndarray, expert_ids: jnp.ndarray, n_experts: int,
+                   capacity: int, interpret: bool = True):
+    """Partition assignment rows into per-expert buffers (EHJ build phase).
+
+    x: [A, d] rows (token features repeated per expert choice);
+    expert_ids: [A].  Returns (expert_in [E, C, d], slot [A]).
+    """
+    a, d = x.shape
+    order = argsort_by_key(expert_ids, interpret=interpret)  # expert-major, stable
+    sorted_ids = expert_ids[order]
+    # Rank within expert among sorted assignments.
+    counts = jnp.bincount(expert_ids, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(a, dtype=jnp.int32) - starts[sorted_ids]
+    keep = rank < capacity
+    # Destination-driven gather: for dest slot (e, c) the source row is
+    # order[starts[e] + c] when c < counts[e].
+    e_idx = jnp.repeat(jnp.arange(n_experts, dtype=jnp.int32), capacity)
+    c_idx = jnp.tile(jnp.arange(capacity, dtype=jnp.int32), n_experts)
+    valid = c_idx < counts[e_idx]
+    src = jnp.where(valid, starts[e_idx] + c_idx, 0)
+    src_rows = jnp.where(valid, order[src], 0)
+    gathered = gather_rows(x, src_rows.astype(jnp.int32), interpret=interpret)
+    gathered = jnp.where(valid[:, None], gathered, 0)
+    expert_in = gathered.reshape(n_experts, capacity, d)
+    # Slot per assignment (for combine): e*C + rank, -1 when dropped.
+    slot_sorted = jnp.where(keep, sorted_ids * capacity + rank, -1)
+    slot = jnp.zeros((a,), jnp.int32).at[order].set(slot_sorted)
+    return expert_in, slot
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "interpret"))
+def remop_combine(expert_out: jnp.ndarray, slot: jnp.ndarray,
+                  weights: jnp.ndarray, top_k: int, interpret: bool = True):
+    """Gather expert outputs back to token order and weight-sum over top-k."""
+    e, c, d = expert_out.shape
+    a = slot.shape[0]
+    flat = expert_out.reshape(e * c, d)
+    rows = gather_rows(flat, jnp.maximum(slot, 0).astype(jnp.int32),
+                       interpret=interpret)
+    rows = jnp.where(slot[:, None] >= 0, rows, 0)
+    rows = rows * weights[:, None].astype(rows.dtype)
+    return rows.reshape(a // top_k, top_k, d).sum(axis=1)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for MoE token dispatch/combine."""
+
+import jax
+import jax.numpy as jnp
+
+
+def dispatch_ref(x: jnp.ndarray, expert_ids: jnp.ndarray, n_experts: int,
+                 capacity: int):
+    """x: [A, d] assignment-expanded rows; expert_ids: [A].
+
+    Returns (expert_in [E, C, d], slot [A] (-1 if dropped)) with tokens placed
+    in assignment order per expert (stable), dropped beyond capacity.
+    """
+    a = x.shape[0]
+    one_hot = jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(one_hot, axis=0) - 1
+    pos_in_e = jnp.take_along_axis(pos, expert_ids[:, None], axis=1)[:, 0]
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, expert_ids * capacity + pos_in_e, -1)
+    flat = jnp.zeros((n_experts * capacity, x.shape[1]), x.dtype)
+    flat = flat.at[jnp.where(keep, slot, 0)].add(
+        jnp.where(keep[:, None], x, 0)
+    )
+    return flat.reshape(n_experts, capacity, x.shape[1]), slot
+
+
+def combine_ref(expert_out: jnp.ndarray, slot: jnp.ndarray,
+                weights: jnp.ndarray, n_tokens: int, top_k: int):
+    """expert_out: [E, C, d]; slot: [A]; weights: [A] -> y [T, d]."""
+    e, c, d = expert_out.shape
+    flat = expert_out.reshape(e * c, d)
+    rows = jnp.where(slot[:, None] >= 0, flat[jnp.maximum(slot, 0)], 0)
+    rows = rows * weights[:, None].astype(rows.dtype)
+    return rows.reshape(n_tokens, top_k, d).sum(axis=1)

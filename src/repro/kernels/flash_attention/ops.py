@@ -1,0 +1,50 @@
+"""Jitted flash-attention wrapper with REMOP block planning."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import TPU_V5E
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def plan_blocks(s: int, t: int, hd: int, dtype_bytes: int = 2,
+                vmem_budget: int | None = None) -> tuple[int, int]:
+    """(bq, bk) minimizing DMA rounds under the VMEM budget (BNLJ split).
+
+    Working set per grid step ~ 2*(bq + 2*bk)*hd*dtype (double-buffered
+    q + k + v) + bq*hd*4 (acc).  Rounds ~ (S/bq)*(T/bk)/2 (causal skip), so
+    the L-optimal split is near-equal bq:bk — Property 4 with tau >> R_in.
+    """
+    vmem_budget = vmem_budget or (TPU_V5E.vmem_bytes // 4)
+    best = (128, 128)
+    best_rounds = float("inf")
+    for bq in (128, 256, 512, 1024):
+        if s % bq:
+            continue
+        for bk in (128, 256, 512, 1024):
+            if t % bk:
+                continue
+            vmem = 2 * (bq + 2 * bk) * hd * dtype_bytes + bq * hd * 4
+            if vmem > vmem_budget:
+                continue
+            rounds = (s / bq) * (t / bk)
+            if rounds < best_rounds:
+                best_rounds = rounds
+                best = (bq, bk)
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def remop_flash_attention(q, k, v, bq: int | None = None, bk: int | None = None,
+                          interpret: bool = True):
+    b, h, s, hd = q.shape
+    t = k.shape[2]
+    if bq is None or bk is None:
+        pbq, pbk = plan_blocks(s, t, hd, q.dtype.itemsize)
+        bq, bk = bq or min(pbq, s), bk or min(pbk, t)
+    bq, bk = min(bq, s), min(bk, t)
+    return flash_attention(q, k, v, bq=bq, bk=bk, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for causal flash attention (prefill)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v):
+    """q: [B, H, S, hd]; k/v: [B, KV, T, hd]; causal (q pos offset = T - S)."""
+    b, h, s, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    t = k.shape[2]
+    qg = q.reshape(b, kv, g, s, hd)
+    scores = jnp.einsum("bkgsh,bkth->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(s) + (t - s)
+    mask = q_pos[:, None] >= jnp.arange(t)[None, :]
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)

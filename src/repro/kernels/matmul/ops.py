@@ -1,0 +1,49 @@
+"""Jitted wrapper: REMOP-planned blocked matmul with padding + policy."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import TPU_V5E
+from repro.core.planner import MatmulTilePlan, conventional_matmul_tiles, plan_matmul_tiles
+from repro.kernels.matmul.matmul import matmul_pallas
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def plan_for(a_shape, b_shape, dtype=jnp.bfloat16, policy: str = "remop",
+             vmem_budget: int | None = None) -> MatmulTilePlan:
+    m, k = a_shape
+    _, n = b_shape
+    in_bytes = jnp.dtype(dtype).itemsize
+    if policy == "conventional":
+        return conventional_matmul_tiles(m, n, k, in_bytes=in_bytes,
+                                         vmem_budget=vmem_budget)
+    return plan_matmul_tiles(m, n, k, in_bytes=in_bytes,
+                             vmem_budget=vmem_budget,
+                             exhaustive=(policy == "remop"))
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "interpret", "out_dtype"))
+def remop_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: str = "remop",
+                 interpret: bool = True, out_dtype=None) -> jnp.ndarray:
+    """Blocked matmul with REMOP-planned tiles (pads to tile multiples)."""
+    m, k = a.shape
+    _, n = b.shape
+    plan = plan_for(a.shape, b.shape, a.dtype, policy)
+    bm, bn, bk = (min(plan.bm, m) or 8, min(plan.bn, n) or 128, min(plan.bk, k) or 128)
+    # Clamp to padded problem dims.
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    out = matmul_pallas(ap, bp, bm, bn, bk,
+                        out_dtype=out_dtype or a.dtype, interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,132 @@
+"""Blocked bitonic merge sort — the EMS analogue as Pallas TPU kernels.
+
+Structure mirrors external merge sort (§III-B):
+  * run formation: each VMEM-sized block is sorted in-core by a bitonic
+    network (`sort_blocks`) — one grid step = one HBM->VMEM->HBM round trip;
+  * merge passes: adjacent sorted runs are merged pairwise by a bitonic
+    merge ladder (`merge_pass`) until one run remains.
+
+Hardware adaptation (DESIGN.md §7): the paper's tournament tree is
+data-dependent and does not vectorize on the VPU; the bitonic ladder has a
+fixed dataflow built entirely from power-of-two reshapes + min/max (lane
+shuffles on TPU — no gathers).  A logical fan-in-k merge pass is log2(k)
+pairwise ladders; ``core.planner.plan_sort`` picks k from Table IV with tau
+calibrated to DMA overhead, trading pass count (volume D) against per-pass
+rounds (C) exactly as the paper does.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cmp_exchange(keys, values, j: int, dirs):
+    """One compare-exchange stage at distance 2^j with per-group directions."""
+    n = keys.shape[-1]
+    d = 1 << j
+    g = n // (2 * d)
+    kr = keys.reshape(g, 2, d)
+    lo = jnp.minimum(kr[:, 0], kr[:, 1])
+    hi = jnp.maximum(kr[:, 0], kr[:, 1])
+    swap = dirs[:, None]
+    k0 = jnp.where(swap, hi, lo)
+    k1 = jnp.where(swap, lo, hi)
+    if values is None:
+        return jnp.stack([k0, k1], 1).reshape(n), None
+    vr = values.reshape(g, 2, d)
+    take_lo_first = (kr[:, 0] <= kr[:, 1])  # where first already holds lo
+    v_lo = jnp.where(take_lo_first, vr[:, 0], vr[:, 1])
+    v_hi = jnp.where(take_lo_first, vr[:, 1], vr[:, 0])
+    v0 = jnp.where(swap, v_hi, v_lo)
+    v1 = jnp.where(swap, v_lo, v_hi)
+    return (jnp.stack([k0, k1], 1).reshape(n),
+            jnp.stack([v0, v1], 1).reshape(n))
+
+
+def _bitonic_sort(keys, values=None):
+    """Full ascending bitonic sort of a 2^m-length vector."""
+    n = keys.shape[-1]
+    m = n.bit_length() - 1
+    for k in range(1, m + 1):
+        for j in range(k - 1, -1, -1):
+            d = 1 << j
+            g = n // (2 * d)
+            dirs = ((jnp.arange(g) >> (k - 1 - j)) & 1).astype(bool)
+            keys, values = _cmp_exchange(keys, values, j, dirs)
+    return keys, values
+
+
+def _bitonic_merge(keys, values=None):
+    """Merge a bitonic vector (asc run ++ desc run) into ascending order."""
+    n = keys.shape[-1]
+    m = n.bit_length() - 1
+    for j in range(m - 1, -1, -1):
+        g = n // (2 << j)
+        dirs = jnp.zeros((g,), bool)  # all ascending
+        keys, values = _cmp_exchange(keys, values, j, dirs)
+    return keys, values
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def _sort_block_kernel(k_ref, v_ref, ko_ref, vo_ref):
+    keys, values = _bitonic_sort(k_ref[...], v_ref[...])
+    ko_ref[...] = keys
+    vo_ref[...] = values
+
+
+def _merge_pair_kernel(k_ref, v_ref, ko_ref, vo_ref):
+    n = k_ref.shape[-1]
+    keys = k_ref[...]
+    values = v_ref[...]
+    # Reverse the second run -> bitonic sequence, then merge.
+    half = n // 2
+    keys = jnp.concatenate([keys[:half], keys[half:][::-1]])
+    values = jnp.concatenate([values[:half], values[half:][::-1]])
+    keys, values = _bitonic_merge(keys, values)
+    ko_ref[...] = keys
+    vo_ref[...] = values
+
+
+def sort_blocks(keys, values, block: int, interpret: bool = True):
+    """Sort each `block`-length run in-core. len(keys) % block == 0, block=2^m."""
+    n = keys.shape[0]
+    assert n % block == 0 and block & (block - 1) == 0
+    grid = (n // block,)
+    return pl.pallas_call(
+        _sort_block_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(keys.shape, keys.dtype),
+                   jax.ShapeDtypeStruct(values.shape, values.dtype)],
+        interpret=interpret,
+    )(keys, values)
+
+
+def merge_pass(keys, values, run: int, interpret: bool = True):
+    """One pairwise merge pass: adjacent runs of length `run` -> length 2*run."""
+    n = keys.shape[0]
+    assert n % (2 * run) == 0
+    grid = (n // (2 * run),)
+    return pl.pallas_call(
+        _merge_pair_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((2 * run,), lambda i: (i,)),
+                  pl.BlockSpec((2 * run,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((2 * run,), lambda i: (i,)),
+                   pl.BlockSpec((2 * run,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(keys.shape, keys.dtype),
+                   jax.ShapeDtypeStruct(values.shape, values.dtype)],
+        interpret=interpret,
+    )(keys, values)

@@ -1,0 +1,60 @@
+"""Jitted wrapper: full external merge sort with REMOP-planned runs/fan-in."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import SortPlan, plan_sort
+from repro.kernels.merge_sort.merge_sort import merge_pass, sort_blocks
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("run_items", "interpret"))
+def remop_sort(keys: jnp.ndarray, values: jnp.ndarray | None = None,
+               run_items: int | None = None, interpret: bool = True):
+    """Sort (keys[, values]) ascending via blocked bitonic merge sort.
+
+    `run_items` (power of two) is the in-core run size; defaults to the
+    REMOP sort plan's run for the key dtype.
+    """
+    n = keys.shape[0]
+    if values is None:
+        values = jnp.arange(n, dtype=jnp.int32)
+    if run_items is None:
+        plan = plan_sort(n, item_bytes=keys.dtype.itemsize + 4)
+        run_items = min(_next_pow2(plan.run_items), 1 << 14)
+    run_items = max(2, min(_next_pow2(run_items), _next_pow2(n)))
+    n_pad = max(_next_pow2(n), run_items)
+    if keys.dtype.kind == "f":
+        sentinel = jnp.array(jnp.inf, keys.dtype)
+    else:
+        sentinel = jnp.array(jnp.iinfo(keys.dtype).max, keys.dtype)
+    kp = jnp.full((n_pad,), sentinel, keys.dtype).at[:n].set(keys)
+    vp = jnp.zeros((n_pad,), values.dtype).at[:n].set(values)
+
+    kp, vp = sort_blocks(kp, vp, min(run_items, n_pad), interpret=interpret)
+    run = min(run_items, n_pad)
+    while run < n_pad:
+        kp, vp = merge_pass(kp, vp, run, interpret=interpret)
+        run *= 2
+    return kp[:n], vp[:n]
+
+
+def argsort_by_key(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Stable argsort via unique composite keys (key-major, index-minor).
+
+    Requires max(keys) * n + n < 2^31 (int32 composite) — always true for the
+    MoE use (expert ids are small); asserted at trace time via shapes only.
+    """
+    n = keys.shape[0]
+    composite = keys.astype(jnp.int32) * jnp.int32(n) + jnp.arange(n, dtype=jnp.int32)
+    _, idx = remop_sort(composite, jnp.arange(n, dtype=jnp.int32),
+                        interpret=interpret)
+    return idx

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the blocked merge sort."""
+
+import jax.numpy as jnp
+
+
+def sort_ref(keys: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sort(keys)
+
+
+def sort_pairs_ref(keys: jnp.ndarray, values: jnp.ndarray):
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], values[order]

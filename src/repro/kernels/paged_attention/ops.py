@@ -1,0 +1,35 @@
+"""Jitted paged-attention wrapper with REMOP page planning."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import plan_kv_pages
+from repro.kernels.paged_attention.paged_attention import paged_attention
+
+
+def planned_page(context_len: int, kv_heads: int, head_dim: int,
+                 kv_bytes: int = 2) -> int:
+    plan = plan_kv_pages(context_len, kv_heads, head_dim, kv_bytes)
+    return plan.page_tokens
+
+
+@functools.partial(jax.jit, static_argnames=("page", "interpret"))
+def remop_paged_attention(q, k_cache, v_cache, lengths, page: int | None = None,
+                          interpret: bool = True):
+    """Decode attention over an HBM-paged KV cache.
+
+    q: [B, KV, G, hd]; caches [B, S, KV, hd]; lengths [B].
+    Pads S to a page multiple (masked by lengths).
+    """
+    b, s, kv, hd = k_cache.shape
+    page = page or min(s, 128)
+    pad = (-s) % page
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return paged_attention(q, k_cache, v_cache, lengths.astype(jnp.int32),
+                           page=page, interpret=interpret)

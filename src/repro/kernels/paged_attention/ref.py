@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B, KV, G, hd]; k/v_cache: [B, S, KV, hd]; lengths: [B] -> [B, KV, G, hd]."""
+    b, s, kv, hd = k_cache.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32)).astype(q.dtype)

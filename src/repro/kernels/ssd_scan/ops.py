@@ -1,0 +1,14 @@
+"""Jitted wrapper for the SSD inter-chunk scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def remop_ssd_scan(states, decays, interpret: bool = True):
+    return ssd_scan(states, decays, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD inter-chunk state scan."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(states: jnp.ndarray, decays: jnp.ndarray,
+                 initial: jnp.ndarray | None = None):
+    """Exclusive scan of the SSD inter-chunk recurrence.
+
+    states: [B, NC, H, P, N] chunk-local states; decays: [B, NC, H].
+    Returns (prev_states [B, NC, H, P, N], final_state [B, H, P, N]) where
+    prev_states[:, c] is the carried state ENTERING chunk c:
+        carry_{c+1} = carry_c * decays[:, c] + states[:, c].
+    """
+    b, nc, h, p, n = states.shape
+    s0 = (jnp.zeros((b, h, p, n), states.dtype) if initial is None
+          else initial.astype(states.dtype))
+
+    def step(carry, xs):
+        st, dec = xs
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   decays.transpose(1, 0, 2)))
+    return prev.transpose(1, 0, 2, 3, 4), final

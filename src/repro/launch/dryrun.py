@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init) — task §MULTI-POD DRY-RUN step 0.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, shape_applicable  # noqa: E402
+from repro.core.roofline import report_from_compiled  # noqa: E402
+from repro.distributed.sharding import Sharder  # noqa: E402
+from repro.launch import specs as specs_lib  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _param_counts(cfg):
+    import numpy as np
+
+    shapes = jax.eval_shape(lambda k: tf.init_params(k, cfg), jax.random.key(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    embed = int(np.prod(shapes["embed"]["table"].shape))
+    if cfg.n_experts:
+        expert = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            names = "/".join(str(getattr(k, "key", k)) for k in path)
+            if "experts" in names:
+                expert += int(np.prod(leaf.shape))
+        active = total - expert + int(expert * cfg.experts_per_token / cfg.n_experts)
+    else:
+        active = total
+    return total, active, embed
+
+
+def model_flops(cfg, shape, n_active: int, n_embed: int) -> float:
+    """MODEL_FLOPS per task spec: 6*N*D train / 2*N*D inference (N excl. embed)."""
+    n = max(n_active - n_embed, 1)
+    d = shape.tokens_per_step
+    return (6.0 if shape.kind == "train" else 2.0) * n * d
+
+
+def _probe_cfgs(cfg):
+    """(probe1, probe2, n_groups, frac_remainder) for depth extrapolation."""
+    if cfg.family == "hybrid" and cfg.block_pattern:
+        pat = len(cfg.block_pattern)
+        groups, rem = divmod(cfg.n_layers, pat)
+        return (dataclasses.replace(cfg, n_layers=pat),
+                dataclasses.replace(cfg, n_layers=2 * pat),
+                groups, rem / pat)
+    if cfg.n_encoder_layers:
+        assert cfg.n_encoder_layers == cfg.n_layers
+        return (dataclasses.replace(cfg, n_layers=1, n_encoder_layers=1),
+                dataclasses.replace(cfg, n_layers=2, n_encoder_layers=2),
+                cfg.n_layers, 0.0)
+    base = cfg.first_k_dense
+    return (dataclasses.replace(cfg, n_layers=base + 1),
+            dataclasses.replace(cfg, n_layers=base + 2),
+            cfg.n_layers - base, 0.0)
+
+
+def _lower_step(cfg, shape, mesh, sharder, microbatches):
+    """Build and lower the step for a cell; returns the Lowered object."""
+    if shape.kind == "train":
+        import jax.numpy as _jnp
+        pdt = _jnp.bfloat16 if getattr(_lower_step, "_bf16", False) else None
+        state_struct = steps_lib.state_struct(cfg, param_dtype=pdt)
+        st_shard = steps_lib.state_shardings(state_struct["params"], mesh, sharder)
+        batch = specs_lib.batch_specs(cfg, shape)
+        b_shard = specs_lib.batch_shardings(sharder, batch)
+        step_fn = steps_lib.make_train_step(cfg, AdamWConfig(), sharder,
+                                            microbatches=microbatches)
+        return jax.jit(step_fn, in_shardings=(st_shard, b_shard),
+                       donate_argnums=0).lower(state_struct, batch)
+    import repro.distributed.sharding as shlib
+    params_struct = steps_lib.state_struct(cfg)["params"]
+    p_shard = shlib.named_sharding_tree(
+        shlib.param_specs(params_struct, sharder), mesh)
+    if shape.kind == "prefill":
+        batch = specs_lib.batch_specs(cfg, shape)
+        b_shard = specs_lib.batch_shardings(sharder, batch)
+        step_fn = steps_lib.make_prefill_step(cfg, sharder)
+        return jax.jit(step_fn, in_shardings=(p_shard, b_shard)).lower(
+            params_struct, batch)
+    caches, token, pos = specs_lib.decode_specs(cfg, shape)
+    c_shard = specs_lib.cache_shardings(cfg, sharder, caches)
+    t_shard = sharder.sharding(["batch"], token.shape)
+    pos_shard = sharder.sharding([], ())
+    step_fn = steps_lib.make_decode_step(cfg, sharder)
+    return jax.jit(step_fn,
+                   in_shardings=(p_shard, c_shard, t_shard, pos_shard),
+                   donate_argnums=1).lower(params_struct, caches, token, pos)
+
+
+def _probe_extrapolate(cfg, shape, mesh, sharder, microbatches):
+    """Unrolled shallow probes -> true per-device flops/bytes/collectives.
+
+    cost_analysis counts a scan (while) body once regardless of trip count,
+    so the full scanned module under-reports; we compile two UNROLLED shallow
+    variants and extrapolate linearly in depth:
+        F(total) ~ F(probe1) + (groups - 1 + frac_rem) * (F(probe2) - F(probe1)).
+    """
+    from repro.core import roofline as rl
+
+    p1, p2, groups, frac_rem = _probe_cfgs(cfg)
+    tf.set_unroll(True)
+    try:
+        vals = []
+        for pc in (p1, p2):
+            compiled = _lower_step(pc, shape, mesh, sharder, microbatches).compile()
+            ca = compiled.cost_analysis() or {}
+            ops = rl.parse_hlo_collectives(compiled.as_text())
+            vals.append({
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll_operand": float(sum(o.operand_bytes for o in ops)),
+                "coll_wire": float(sum(o.wire_bytes for o in ops)),
+            })
+    finally:
+        tf.set_unroll(False)
+    scale = groups - 1 + frac_rem
+    return {k: vals[0][k] + scale * (vals[1][k] - vals[0][k]) for k in vals[0]}
+
+
+VARIANTS = {
+    # name: (sharder-rule overrides, sequence_parallel, microbatches, remat)
+    "baseline": ({}, True, 1, None),
+    "no_sp": ({}, False, 1, None),
+    # Use the model axis as extra data parallelism (weights replicated):
+    # right call when activations dwarf the weight shards (small archs).
+    # batch on (data, model) = 256-way; on the multi-pod mesh the pod axis
+    # replicates weights (hierarchical DP) — batch 256 is not divisible by
+    # 512, and an indivisible rule would silently replicate the batch.
+    "dp_only": ({"batch": ("data", "model"), "heads": None,
+                 "kv_heads": None, "ff": None, "vocab": None, "expert": None,
+                 "state": None, "heads_flat": None, "kv_flat": None,
+                 "state_heads": None}, False, 1, None),
+    # Half TP pressure: batch additionally on model is not expressible on a
+    # fixed axis; instead drop SP and keep TP (activations batch-only).
+    "kv_seq": ({"kv_seq": ("model",)}, True, 1, None),
+    "mb4": ({}, True, 4, None),
+    "remat_dots": ({}, True, 1, "dots"),
+    # Manual expert-parallel MoE (shard_map): local experts + f32 psum combine
+    # instead of GSPMD's expert-dim regathering.  SP off (the MoE block is
+    # batch-local; SP re-gathers fight the shard_map boundary).
+    "moe_ep": ({}, False, 1, None),
+    # dp_only + gradient accumulation: activation footprint / 4.
+    "dp_mb4": ({"batch": ("data", "model"), "heads": None,
+                "kv_heads": None, "ff": None, "vocab": None, "expert": None,
+                "state": None, "heads_flat": None, "kv_flat": None,
+                "state_heads": None}, False, 4, None),
+    # EP experts (shard_map) + replicated non-expert weights (pure DP for
+    # attention/dense): kills the TP/SP activation collectives, keeps the
+    # 14.4B expert bank sharded.
+    "moe_ep_dp": ({"batch": ("data", "model"), "heads": None,
+                   "kv_heads": None, "ff": None, "vocab": None,
+                   "state": None, "heads_flat": None, "kv_flat": None,
+                   "state_heads": None}, False, 1, None),
+    # dp_only with bf16 params (f32 m/v retain master precision in Adam).
+    "dp_bf16": ({"batch": ("data", "model"), "heads": None,
+                 "kv_heads": None, "ff": None, "vocab": None, "expert": None,
+                 "state": None, "heads_flat": None, "kv_flat": None,
+                 "state_heads": None}, False, 1, None),
+    # int8 KV cache (decode): halves cache residency + read bandwidth.
+    "kv_int8": ({}, True, 1, None),
+    # kv_seq + int8: sharded-KV flash decoding over a quantized cache.
+    "kv_seq_int8": ({"kv_seq": ("model",)}, True, 1, None),
+    # moe_ep_dp + 4-way gradient accumulation (activation footprint / 4).
+    "moe_ep_dp_mb4": ({"batch": ("data", "model"), "heads": None,
+                       "kv_heads": None, "ff": None, "vocab": None,
+                       "state": None, "heads_flat": None, "kv_flat": None,
+                       "state_heads": None}, False, 4, None),
+}
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                microbatches: int = 1, sp: bool = True,
+                variant: str = "baseline") -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "skipped", "reason": why}
+
+    rules, v_sp, v_mb, v_remat = VARIANTS[variant]
+    if variant != "baseline":
+        sp = v_sp
+        microbatches = max(microbatches, v_mb)
+    _lower_step._bf16 = (variant == "dp_bf16")
+    tf.set_remat_policy(v_remat)
+    from repro.models import moe as moe_mod
+    moe_mod.set_moe_impl(
+        "ep_shard_map" if variant.startswith("moe_ep") else "gspmd")
+    from repro.models import attention as attn_mod
+    attn_mod.set_kv_quant(variant in ("kv_int8", "kv_seq_int8"))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    sharder = Sharder(mesh, rules=rules, sequence_parallel=sp)
+    n_total, n_active, n_embed = _param_counts(cfg)
+    mf = model_flops(cfg, shape, n_active, n_embed)
+
+    t0 = time.time()
+    lowered = _lower_step(cfg, shape, mesh, sharder, microbatches)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    report = report_from_compiled(
+        f"{arch}/{shape_name}", compiled, chips=chips, model_flops=mf)
+    report.resident_bytes_per_device = float(
+        mem.argument_size_in_bytes + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes)
+    # Depth-extrapolated true totals (scan bodies are counted once by XLA).
+    probe_err = None
+    try:
+        probe = _probe_extrapolate(cfg, shape, mesh, sharder, microbatches)
+        report.flops_per_device = probe["flops"]
+        report.hbm_bytes_per_device = probe["bytes"]
+        report.collective_operand_bytes = probe["coll_operand"]
+        report.collective_wire_bytes = probe["coll_wire"]
+    except Exception as e:
+        probe_err = repr(e)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "variant": variant,
+        "status": "ok",
+        "chips": chips,
+        "kind": shape.kind,
+        "params_total": n_total,
+        "params_active": n_active,
+        "params_embed": n_embed,
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+            "peak_bytes_estimate": int(mem.argument_size_in_bytes
+                                       + mem.temp_size_in_bytes),
+        },
+        "roofline": report.to_dict(),
+        "probe_error": probe_err,
+    }
+    return result
+
+
+def cell_path(arch, shape_name, multi_pod, out_dir, variant="baseline"):
+    mesh = "multi" if multi_pod else "single"
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return os.path.join(out_dir, f"{arch}__{shape_name}__{mesh}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pending cell in subprocesses (serial)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence parallelism (ablation)")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s, mp)
+                 for a in sorted(ARCHS)
+                 for s in SHAPES
+                 for mp in (False, True)]
+        for a, s, mp in cells:
+            path = cell_path(a, s, mp, args.out)
+            if os.path.exists(path) and not args.force:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--out", args.out]
+            if mp:
+                cmd.append("--multi-pod")
+            print(f"[dryrun] {a} x {s} x {'multi' if mp else 'single'}",
+                  flush=True)
+            subprocess.run(cmd, check=False)
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    path = cell_path(args.arch, args.shape, args.multi_pod, args.out,
+                     args.variant)
+    if os.path.exists(path) and not args.force:
+        print(f"cached: {path}")
+        return
+    try:
+        result = dryrun_cell(args.arch, args.shape, args.multi_pod,
+                             microbatches=args.microbatches, sp=not args.no_sp,
+                             variant=args.variant)
+    except Exception as e:  # record failures — they are bugs to fix
+        result = {"arch": args.arch, "shape": args.shape,
+                  "mesh": "multi_pod" if args.multi_pod else "single_pod",
+                  "status": "error", "error": repr(e),
+                  "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    status = result["status"]
+    print(f"[{status}] {args.arch} x {args.shape} "
+          f"x {'multi' if args.multi_pod else 'single'}")
+    if status == "ok":
+        r = result["roofline"]
+        print(f"  memory/device: {result['memory']['peak_bytes_estimate']/2**30:.2f} GiB; "
+              f"compute {r['compute_seconds']*1e3:.2f} ms, "
+              f"hbm [{r['memory_seconds_lower']*1e3:.2f}, {r['memory_seconds']*1e3:.2f}] ms, "
+              f"ici {r['collective_seconds']*1e3:.2f} ms -> {r['dominant']}")
+    elif status == "error":
+        print(result["traceback"][-1500:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape x mode) cell.
+
+No device allocation happens here: the dry-run lowers against these specs
+(the shannon/kernels pattern — weak-type-correct, shardable).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import Sharder
+from repro.models import transformer as tf
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch structure for one shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        text = s - cfg.frontend_seq
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, text), jnp.int32),
+            "patches": jax.ShapeDtypeStruct((b, cfg.frontend_seq, cfg.frontend_dim),
+                                            jnp.float32),
+        }
+    elif cfg.family == "audio_encdec":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32),
+        }
+    else:
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        specs.pop("targets")
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Any, Any, Any]:
+    """(caches, token, pos) structs for one decode step at full context."""
+    b, s = shape.global_batch, shape.seq_len
+    enc_len = min(s, 4096) if cfg.n_encoder_layers else None
+    caches = tf.cache_struct(cfg, batch=b, seq=s, enc_len=enc_len)
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches, token, pos
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(sharder: Sharder, specs: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, v in specs.items():
+        logical = ["batch"] + [None] * (v.ndim - 1)
+        out[k] = sharder.sharding(logical, v.shape)
+    return out
+
+
+_CACHE_LOGICAL = {
+    "attn": (None, "batch", "kv_seq", "kv_heads", None),
+    "attn_local": (None, "batch", "kv_seq", "kv_heads", None),
+    "moe": (None, "batch", "kv_seq", "kv_heads", None),
+    "mla_c": (None, "batch", "kv_seq", None),
+    "mla_r": (None, "batch", "kv_seq", None),
+    "ssm_conv": (None, "batch", None, "ff"),
+    "ssm_state": (None, "batch", "state", None, None),
+    "rec_conv": (None, "batch", None, "ff"),
+    "rec_h": (None, "batch", "ff"),
+}
+
+
+def cache_shardings(cfg: ModelConfig, sharder: Sharder, caches):
+    """NamedSharding pytree matching a cache_struct pytree."""
+    segs = tf._decoder_segments(cfg)
+
+    def kv_shard(structs, logical_key):
+        return tuple(
+            sharder.sharding(_CACHE_LOGICAL[logical_key], a.shape) for a in structs
+        )
+
+    out = []
+    for seg, seg_cache in zip(segs, caches):
+        seg_out = {}
+        for i, kind in enumerate(seg.kinds):
+            name = f"b{i}_{kind}"
+            c = seg_cache[name]
+            if kind in ("attn", "attn_local", "moe"):
+                key = "attn" if kind == "moe" else kind
+                if len(c) == 4:  # int8-quantized: values + per-token scales
+                    seg_out[name] = tuple(
+                        sharder.sharding(_CACHE_LOGICAL[key], a.shape) for a in c)
+                else:
+                    seg_out[name] = kv_shard(c, key)
+            elif kind in ("mla", "mla_moe"):
+                seg_out[name] = (
+                    sharder.sharding(_CACHE_LOGICAL["mla_c"], c[0].shape),
+                    sharder.sharding(_CACHE_LOGICAL["mla_r"], c[1].shape),
+                )
+            elif kind == "ssm":
+                seg_out[name] = (
+                    sharder.sharding(_CACHE_LOGICAL["ssm_conv"], c[0].shape),
+                    sharder.sharding(_CACHE_LOGICAL["ssm_state"], c[1].shape),
+                )
+            elif kind == "rec":
+                seg_out[name] = (
+                    sharder.sharding(_CACHE_LOGICAL["rec_conv"], c[0].shape),
+                    sharder.sharding(_CACHE_LOGICAL["rec_h"], c[1].shape),
+                )
+            elif kind == "cross":
+                seg_out[name] = {
+                    "self": kv_shard(c["self"], "attn"),
+                    "cross": kv_shard(c["cross"], "attn"),
+                }
+        out.append(seg_out)
+    return out
+
+
+def replicated(sharder: Sharder):
+    return sharder.sharding([], ())

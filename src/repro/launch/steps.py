@@ -1,0 +1,125 @@
+"""Builders for the jitted train / prefill / decode steps with full shardings.
+
+The same builders serve the real drivers (launch/train.py, launch/serve.py)
+and the multi-pod dry-run (launch/dryrun.py) — the dry-run just calls
+``.lower(...).compile()`` on ShapeDtypeStructs instead of executing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as shlib
+from repro.distributed.sharding import Sharder, use_sharder
+from repro.launch import specs as specs_lib
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def state_shardings(params_struct, mesh, sharder: Sharder):
+    """(params, opt m/v with ZeRO-1 over data, step) shardings."""
+    p_specs = shlib.param_specs(params_struct, sharder)
+    p_shard = shlib.named_sharding_tree(p_specs, mesh)
+    add_data = shlib.zero1_specs(p_specs, sharder)
+    if callable(add_data):
+        z_specs = jax.tree.map(lambda s, p: add_data(s, p.shape), p_specs, params_struct)
+    else:
+        z_specs = p_specs
+    z_shard = shlib.named_sharding_tree(z_specs, mesh)
+    step_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return {
+        "params": p_shard,
+        "opt": {"m": z_shard, "v": z_shard},
+        "step": step_shard,
+    }
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, sharder: Sharder,
+                    microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state, batch):
+        with use_sharder(sharder):
+            params = state["params"]
+
+            def loss_of(p, b):
+                return tf.loss_fn(p, cfg, b, remat=True)
+
+            if microbatches == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, batch)
+            else:
+                def split(x):
+                    return x.reshape((microbatches, x.shape[0] // microbatches)
+                                     + x.shape[1:])
+
+                mbs = jax.tree.map(split, batch)
+
+                def acc_fn(carry, mb):
+                    (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                    gsum, lsum = carry
+                    return (jax.tree.map(jnp.add, gsum, g), lsum + l), m
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), metrics = jax.lax.scan(
+                    acc_fn, (g0, jnp.zeros((), jnp.float32)), mbs)
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+                loss = loss / microbatches
+                metrics = jax.tree.map(lambda m: m.mean(), metrics)
+
+            new_params, new_opt, opt_metrics = adamw_update(
+                opt_cfg, params, grads, state["opt"], state["step"])
+            metrics = dict(metrics)
+            metrics.update(opt_metrics)
+            metrics["loss_total"] = loss
+            return {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, sharder: Sharder):
+    def prefill_step(params, batch):
+        with use_sharder(sharder):
+            logits, caches = tf.prefill(params, cfg, batch)
+            return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, sharder: Sharder, greedy: bool = True):
+    def decode_step(params, caches, token, pos):
+        with use_sharder(sharder):
+            logits, caches = tf.decode_step(params, cfg, caches, token, pos)
+            next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_token, logits, caches
+
+    return decode_step
+
+
+def init_state(cfg: ModelConfig, key, param_dtype=None) -> Dict[str, Any]:
+    params = tf.init_params(key, cfg)
+    if param_dtype is not None:
+        # bf16 "master-light" mode: adamw keeps f32 m/v (the effective master
+        # precision) and casts p through f32 for the update.
+        params = jax.tree.map(
+            lambda p: p.astype(param_dtype) if p.dtype == jnp.float32 else p,
+            params)
+    opt = init_opt_state(jax.tree.map(lambda p: p.astype(jnp.float32), params))
+    return {"params": params,
+            "opt": opt,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_struct(cfg: ModelConfig, param_dtype=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree of the train state (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_state(cfg, jax.random.key(0), param_dtype))

@@ -1,0 +1,96 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen3-0.6b --reduced``.
+
+On this CPU container use ``--reduced`` (tiny same-family config); on a real
+pod the same driver builds the production mesh and full config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, reduced
+from repro.configs.base import ShapeSpec
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import PrefetchingLoader, synthetic_batches
+from repro.distributed.sharding import Sharder
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_mesh_for, make_production_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import LoopConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--reduced-overrides", default="",
+                    help="k=v,k=v overrides for the reduced config")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        overrides = {}
+        for kv in filter(None, args.reduced_overrides.split(",")):
+            k, v = kv.split("=")
+            overrides[k] = type(getattr(cfg, k))(v)
+        cfg = reduced(cfg, **overrides)
+    shape = ShapeSpec("cli", seq_len=args.seq_len, global_batch=args.global_batch,
+                      kind="train")
+
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_mesh_for(len(jax.devices()))
+    sharder = Sharder(mesh, sequence_parallel=mesh.devices.size > 1)
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1))
+    step_fn = steps_lib.make_train_step(cfg, opt_cfg, sharder,
+                                        microbatches=args.microbatches)
+    state = steps_lib.init_state(cfg, jax.random.key(args.seed))
+    st_shard = steps_lib.state_shardings(state["params"], mesh, sharder)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, st_shard)
+    jitted = jax.jit(step_fn, in_shardings=(st_shard, None),
+                 out_shardings=(st_shard, None), donate_argnums=0)
+
+    store = CheckpointStore(args.ckpt_dir) if args.ckpt_dir else None
+    losses = []
+
+    def metrics_cb(step, m):
+        losses.append(float(m["loss_total"]))
+        print(f"step {step}: loss={m['loss_total']:.4f} "
+              f"grad_norm={m['grad_norm']:.3f} lr={m['lr']:.2e}", flush=True)
+
+    def batches(start_step):
+        it = synthetic_batches(cfg, shape, seed=args.seed, start_step=start_step)
+        return PrefetchingLoader(it)
+
+    state = train(
+        jitted, state, batches, store,
+        LoopConfig(total_steps=args.steps,
+                   checkpoint_every=args.checkpoint_every,
+                   log_every=max(args.steps // 20, 1)),
+        state_shardings=st_shard, metrics_cb=metrics_cb)
+    print(f"done at step {int(jax.device_get(state['step']))}; "
+          f"final loss {losses[-1] if losses else float('nan'):.4f}")
+    return state, losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,351 @@
+"""Attention variants: GQA/MQA (optionally windowed, qk-norm) and MLA.
+
+Long sequences stream KV in chunks with an online softmax (the EMS-style
+"merge of sorted runs" becomes a merge of partial softmax statistics); this
+bounds activation memory to O(S * chunk) and is the pure-jnp oracle shape for
+the Pallas flash/paged kernels in ``repro.kernels``.
+
+Decode paths:
+  * GQA: ring/linear KV cache [B, W_or_S, KV, hd], positions tracked modulo
+    the window for local attention.
+  * MLA: compressed cache (c_kv, k_rope) with the absorbed-weight trick —
+    scores and context are computed in the kv_lora space, so the per-step
+    cost is O(S * kv_lora) instead of materializing per-head K/V.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import apply_rope, init_dense, init_rmsnorm, dense, rmsnorm, rope_tables
+
+NEG_INF = -1e30
+_CHUNK_THRESHOLD = 8192
+_KV_CHUNK = 1024
+
+# int8 KV-cache quantization (decode): cache = (k_q, v_q, k_scale, v_scale)
+# with per-(token, head) scales.  Halves cache residency + read bandwidth —
+# the REMOP D-term lever once the round count is already minimal.
+KV_QUANT = False
+
+
+def set_kv_quant(flag: bool) -> None:
+    global KV_QUANT
+    KV_QUANT = flag
+
+
+def quantize_kv(x):
+    """x: [..., hd] -> (int8 values, bf16 scale[..., 1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# shared attention math (grouped heads, causal + window masking)
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, window: int):
+    m = q_pos[..., :, None] >= kv_pos[..., None, :]
+    if window:
+        m &= (q_pos[..., :, None] - kv_pos[..., None, :]) < window
+    return m
+
+
+def full_attention(q, k, v, q_pos, kv_pos, window: int = 0,
+                   softcap: float = 0.0) -> jnp.ndarray:
+    """q: [B,S,KV,G,hd]; k/v: [B,T,KV,hd] -> [B,S,KV,G,hd]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = _mask(q_pos, kv_pos, window)[:, None, None, :, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, window: int = 0,
+                      softcap: float = 0.0, chunk: int = _KV_CHUNK) -> jnp.ndarray:
+    """Online-softmax attention streaming KV in chunks (flash-style oracle).
+
+    K and V may have different head dims (MLA: 192-d keys, 128-d values).
+    """
+    b, s_len, kv_h, g, hd_k = q.shape
+    hd_v = v.shape[-1]
+    t = k.shape[1]
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=10 ** 9)
+    k = k.reshape(b, n_chunks, chunk, kv_h, hd_k).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(b, n_chunks, chunk, kv_h, hd_v).transpose(1, 0, 2, 3, 4)
+    kv_pos = kv_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    scale = 1.0 / math.sqrt(hd_k)
+
+    m0 = jnp.full((b, kv_h, g, s_len), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv_h, g, s_len), jnp.float32)
+    a0 = jnp.zeros((b, s_len, kv_h, g, hd_v), jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs
+        s = jnp.einsum("bskgh,bckh->bkgsc", q, kc).astype(jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = _mask(q_pos, pc, window)[:, None, None, :, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+            "bkgsc,bckh->bskgh", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k, v, kv_pos))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+def grouped_attention(q, k, v, q_pos, kv_pos, window: int = 0,
+                      softcap: float = 0.0) -> jnp.ndarray:
+    if k.shape[1] > _CHUNK_THRESHOLD:
+        return chunked_attention(q, k, v, q_pos, kv_pos, window, softcap)
+    return full_attention(q, k, v, q_pos, kv_pos, window, softcap)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, window: int = 0) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, h * hd),
+        "wk": init_dense(ks[1], d, kv * hd),
+        "wv": init_dense(ks[2], d, kv * hd),
+        "wo": init_dense(ks[3], h * hd, d, scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _gqa_qkv(p: Dict, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["wq"], x).reshape(b, s, h, hd)
+    k = dense(p["wk"], x).reshape(b, s, kv, hd)
+    v = dense(p["wv"], x).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_forward(
+    p: Dict, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray,
+    window: int = 0, mask_pos: Optional[jnp.ndarray] = None,
+    xa: Optional[jnp.ndarray] = None, return_kv: bool = False,
+):
+    """Full-sequence attention; optionally cross-attention over ``xa``.
+
+    ``positions`` drive RoPE; ``mask_pos`` (default = positions) drives the
+    causal mask — decoupling them implements prefix-LM (VLM) and bidirectional
+    (encoder) masking with the same kernel.
+    """
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if xa is None:
+        q, k, v = _gqa_qkv(p, cfg, x, positions)
+        q_pos = kv_pos = positions if mask_pos is None else mask_pos
+    else:  # cross-attention: keys/values from encoder output, no causal mask
+        q = dense(p["wq"], x).reshape(b, s, h, hd)
+        k = dense(p["wk"], xa).reshape(b, xa.shape[1], kv, hd)
+        v = dense(p["wv"], xa).reshape(b, xa.shape[1], kv, hd)
+        q_pos = jnp.full((b, s), 10 ** 9, jnp.int32)
+        kv_pos = jnp.zeros((b, xa.shape[1]), jnp.int32)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    qg = constrain(qg, ("batch", None, "heads", None, None))
+    out = grouped_attention(qg, k, v, q_pos, kv_pos, window, cfg.attn_softcap)
+    out = out.reshape(b, s, h * hd)
+    out = dense(p["wo"], out)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(
+    p: Dict, cfg: ModelConfig, x: jnp.ndarray, cache: Tuple[jnp.ndarray, jnp.ndarray],
+    pos: jnp.ndarray, window: int = 0,
+):
+    """One-token decode with a (possibly ring) KV cache.
+
+    cache: (k, v) of shape [B, Scache, KV, hd]; for windowed attention Scache
+    is the window and writes wrap (ring buffer).  ``pos`` is a scalar step.
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k_t, v_t = _gqa_qkv(p, cfg, x, positions)
+    quantized = len(cache) == 4
+    if quantized:
+        ckq, cvq, cks, cvs = cache
+        s_cache = ckq.shape[1]
+        slot = (pos % s_cache) if window else jnp.minimum(pos, s_cache - 1)
+        kq, ks_t = quantize_kv(k_t)
+        vq, vs_t = quantize_kv(v_t)
+        ckq = jax.lax.dynamic_update_slice(ckq, kq, (0, slot, 0, 0))
+        cvq = jax.lax.dynamic_update_slice(cvq, vq, (0, slot, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cks, ks_t, (0, slot, 0, 0))
+        cvs = jax.lax.dynamic_update_slice(cvs, vs_t, (0, slot, 0, 0))
+        ck = dequantize_kv(ckq, cks, x.dtype)
+        cv = dequantize_kv(cvq, cvs, x.dtype)
+        new_cache = (ckq, cvq, cks, cvs)
+    else:
+        ck, cv = cache
+        s_cache = ck.shape[1]
+        slot = (pos % s_cache) if window else jnp.minimum(pos, s_cache - 1)
+        ck = jax.lax.dynamic_update_slice(ck, k_t.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_t.astype(cv.dtype), (0, slot, 0, 0))
+        new_cache = None
+    idx = jnp.arange(s_cache)
+    if window:
+        slot_pos = pos - ((pos - idx) % s_cache)  # position held by each slot
+        valid = slot_pos >= 0
+        kv_pos = jnp.where(valid, slot_pos, 10 ** 9)  # future => masked
+    else:
+        kv_pos = jnp.where(idx <= pos, idx, 10 ** 9)  # future => masked
+    kv_pos = jnp.broadcast_to(kv_pos[None], (b, s_cache))
+    qg = q.reshape(b, 1, kv, h // kv, hd)
+    out = full_attention(qg, ck, cv, positions, kv_pos, window, cfg.attn_softcap)
+    out = out.reshape(b, 1, h * hd)
+    return dense(p["wo"], out), (new_cache if quantized else (ck, cv))
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int, window: int = 0):
+    # Ring caches are always window-sized (slots = pos % window).
+    s = window if window else seq
+    return (batch, s, cfg.n_kv_heads, cfg.head_dim)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> Dict:
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope_d, v_hd, lora = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_dense(ks[0], d, h * (nope + rope_d)),
+        "w_dkv": init_dense(ks[1], d, lora),
+        "kv_norm": init_rmsnorm(lora),
+        "w_uk": init_dense(ks[2], lora, h * nope),
+        "w_uv": init_dense(ks[3], lora, h * v_hd),
+        "w_kr": init_dense(ks[4], d, rope_d),
+        "wo": init_dense(ks[5], h * v_hd, d, scale=1.0 / math.sqrt(h * v_hd)),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    b, s, _ = x.shape
+    h, nope, rope_d = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q = dense(p["wq"], x).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_tables(positions, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions):
+    c_kv = rmsnorm(p["kv_norm"], dense(p["w_dkv"], x), cfg.norm_eps)
+    k_rope = dense(p["w_kr"], x)[:, :, None, :]  # single shared rope head
+    cos, sin = rope_tables(positions, cfg.rope_head_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray, positions: jnp.ndarray,
+                return_cache: bool = False):
+    b, s, _ = x.shape
+    h, nope, rope_d, v_hd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_ckv(p, cfg, x, positions)
+    k_nope = dense(p["w_uk"], c_kv).reshape(b, s, h, nope)
+    v = dense(p["w_uv"], c_kv).reshape(b, s, h, v_hd)
+    # Pack rope part into the per-head K (shared across heads) and attend.
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope_d))], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qg = q_full.reshape(b, s, h, 1, nope + rope_d)
+    qg = constrain(qg, ("batch", None, "heads", None, None))
+    out = grouped_attention(qg, k_full, v, positions, positions, 0, cfg.attn_softcap)
+    out = out.reshape(b, s, h * v_hd)
+    out = dense(p["wo"], out)
+    if return_cache:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def mla_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               cache: Tuple[jnp.ndarray, jnp.ndarray], pos: jnp.ndarray):
+    """Absorbed-weight decode over the compressed cache.
+
+    cache: (c_kv [B,S,lora], k_rope [B,S,rope_d]).  Cost per step is
+    O(S * (lora + rope_d)) per head — the MLA selling point.
+    """
+    b = x.shape[0]
+    h, nope, rope_d, v_hd, lora = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                                   cfg.v_head_dim, cfg.kv_lora_rank)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_t, kr_t = _mla_ckv(p, cfg, x, positions)
+    c_cache, r_cache = cache
+    s_cache = c_cache.shape[1]
+    c_cache = jax.lax.dynamic_update_slice(c_cache, c_t.astype(c_cache.dtype), (0, pos, 0))
+    r_cache = jax.lax.dynamic_update_slice(r_cache, kr_t.astype(r_cache.dtype), (0, pos, 0))
+    # Absorb W_uk into q: q_abs[b,h,l] = sum_n q_nope[b,h,n] W_uk[l,(h,n)].
+    w_uk = p["w_uk"]["w"].astype(x.dtype).reshape(lora, h, nope)
+    q_abs = jnp.einsum("bthn,lhn->bthl", q_nope, w_uk)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    s_lat = jnp.einsum("bthl,bsl->bhts", q_abs, c_cache.astype(x.dtype))
+    s_rope = jnp.einsum("bthr,bsr->bhts", q_rope, r_cache.astype(x.dtype))
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+    idx = jnp.arange(s_cache)
+    mask = (idx <= pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bsl->bthl", attn, c_cache.astype(x.dtype))
+    w_uv = p["w_uv"]["w"].astype(x.dtype).reshape(lora, h, v_hd)
+    out = jnp.einsum("bthl,lhv->bthv", ctx, w_uv).reshape(b, 1, h * v_hd)
+    return dense(p["wo"], out), (c_cache, r_cache)
+
+
+def mla_cache_shapes(cfg: ModelConfig, batch: int, seq: int):
+    return (batch, seq, cfg.kv_lora_rank), (batch, seq, cfg.rope_head_dim)

@@ -1,0 +1,145 @@
+"""Building-block layers (pure-JAX, functional params-as-pytrees).
+
+Conventions:
+  * every init_* returns a nested dict of f32 arrays (master weights);
+  * every apply casts to the compute dtype of its input;
+  * activations are annotated with *logical* axis names through the sharding
+    context (``repro.distributed.sharding``) so the same model code runs
+    unsharded on one CPU device and fully sharded on the production mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int) -> Dict:
+    return {"scale": jnp.zeros((dim,), jnp.float32)}
+
+
+def rmsnorm(p: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"])).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, in_dim: int, out_dim: int, scale: float | None = None) -> Dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return {"w": truncated_normal(key, (in_dim, out_dim), scale)}
+
+
+def dense(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"].astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, dim: int) -> Dict:
+    # 1/sqrt(dim) so the sqrt(d)-scaled embedding has unit variance and the
+    # tied unembedding produces O(1) logits at init.
+    return {"table": truncated_normal(key, (vocab, dim), 1.0 / math.sqrt(dim))}
+
+
+def embed(p: Dict, tokens: jnp.ndarray, scale_by_sqrt_dim: bool = False) -> jnp.ndarray:
+    table = p["table"]
+    x = jnp.take(table, tokens, axis=0).astype(jnp.bfloat16)
+    if scale_by_sqrt_dim:
+        x = x * jnp.asarray(math.sqrt(table.shape[-1]), x.dtype)
+    return constrain(x, ("batch", "seq", None))
+
+
+def unembed(p: Dict, x: jnp.ndarray, softcap: float = 0.0) -> jnp.ndarray:
+    logits = x @ p["table"].astype(x.dtype).T
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str = "swiglu") -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": init_dense(k2, d_model, d_ff),
+        "w_down": init_dense(k3, d_ff, d_model, scale=1.0 / math.sqrt(d_ff)),
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = init_dense(k1, d_model, d_ff)
+    return p
+
+
+def mlp(p: Dict, x: jnp.ndarray, mlp_type: str = "swiglu") -> jnp.ndarray:
+    up = dense(p["w_up"], x)
+    t = mlp_type if "w_gate" in p else "gelu"
+    if t == "swiglu":
+        act = jax.nn.silu(dense(p["w_gate"], x)) * up
+    elif t == "geglu":
+        act = jax.nn.gelu(dense(p["w_gate"], x), approximate=True) * up
+    else:
+        act = jax.nn.gelu(up, approximate=True)
+    axes = ("batch", "seq", "ff") if act.ndim == 3 else ("batch", "ff")
+    act = constrain(act, axes)
+    return dense(p["w_down"], act)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for given positions; returns (cos, sin) [..., dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; cos/sin: [..., seq, head_dim/2]."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-mean cross entropy; stable in f32; vocab may be sharded."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t), with a_t = a^(c * r_t),
+a = sigmoid(Λ) a learned per-channel constant, r_t/i_t input-dependent gates.
+The full-sequence form uses an associative scan (parallel prefix) — linear
+recurrences compose associatively — so prefill is O(S log S) parallel work
+instead of a length-S sequential loop.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import init_dense, dense, truncated_normal
+
+_C = 8.0  # temperature from the Griffin paper
+
+
+def init_rglru(key, cfg: ModelConfig) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = sigmoid(Λ) ∈ [0.9, 0.999] as in the paper.
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1 / _C)) - jnp.log1p(-(u ** (1 / _C)))
+    return {
+        "w_x": init_dense(ks[1], d, w),
+        "w_gate": init_dense(ks[2], d, w),
+        "conv": {"w": truncated_normal(ks[3], (cfg.conv_width, w), 0.1)},
+        "a_param": lam,
+        "a_gate": {"w": truncated_normal(ks[4], (w, w), 1.0 / math.sqrt(w))},
+        "x_gate": {"w": truncated_normal(ks[5], (w, w), 1.0 / math.sqrt(w))},
+        "w_out": init_dense(ks[0], w, d),
+    }
+
+
+def _gates(p: Dict, xb: jnp.ndarray):
+    r = jax.nn.sigmoid(xb @ p["a_gate"]["w"].astype(xb.dtype))
+    i = jax.nn.sigmoid(xb @ p["x_gate"]["w"].astype(xb.dtype))
+    log_a = -_C * jax.nn.softplus(-p["a_param"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(jnp.float32) * xb.astype(jnp.float32)
+    )
+    return a, gated
+
+
+def _conv(p, x, state=None):
+    w = p["conv"]["w"]
+    width = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width))
+    return y, xp[:, -(width - 1):]
+
+
+def rglru_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  initial_h: jnp.ndarray | None = None,
+                  return_state: bool = False):
+    """Full-sequence RG-LRU block. x: [B,S,d]."""
+    xb = dense(p["w_x"], x)
+    gate_branch = jax.nn.gelu(dense(p["w_gate"], x), approximate=True)
+    xb, conv_state = _conv(p, xb)
+    xb = constrain(xb, ("batch", None, "ff"))
+    a, gated = _gates(p, xb)
+
+    if initial_h is not None:
+        # Fold h0 in as a virtual step 0 with a=1 for position 0 handled below.
+        gated = gated.at[:, 0].add(a[:, 0] * initial_h.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b2 + a2 * b1
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (h.astype(x.dtype) * gate_branch)
+    out = dense(p["w_out"], y)
+    if return_state:
+        return out, (conv_state, h[:, -1])
+    return out
+
+
+def rglru_decode(p: Dict, cfg: ModelConfig, x_t: jnp.ndarray,
+                 cache: Tuple[jnp.ndarray, jnp.ndarray]):
+    """One-token step. cache = (conv_state [B,W-1,w], h [B,w])."""
+    conv_state, h = cache
+    xb = dense(p["w_x"], x_t)
+    gate_branch = jax.nn.gelu(dense(p["w_gate"], x_t), approximate=True)
+    xb, conv_state = _conv(p, xb, conv_state)
+    a, gated = _gates(p, xb)
+    h_new = a[:, 0] * h.astype(jnp.float32) + gated[:, 0]
+    y = h_new[:, None, :].astype(x_t.dtype) * gate_branch
+    return dense(p["w_out"], y), (conv_state, h_new)
+
+
+def rglru_cache_shapes(cfg: ModelConfig, batch: int):
+    return (batch, cfg.conv_width - 1, cfg.lru_width), (batch, cfg.lru_width)

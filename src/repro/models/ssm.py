@@ -1,0 +1,167 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked parallel form + decode.
+
+The chunked SSD algorithm (Dao & Gu, 2024) splits the sequence into Q-length
+chunks: intra-chunk terms are dense matmuls (MXU-friendly), inter-chunk terms
+pass a [H, P, N] state through a short sequential scan over chunks.  This is
+the EMS analogue at the model level: chunk size trades the number of
+inter-chunk passes (rounds) against intra-chunk matmul volume.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import init_dense, dense, truncated_normal
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_in = cfg.d_inner_ssm
+    n_heads = cfg.n_ssm_heads
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    # in_proj packs [z, x, B, C, dt] like the reference implementation.
+    d_proj = 2 * d_in + 2 * n + n_heads
+    return {
+        "w_in": init_dense(ks[0], d, d_proj),
+        "conv": {"w": truncated_normal(ks[1], (cfg.conv_width, d_in + 2 * n), 0.1)},
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "dt_bias": jnp.zeros((n_heads,)),
+        "d_skip": jnp.ones((n_heads,)),
+        "w_out": init_dense(ks[5], d_in, d),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_in, n, h = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt  # xbc = [x, B, C] fused for the conv
+
+
+def _causal_conv(w: jnp.ndarray, x: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv; x [B,S,C], w [W,C]. Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else xp[:, :0]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """segsum(x)[..., i, j] = sum_{j < k <= i} x[..., k] (lower-triangular)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                initial_state: jnp.ndarray | None = None,
+                return_state: bool = False):
+    """Chunked SSD over the full sequence. x: [B,S,d]."""
+    b, s, _ = x.shape
+    d_in, n, h_dim = cfg.d_inner_ssm, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.n_ssm_heads
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    proj = dense(p["w_in"], x)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(p["conv"]["w"], xbc)
+    xc, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H]
+    da = dt * a  # [B,S,H]
+
+    xh = xc.reshape(b, nc, q, h, h_dim)
+    xh = constrain(xh, ("batch", None, None, "state", None))
+    bm = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cm = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dac = da.reshape(b, nc, q, h).transpose(0, 1, 3, 2)  # [B,nc,H,Q]
+    dtc = dt.reshape(b, nc, q, h)
+
+    # Intra-chunk (diagonal blocks): dense attention-like matmuls.
+    l_mat = jnp.exp(_segsum(dac))  # [B,nc,H,Q,Q]
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcsh,bcshp->bclhp",
+                        cm, bm, l_mat, dtc, xh.astype(jnp.float32))
+
+    # Chunk-final states.
+    a_cum = jnp.cumsum(dac, axis=-1)  # [B,nc,H,Q]
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # [B,nc,H,Q]
+    states = jnp.einsum("bcsn,bchs,bcsh,bcshp->bchpn",
+                        bm, decay_states, dtc, xh.astype(jnp.float32))
+
+    # Inter-chunk recurrence (sequential over nc chunks).
+    chunk_decay = jnp.exp(a_cum[..., -1])  # [B,nc,H]
+    s0 = (jnp.zeros((b, h, h_dim, n), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def scan_fn(carry, xs):
+        st, dec = xs  # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    state_decay = jnp.exp(a_cum)  # decay from chunk start to position s
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp", cm, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, h_dim)
+    y = y + xh.reshape(b, s, h, h_dim).astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = dense(p["w_out"], y)
+    if return_state:
+        return out, (conv_state, final_state)
+    return out
+
+
+def ssd_decode(p: Dict, cfg: ModelConfig, x_t: jnp.ndarray,
+               cache: Tuple[jnp.ndarray, jnp.ndarray]):
+    """Single-token recurrent step. x_t: [B,1,d]; cache=(conv_state, ssm_state)."""
+    b = x_t.shape[0]
+    d_in, n, h_dim = cfg.d_inner_ssm, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.n_ssm_heads
+    conv_state, ssm_state = cache
+
+    proj = dense(p["w_in"], x_t)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(p["conv"]["w"], xbc, conv_state)
+    xc, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # [B,H]
+
+    xh = xc.reshape(b, h, h_dim).astype(jnp.float32)
+    bm = bmat[:, 0].astype(jnp.float32)  # [B,N]
+    cm = cmat[:, 0].astype(jnp.float32)
+    ssm_state = (ssm_state.astype(jnp.float32) * da[..., None, None]
+                 + jnp.einsum("bh,bn,bhp->bhpn", dt, bm, xh))
+    y = jnp.einsum("bn,bhpn->bhp", cm, ssm_state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x_t.dtype)
+    y = y * jax.nn.silu(z)
+    return dense(p["w_out"], y), (conv_state, ssm_state)
+
+
+def ssm_cache_shapes(cfg: ModelConfig, batch: int):
+    conv = (batch, cfg.conv_width - 1, cfg.d_inner_ssm + 2 * cfg.ssm_state)
+    state = (batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+    return conv, state

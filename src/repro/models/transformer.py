@@ -1,0 +1,544 @@
+"""Model assembly: block zoo + scan-over-layers LM for every assigned family.
+
+Families:
+  dense / moe      — decoder-only transformer (uniform or first-k-dense stacks)
+  ssm              — Mamba-2 (SSD) stack, attention-free
+  hybrid           — RecurrentGemma pattern (rec, rec, local-attn) repeating
+  vlm              — dense decoder over [patch-stub ; text] with prefix mask
+  audio_encdec     — encoder (bidirectional) + decoder (self + cross)
+
+All stacks are `lax.scan` over layer-stacked params (fast compiles at 512
+devices); training wraps the block in `jax.checkpoint` (full remat).
+Caches are layer-stacked pytrees threaded through the decode scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rec_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    embed, init_dense, init_embedding, init_mlp, init_rmsnorm, dense, mlp,
+    rmsnorm, softmax_xent, unembed,
+)
+
+Params = Dict[str, Any]
+
+# When True, segment stacks run as Python loops instead of lax.scan.  Used by
+# the dry-run's flop probes: XLA's cost_analysis counts a while-loop body
+# ONCE regardless of trip count, so scanned models under-report flops/bytes;
+# unrolled shallow probes + linear extrapolation recover the true totals.
+_UNROLL = False
+
+# Remat policy for the layer scan: None = full remat (save only carries);
+# "dots" = save dot/matmul outputs (less recompute, more activation memory).
+_REMAT_POLICY = None
+
+
+def set_unroll(flag: bool) -> None:
+    global _UNROLL
+    _UNROLL = flag
+
+
+def set_remat_policy(name) -> None:
+    global _REMAT_POLICY
+    _REMAT_POLICY = name
+
+
+def _checkpoint(fn):
+    if _REMAT_POLICY == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ===========================================================================
+# Blocks
+# ===========================================================================
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_rmsnorm(cfg.d_model)}
+    if kind in ("attn", "attn_local", "enc"):
+        p["attn"] = attn.init_gqa(ks[0], cfg)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    elif kind == "mla":
+        p["attn"] = attn.init_mla(ks[0], cfg)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    elif kind in ("moe", "mla_moe"):
+        p["attn"] = (attn.init_mla(ks[0], cfg) if kind == "mla_moe"
+                     else attn.init_gqa(ks[0], cfg))
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = rec_mod.init_rglru(ks[0], cfg)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    elif kind == "cross":
+        p["attn"] = attn.init_gqa(ks[0], cfg)
+        p["norm_x"] = init_rmsnorm(cfg.d_model)
+        p["xattn"] = attn.init_gqa(ks[1], cfg)
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _window(cfg: ModelConfig, kind: str) -> int:
+    return cfg.window if kind == "attn_local" else 0
+
+
+def block_forward(
+    p: Params, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+    positions: jnp.ndarray, mask_positions: jnp.ndarray,
+    enc_out: Optional[jnp.ndarray] = None,
+    want_cache: bool = False,
+) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Returns (x_out, cache_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "attn_local", "moe"):
+        out = attn.gqa_forward(p["attn"], cfg, h, positions,
+                               window=_window(cfg, kind),
+                               mask_pos=mask_positions, return_kv=want_cache)
+        if want_cache:
+            out, kv = out
+            if kind == "attn_local" and cfg.window:
+                kv = _ring_pack(kv, positions, cfg.window)
+            cache = kv
+        x = x + out
+    elif kind == "enc":  # bidirectional: all mask positions equal
+        out = attn.gqa_forward(p["attn"], cfg, h, positions,
+                               mask_pos=jnp.zeros_like(mask_positions))
+        x = x + out
+    elif kind in ("mla", "mla_moe"):
+        out = attn.mla_forward(p["attn"], cfg, h, positions, return_cache=want_cache)
+        if want_cache:
+            out, cache = out
+        x = x + out
+    elif kind == "ssm":
+        out = ssm_mod.ssd_forward(p["ssm"], cfg, h, return_state=want_cache)
+        if want_cache:
+            out, state = out
+            cache = state
+        x = x + out
+        return x, cache, aux
+    elif kind == "rec":
+        out = rec_mod.rglru_forward(p["rec"], cfg, h, return_state=want_cache)
+        if want_cache:
+            out, hstate = out
+            cache = hstate
+        x = x + out
+    elif kind == "cross":
+        out, kv_self = attn.gqa_forward(p["attn"], cfg, h, positions,
+                                        mask_pos=mask_positions, return_kv=True)
+        x = x + out
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        xout, kv_cross = attn.gqa_forward(p["xattn"], cfg, hx, positions,
+                                          xa=enc_out, return_kv=True)
+        x = x + xout
+        if want_cache:
+            cache = {"self": kv_self, "cross": kv_cross}
+    # FFN half.
+    if kind in ("moe", "mla_moe"):
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, h2)
+        x = x + y
+    elif "mlp" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.mlp_type)
+    x = constrain(x, ("batch", "seq", None))
+    return x, cache, aux
+
+
+def _ring_pack(kv, positions, window: int):
+    """Pack the last `window` positions of (k, v) into ring-buffer layout."""
+    k, v = kv
+    s = k.shape[1]
+    w = min(window, s)
+    last_pos = positions[0, -w:]  # positions are shared across batch
+    slots = last_pos % window
+
+    def pack(a):
+        ring = jnp.zeros((a.shape[0], window) + a.shape[2:], a.dtype)
+        return ring.at[:, slots].set(a[:, -w:])
+
+    return pack(k), pack(v)
+
+
+def block_decode(
+    p: Params, cfg: ModelConfig, kind: str, x: jnp.ndarray, cache: Any,
+    pos: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Any]:
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "attn_local", "moe"):
+        out, cache = attn.gqa_decode(p["attn"], cfg, h, cache, pos,
+                                     window=_window(cfg, kind))
+        x = x + out
+    elif kind in ("mla", "mla_moe"):
+        out, cache = attn.mla_decode(p["attn"], cfg, h, cache, pos)
+        x = x + out
+    elif kind == "ssm":
+        out, cache = ssm_mod.ssd_decode(p["ssm"], cfg, h, cache)
+        return x + out, cache
+    elif kind == "rec":
+        out, cache = rec_mod.rglru_decode(p["rec"], cfg, h, cache)
+        x = x + out
+    elif kind == "cross":
+        out, kv_self = attn.gqa_decode(p["attn"], cfg, h, cache["self"], pos)
+        x = x + out
+        hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        ck, cv = cache["cross"]
+        b = x.shape[0]
+        qx = dense(p["xattn"]["wq"], hx).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        qg = qx.reshape(b, 1, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.head_dim)
+        kv_pos = jnp.zeros((b, ck.shape[1]), jnp.int32)
+        q_pos = jnp.full((b, 1), 10 ** 9, jnp.int32)
+        xo = attn.full_attention(qg, ck, cv, q_pos, kv_pos)
+        xo = dense(p["xattn"]["wo"], xo.reshape(b, 1, -1))
+        x = x + xo
+        cache = {"self": kv_self, "cross": (ck, cv)}
+    if kind in ("moe", "mla_moe"):
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = moe_mod.moe_apply(p["moe"], cfg, h2)
+        x = x + y
+    elif "mlp" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.mlp_type)
+    return x, cache
+
+
+# ===========================================================================
+# Stack plans
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSegment:
+    kinds: Tuple[str, ...]  # block kinds inside one scan group
+    repeats: int  # scan length
+
+
+def stack_plan(cfg: ModelConfig) -> Tuple[StackSegment, ...]:
+    """Decompose the layer list into scannable segments."""
+    if cfg.family == "moe":
+        kind = "mla_moe" if cfg.attn_type == "mla" else "moe"
+        dense_kind = "mla" if cfg.attn_type == "mla" else "attn"
+        segs = []
+        if cfg.first_k_dense:
+            segs.append(StackSegment((dense_kind,), cfg.first_k_dense))
+        segs.append(StackSegment((kind,), cfg.n_layers - cfg.first_k_dense))
+        return tuple(segs)
+    if cfg.family == "ssm":
+        return (StackSegment(("ssm",), cfg.n_layers),)
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn_local")
+        n_groups, rem = divmod(cfg.n_layers, len(pat))
+        segs = [StackSegment(tuple(pat), n_groups)] if n_groups else []
+        if rem:
+            head = tuple(pat[:rem])
+            if len(set(head)) == 1:
+                segs.append(StackSegment((head[0],), rem))
+            else:
+                segs.extend(StackSegment((k,), 1) for k in head)
+        return tuple(segs)
+    if cfg.attn_type == "mla":
+        return (StackSegment(("mla",), cfg.n_layers),)
+    # dense / vlm / decoder side of enc-dec
+    return (StackSegment(("attn",), cfg.n_layers),)
+
+
+def init_segment(key, cfg: ModelConfig, seg: StackSegment) -> Params:
+    keys = jax.random.split(key, seg.repeats)
+
+    def one(k):
+        sub = jax.random.split(k, len(seg.kinds))
+        return {f"b{i}_{kind}": init_block(sub[i], cfg, kind)
+                for i, kind in enumerate(seg.kinds)}
+
+    return jax.vmap(one)(keys)
+
+
+def segment_forward(params: Params, cfg: ModelConfig, seg: StackSegment,
+                    x, positions, mask_positions, enc_out=None,
+                    want_cache=False, remat=False):
+    def step(carry, layer_params):
+        h, aux_total = carry
+        caches = {}
+        for i, kind in enumerate(seg.kinds):
+            h, cache, aux = block_forward(
+                layer_params[f"b{i}_{kind}"], cfg, kind, h, positions,
+                mask_positions, enc_out=enc_out, want_cache=want_cache)
+            aux_total = aux_total + aux
+            caches[f"b{i}_{kind}"] = cache
+        return (h, aux_total), (caches if want_cache else None)
+
+    fn = _checkpoint(step) if remat else step
+    if _UNROLL:
+        carry = (x, jnp.zeros((), jnp.float32))
+        cache_list = []
+        for l in range(seg.repeats):
+            layer_params = jax.tree.map(lambda a: a[l], params)
+            carry, c = fn(carry, layer_params)
+            cache_list.append(c)
+        (x, aux) = carry
+        caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+                  if want_cache else None)
+        return x, aux, caches
+    (x, aux), caches = jax.lax.scan(fn, (x, jnp.zeros((), jnp.float32)), params)
+    return x, aux, caches
+
+
+def segment_decode(params: Params, cfg: ModelConfig, seg: StackSegment,
+                   x, caches, pos):
+    def step(h, xs):
+        layer_params, layer_cache = xs
+        new_caches = {}
+        for i, kind in enumerate(seg.kinds):
+            name = f"b{i}_{kind}"
+            h, c = block_decode(layer_params[name], cfg, kind, h,
+                                layer_cache[name], pos)
+            new_caches[name] = c
+        return h, new_caches
+
+    if _UNROLL:
+        cache_list = []
+        for l in range(seg.repeats):
+            xs_l = jax.tree.map(lambda a: a[l], (params, caches))
+            x, c = step(x, xs_l)
+            cache_list.append(c)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+    x, new_caches = jax.lax.scan(step, x, (params, caches))
+    return x, new_caches
+
+
+# ===========================================================================
+# Whole-model: init / loss / prefill / decode
+# ===========================================================================
+
+
+def _decoder_segments(cfg: ModelConfig):
+    if cfg.n_encoder_layers:
+        return (StackSegment(("cross",), cfg.n_layers),)
+    return stack_plan(cfg)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    segs = _decoder_segments(cfg)
+    ks = jax.random.split(key, len(segs) + 4)
+    p: Params = {"embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model),
+                 "final_norm": init_rmsnorm(cfg.d_model)}
+    for i, seg in enumerate(segs):
+        p[f"seg{i}"] = init_segment(ks[i + 1], cfg, seg)
+    if cfg.frontend:
+        p["frontend"] = {"proj_in": init_dense(ks[-3], cfg.frontend_dim, cfg.d_model)}
+    if cfg.n_encoder_layers:
+        enc_seg = StackSegment(("enc",), cfg.n_encoder_layers)
+        p["encoder"] = init_segment(ks[-2], cfg, enc_seg)
+        p["enc_norm"] = init_rmsnorm(cfg.d_model)
+    return p
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Token (+frontend-stub) embedding; returns (x, positions, mask_positions)."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, scale_by_sqrt_dim=True)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    mask_positions = positions
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)  # [B, P, frontend_dim]
+        px = dense(params["frontend"]["proj_in"], patches)
+        x = jnp.concatenate([px, x], axis=1)
+        p_len = patches.shape[1]
+        s_tot = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s_tot, dtype=jnp.int32)[None], (b, s_tot))
+        # Prefix-LM mask: image prefix is mutually visible.
+        mask_positions = jnp.maximum(positions - p_len + 1, 0)
+    return x, positions, mask_positions
+
+
+def _encode(params, cfg: ModelConfig, batch):
+    frames = batch["frames"].astype(jnp.bfloat16)  # [B, S_enc, frontend_dim]
+    h = dense(params["frontend"]["proj_in"], frames)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    seg = StackSegment(("enc",), cfg.n_encoder_layers)
+    h, _, _ = segment_forward(params["encoder"], cfg, seg, h, positions, positions)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch, want_cache=False, remat=False):
+    """Full-sequence forward; returns (logits, aux_loss, caches)."""
+    enc_out = _encode(params, cfg, batch) if cfg.n_encoder_layers else None
+    x, positions, mask_positions = _embed_inputs(params, cfg, batch)
+    caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, seg in enumerate(_decoder_segments(cfg)):
+        x, aux, cache = segment_forward(
+            params[f"seg{i}"], cfg, seg, x, positions, mask_positions,
+            enc_out=enc_out, want_cache=want_cache, remat=remat)
+        aux_total = aux_total + aux
+        caches.append(cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.logit_softcap)
+    return logits, aux_total, caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat=True):
+    logits, aux, _ = forward(params, cfg, batch, remat=remat)
+    if cfg.family == "vlm":  # only text positions carry loss
+        p_len = batch["patches"].shape[1]
+        logits = logits[:, p_len:]
+    loss = softmax_xent(logits[:, :-1], batch["targets"][:, 1:],
+                        batch.get("mask", None))
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Returns (last_token_logits, caches) for subsequent decode."""
+    logits, _, caches = forward(params, cfg, batch, want_cache=True)
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, pos):
+    """One decode step. token: [B] int32; pos: scalar int32 step index."""
+    x = embed(params["embed"], token[:, None], scale_by_sqrt_dim=True)
+    new_caches = []
+    for i, seg in enumerate(_decoder_segments(cfg)):
+        x, c = segment_decode(params[f"seg{i}"], cfg, seg, x, caches[i], pos)
+        new_caches.append(c)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.logit_softcap)
+    return logits[:, 0], new_caches
+
+
+# ===========================================================================
+# Cache specs (for dry-run ShapeDtypeStructs and serving allocation)
+# ===========================================================================
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16,
+                 enc_len: int | None = None):
+    """ShapeDtypeStruct pytree mirroring `prefill`'s cache output."""
+    enc_len = enc_len or cfg.frontend_seq or seq
+
+    def seg_cache(seg: StackSegment):
+        layer = {}
+        for i, kind in enumerate(seg.kinds):
+            name = f"b{i}_{kind}"
+            if kind in ("attn", "moe", "attn_local"):
+                w = cfg.window if kind == "attn_local" else 0
+                sh = attn.gqa_cache_shape(cfg, batch, seq, window=w)
+                if attn.KV_QUANT:
+                    scale_sh = sh[:-1] + (1,)
+                    layer[name] = (
+                        jax.ShapeDtypeStruct((seg.repeats,) + sh, jnp.int8),
+                        jax.ShapeDtypeStruct((seg.repeats,) + sh, jnp.int8),
+                        jax.ShapeDtypeStruct((seg.repeats,) + scale_sh, jnp.bfloat16),
+                        jax.ShapeDtypeStruct((seg.repeats,) + scale_sh, jnp.bfloat16),
+                    )
+                else:
+                    layer[name] = (jax.ShapeDtypeStruct((seg.repeats,) + sh, dtype),) * 2
+            elif kind in ("mla", "mla_moe"):
+                c_sh, r_sh = attn.mla_cache_shapes(cfg, batch, seq)
+                layer[name] = (
+                    jax.ShapeDtypeStruct((seg.repeats,) + c_sh, dtype),
+                    jax.ShapeDtypeStruct((seg.repeats,) + r_sh, dtype),
+                )
+            elif kind == "ssm":
+                conv, state = ssm_mod.ssm_cache_shapes(cfg, batch)
+                layer[name] = (
+                    jax.ShapeDtypeStruct((seg.repeats,) + conv, dtype),
+                    jax.ShapeDtypeStruct((seg.repeats,) + state, jnp.float32),
+                )
+            elif kind == "rec":
+                conv, h = rec_mod.rglru_cache_shapes(cfg, batch)
+                layer[name] = (
+                    jax.ShapeDtypeStruct((seg.repeats,) + conv, dtype),
+                    jax.ShapeDtypeStruct((seg.repeats,) + h, jnp.float32),
+                )
+            elif kind == "cross":
+                sh = attn.gqa_cache_shape(cfg, batch, seq)
+                enc_sh = attn.gqa_cache_shape(cfg, batch, enc_len)
+                layer[name] = {
+                    "self": (jax.ShapeDtypeStruct((seg.repeats,) + sh, dtype),) * 2,
+                    "cross": (jax.ShapeDtypeStruct((seg.repeats,) + enc_sh, dtype),) * 2,
+                }
+        return layer
+
+    return [seg_cache(seg) for seg in _decoder_segments(cfg)]
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top-k of routed experts + shared)."""
+    total = param_count(params)
+    if not cfg.n_experts:
+        return total
+
+    def expert_size(p):
+        size = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(p)[0]:
+            names = "/".join(str(getattr(k, "key", k)) for k in path)
+            if "moe/experts" in names or "experts" in names:
+                size += leaf.size
+        return size
+
+    e_total = expert_size(params)
+    active_frac = cfg.experts_per_token / cfg.n_experts
+    return int(total - e_total + e_total * active_frac)
+
+
+def pad_caches(cfg: ModelConfig, caches, target_len: int):
+    """Grow attention caches' seq axis to ``target_len`` (for decode headroom).
+
+    KV/MLA caches gain zero padding on the seq axis; ring (windowed), SSM and
+    RG-LRU caches are fixed-size and pass through untouched.
+    """
+
+    def pad_seq(a, axis):
+        if a.shape[axis] >= target_len:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, target_len - a.shape[axis])
+        return jnp.pad(a, widths)
+
+    segs = _decoder_segments(cfg)
+    out = []
+    for seg, seg_cache in zip(segs, caches):
+        new_seg = dict(seg_cache)
+        for i, kind in enumerate(seg.kinds):
+            name = f"b{i}_{kind}"
+            c = seg_cache[name]
+            if kind in ("attn", "moe"):
+                new_seg[name] = tuple(pad_seq(a, 2) for a in c)  # 2- or 4-tuple
+            elif kind in ("mla", "mla_moe"):
+                new_seg[name] = tuple(pad_seq(a, 2) for a in c)
+            elif kind == "cross":
+                new_seg[name] = {"self": tuple(pad_seq(a, 2) for a in c["self"]),
+                                 "cross": c["cross"]}
+        out.append(new_seg)
+    return out

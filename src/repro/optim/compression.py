@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization trick).
+
+At 1000+ nodes the pod-level gradient all-reduce is the scarcest bandwidth
+(DCN between pods is ~10x slower than ICI).  We compress gradients to bf16 or
+int8 *before* the cross-pod reduction and keep an error-feedback residual so
+the quantization bias cancels over steps (Karimireddy et al., 2019).  This is
+a REMOP-flavored trade on the D term: fewer bytes per round, same rounds.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def _int8_quant(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _int8_dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8_with_feedback(grads, residual):
+    """Returns (quantized tree of (q, scale), new_residual)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = _int8_quant(corrected)
+        back = _int8_dequant(q, scale)
+        return (q, scale), corrected - back
+
+    pairs = jax.tree.map(one, grads, residual)
+    quantized = jax.tree.map(lambda t: t[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                             and isinstance(x[0], tuple))
+    # Simpler: rebuild trees explicitly.
+    flat, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, scales, new_res = [], [], []
+    for g, r in zip(flat, flat_r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = _int8_quant(corrected)
+        qs.append(q)
+        scales.append(scale)
+        new_res.append(corrected - _int8_dequant(q, scale))
+    return (jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, scales),
+            jax.tree.unflatten(tdef, new_res))
+
+
+def decompress_int8(qs, scales):
+    return jax.tree.map(_int8_dequant, qs, scales)
+
+
+def compression_ratio(dtype_from=jnp.float32, dtype_to=jnp.int8) -> float:
+    return jnp.dtype(dtype_from).itemsize / jnp.dtype(dtype_to).itemsize

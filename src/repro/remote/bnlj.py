@@ -1,0 +1,122 @@
+"""Blocked nested-loop join over simulated remote memory (Algorithm 1).
+
+Faithful to §III-A / §IV-B: the budget ``M`` is split into an input region
+(``p_R`` of it pinned for the outer block, the rest cycling inner blocks) and
+an output region flushed when full.  Every block read and output flush is one
+transfer round on the :class:`RemoteMemory` ledger.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.policies import BNLJPlan
+from repro.remote.simulator import Relation, RemoteMemory
+
+
+@dataclasses.dataclass
+class JoinResult:
+    output_page_ids: List[int]
+    output_rows: int
+    d_read: float
+    d_write: float
+    c_read: int
+    c_write: int
+
+
+def _block_join(r_rows: np.ndarray, s_rows: np.ndarray) -> np.ndarray:
+    """Equijoin two blocks on column 0; returns (r_key, r_payload, s_payload)."""
+    rk, sk = r_rows[:, 0], s_rows[:, 0]
+    # Sort-merge inside the block pair (vectorized all-to-all comparison).
+    order = np.argsort(sk, kind="stable")
+    sk_sorted = sk[order]
+    lo = np.searchsorted(sk_sorted, rk, side="left")
+    hi = np.searchsorted(sk_sorted, rk, side="right")
+    counts = hi - lo
+    if counts.sum() == 0:
+        return np.empty((0, 3), dtype=np.int64)
+    r_idx = np.repeat(np.arange(len(rk)), counts)
+    starts = np.repeat(lo, counts)
+    within = np.arange(len(r_idx)) - np.repeat(np.cumsum(counts) - counts, counts)
+    s_idx = order[starts + within]
+    return np.stack(
+        [rk[r_idx], r_rows[r_idx, 1], s_rows[s_idx, 1]], axis=1
+    ).astype(np.int64)
+
+
+def bnlj(
+    remote: RemoteMemory,
+    outer: Relation,
+    inner: Relation,
+    plan: BNLJPlan,
+    prefetch: bool = False,
+) -> JoinResult:
+    """Run BNLJ with the given buffer plan; returns output + ledger deltas."""
+    p_r = max(1, int(round(plan.outer_pages)))
+    p_s = max(1, int(round(plan.inner_pages)))
+    r_out = max(1, int(round(plan.output_pages)))
+    rows_per_page = outer.rows_per_page
+
+    before = dataclasses.replace(remote.ledger)
+    out_ids: List[int] = []
+    out_rows = 0
+    out_buf: List[np.ndarray] = []
+    out_buf_rows = 0
+
+    def flush(force: bool = False) -> None:
+        nonlocal out_buf, out_buf_rows, out_rows
+        while out_buf_rows >= r_out * rows_per_page or (force and out_buf_rows > 0):
+            take = min(out_buf_rows, r_out * rows_per_page)
+            allrows = np.concatenate(out_buf, axis=0)
+            chunk, rest = allrows[:take], allrows[take:]
+            pages = [
+                chunk[i : i + rows_per_page]
+                for i in range(0, len(chunk), rows_per_page)
+            ]
+            out_ids.extend(remote.write_batch(pages))  # 1 write round
+            out_rows += len(chunk)
+            out_buf = [rest] if len(rest) else []
+            out_buf_rows = len(rest)
+            if force and out_buf_rows == 0:
+                break
+
+    n_outer_blocks = (len(outer.page_ids) + p_r - 1) // p_r
+    for bi in range(n_outer_blocks):
+        r_ids = outer.page_ids[bi * p_r : (bi + 1) * p_r]
+        r_pages = remote.read_batch(r_ids)  # 1 read round; block stays pinned
+        r_block = np.concatenate(r_pages, axis=0)
+        n_inner_blocks = (len(inner.page_ids) + p_s - 1) // p_s
+        for bj in range(n_inner_blocks):
+            s_ids = inner.page_ids[bj * p_s : (bj + 1) * p_s]
+            # Inner stream is sequential and predictable: prefetchable (§IV-E).
+            s_pages = remote.read_batch(s_ids, prefetched=prefetch and bj > 0)
+            s_block = np.concatenate(s_pages, axis=0)
+            matched = _block_join(r_block, s_block)
+            if len(matched):
+                out_buf.append(matched)
+                out_buf_rows += len(matched)
+                flush()
+    flush(force=True)
+
+    led = remote.ledger
+    return JoinResult(
+        output_page_ids=out_ids,
+        output_rows=out_rows,
+        d_read=led.d_read - before.d_read,
+        d_write=led.d_write - before.d_write,
+        c_read=led.c_read - before.c_read,
+        c_write=led.c_write - before.c_write,
+    )
+
+
+def bnlj_oracle(remote: RemoteMemory, outer: Relation, inner: Relation) -> np.ndarray:
+    """Dense oracle: full equijoin, canonically sorted rows (no accounting)."""
+    from repro.remote.simulator import relation_rows
+
+    r = relation_rows(remote, outer)
+    s = relation_rows(remote, inner)
+    out = _block_join(r, s)
+    return out[np.lexsort((out[:, 2], out[:, 1], out[:, 0]))] if len(out) else out

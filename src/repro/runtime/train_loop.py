@@ -1,0 +1,88 @@
+"""Fault-tolerant training loop: checkpoint/restart + straggler watch.
+
+The loop is deliberately dumb about *what* it runs (any jitted step works)
+and strict about *how*: resumable data (step-keyed), atomic async
+checkpoints, restart-from-latest on failure, straggler accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.checkpoint.store import CheckpointStore
+from repro.runtime.ft import RetryPolicy, StragglerWatch
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    async_checkpoint: bool = True
+    max_restarts: int = 3
+
+
+def train(
+    step_fn: Callable,  # (state, batch) -> (state, metrics)
+    state: Any,
+    batches: Callable[[int], Iterator],  # start_step -> iterator
+    store: Optional[CheckpointStore],
+    loop_cfg: LoopConfig,
+    state_shardings=None,
+    metrics_cb: Optional[Callable[[int, Dict], None]] = None,
+) -> Any:
+    """Run to total_steps with restart-from-checkpoint on failure."""
+    watch = StragglerWatch()
+    start_state = state
+
+    def current_step(s) -> int:
+        return int(jax.device_get(s["step"]))
+
+    def resume():
+        if store is None:
+            return start_state
+        step, restored, _ = store.restore_latest(
+            jax.tree.map(lambda x: x, start_state), shardings=state_shardings)
+        if restored is None:
+            return start_state
+        log.info("resumed from checkpoint at step %d", step)
+        return restored
+
+    holder = {"state": state}
+
+    def body():
+        state = holder["state"]
+        step = current_step(state)
+        it = iter(batches(step))
+        while step < loop_cfg.total_steps:
+            batch = next(it)
+            t0 = time.time()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss_total"])
+            dt = time.time() - t0
+            step = current_step(state)
+            holder["state"] = state
+            watch.observe(step, dt)
+            if metrics_cb and step % loop_cfg.log_every == 0:
+                metrics_cb(step, jax.device_get(metrics))
+            if store is not None and step % loop_cfg.checkpoint_every == 0:
+                store.save(step, state, {"step": step},
+                           blocking=not loop_cfg.async_checkpoint)
+        if store is not None:
+            store.wait()
+            store.save(loop_cfg.total_steps, holder["state"],
+                       {"step": loop_cfg.total_steps}, blocking=True)
+        return holder["state"]
+
+    def on_restart(attempt, err):
+        holder["state"] = resume()
+
+    return RetryPolicy(max_restarts=loop_cfg.max_restarts).run(
+        body, on_restart=on_restart)

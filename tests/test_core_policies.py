@@ -1,0 +1,206 @@
+"""Unit + property tests for the REMOP cost model and policies (paper §II-III)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TABLE_I, TESTBED, TierSpec, TransferLedger, latency_cost
+from repro.core import policies as P
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) and tier constants
+# ---------------------------------------------------------------------------
+
+
+def test_eq1_ssd_vs_tcp_example():
+    """§II-A worked example: 10 GB in 20,000 rounds — SSD ~19s+2s, TCP ~8s+10s."""
+    d_bytes, c = 10e9, 20_000
+    ssd, tcp = TABLE_I["ssd"], TABLE_I["tcp"]
+    assert ssd.latency_seconds_bytes(d_bytes, 0) == pytest.approx(18.9, abs=0.3)
+    assert c * ssd.rtt == pytest.approx(2.0, abs=0.01)
+    assert tcp.latency_seconds_bytes(d_bytes, 0) == pytest.approx(8.0, abs=0.01)
+    assert c * tcp.rtt == pytest.approx(10.0, abs=0.01)
+
+
+def test_latency_cost_limits():
+    # tau -> 0 reduces to min-D; large tau approaches min-C (Definition 3).
+    assert latency_cost(100, 10, 0.0) == 100
+    assert latency_cost(100, 10, 1e9) > latency_cost(200, 1, 1e9)
+
+
+def test_ledger_accounting():
+    led = TransferLedger()
+    led.read(10.0)
+    led.write(5.0)
+    assert led.d_total == 15.0 and led.c_total == 2
+    tier = TESTBED["remon_tcp"]
+    t = led.latency_seconds(tier)
+    assert t == pytest.approx(15 * tier.page_bytes / tier.bandwidth + 2 * tier.rtt)
+
+
+# ---------------------------------------------------------------------------
+# BNLJ (§III-A)
+# ---------------------------------------------------------------------------
+
+
+def test_bnlj_worked_example_exact():
+    """§II-C(a): conventional (99,1) vs equal (50,50) split."""
+    d_conv, c_conv = P.bnlj_costs_exact(500, 1000, 0, 99, 1, 1)
+    d_eq, c_eq = P.bnlj_costs_exact(500, 1000, 0, 50, 50, 1)
+    assert (d_conv, c_conv) == (6500.0, 6006.0)
+    assert (d_eq, c_eq) == (10500.0, 210.0)
+    assert d_eq / d_conv == pytest.approx(1.615, abs=0.001)  # +61.5% data
+    assert 1 - c_eq / c_conv == pytest.approx(0.965, abs=0.001)  # -96.5% rounds
+
+
+def test_property4_split():
+    # tau -> inf: equal split; tau -> 0: outer-heavy.
+    assert P.bnlj_split_opt(100.0, 1e12) == pytest.approx(0.5, abs=1e-4)
+    assert P.bnlj_split_opt(100.0, 1e-9) == pytest.approx(1.0, abs=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    r_in=st.floats(16.0, 4096.0),
+    tau=st.floats(0.01, 1e4),
+)
+def test_property4_is_argmin(r_in, tau):
+    """Property 4's closed form beats any other split (convex objective)."""
+    def obj(p_r):
+        return 1.0 / p_r + tau / (r_in * p_r * (1.0 - p_r))
+
+    star = P.bnlj_split_opt(r_in, tau)
+    best = obj(star)
+    for p in [i / 64 for i in range(1, 64)]:
+        assert best <= obj(p) + 1e-9 * abs(obj(p))
+
+
+TABLE_III = {
+    (1e-2, 1e-2): 0.966, (1e-1, 1e-2): 0.967, (1, 1e-2): 0.970,
+    (10, 1e-2): 0.980, (1e2, 1e-2): 0.991, (1e3, 1e-2): 0.997, (1e4, 1e-2): 0.999,
+    (1e-2, 1e-1): 0.904, (1, 1e-1): 0.912, (1e2, 1e-1): 0.973, (1e4, 1e-1): 0.997,
+    (1e-2, 1): 0.764, (1, 1): 0.778, (10, 1): 0.836, (1e2, 1): 0.921, (1e4, 1): 0.990,
+    (1e-2, 10): 0.547, (1, 10): 0.560, (1e2, 10): 0.789, (1e4, 10): 0.970,
+    (1e-2, 1e2): 0.330, (1, 1e2): 0.337, (10, 1e2): 0.384, (1e2, 1e2): 0.549,
+    (1e3, 1e2): 0.769, (1e4, 1e2): 0.910,
+}
+
+
+@pytest.mark.parametrize("cell,expected", sorted(TABLE_III.items()))
+def test_table3_rin_opt(cell, expected):
+    a, b = cell
+    assert P.bnlj_rin_opt(a, b) == pytest.approx(expected, abs=0.002)
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=st.floats(1e-2, 1e4), b=st.floats(1e-2, 1e2))
+def test_table3_is_argmin(a, b):
+    star = P.bnlj_rin_opt(a, b)
+    best = P.bnlj_rin_objective(star, a, b)
+    for r in [i / 100 for i in range(1, 100)]:
+        assert best <= P.bnlj_rin_objective(r, a, b) * (1 + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# EMS (§III-B)
+# ---------------------------------------------------------------------------
+
+
+def test_ems_worked_example_exact():
+    """§II-C(b): k=M-1 vs k=4 with 2:1 split."""
+    d, c, p = P.ems_costs_exact(13_000, 101, 100, 100)
+    assert (d, c, p) == (52_000.0, 52_000.0, 2)
+    d, c, p = P.ems_costs_exact(13_000, 101, 4, 67)
+    assert (d, c, p) == (104_000.0, 4_784.0, 4)
+
+
+def test_property5_split():
+    for k in (2, 4, 16, 64):
+        assert P.ems_split_opt(k) == pytest.approx(
+            math.sqrt(k) / (math.sqrt(k) + 1)
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(2, 256), m=st.floats(32, 8192))
+def test_property5_is_argmin(k, m):
+    """R_in:R_out = sqrt(k):1 minimizes k/R_in + 1/R_out."""
+    star = P.ems_split_opt(k)
+
+    def rounds(r_in):
+        return k / (r_in * m) + 1.0 / ((1 - r_in) * m)
+
+    best = rounds(star)
+    for r in [i / 50 for i in range(1, 50)]:
+        assert best <= rounds(r) * (1 + 1e-9)
+
+
+TABLE_IV = {1e-9: 4, 1: 5, 4: 8, 16: 17, 64: 43, 256: 126, 1024: 396}
+
+
+@pytest.mark.parametrize("a,expected", sorted(TABLE_IV.items()))
+def test_table4_kopt(a, expected):
+    assert P.ems_kopt(a) == expected
+
+
+def test_ems_vs_duckdb_limit():
+    """RTT-dominated: k*=4 uses ~25% fewer rounds than DuckDB's 2-way merge.
+
+    As tau->inf, L_Duck/L_opt -> [h(2)/h(4)] with h(k)=(sqrt(k)+1)^2/log2 k:
+    DuckDB pays (sqrt2+1)^2/1 vs optimal (2+1)^2/2 = 4.5 -> ratio ~1.296.
+    """
+    a = 1e-9
+    ratio = P.ems_h(2, a) / P.ems_h(4, a)
+    assert ratio == pytest.approx((math.sqrt(2) + 1) ** 2 / 4.5, rel=1e-3)
+    assert 1 - 1 / ratio == pytest.approx(0.25, abs=0.03)  # ~25% fewer rounds
+
+
+# ---------------------------------------------------------------------------
+# EHJ (§III-C)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    coeffs=st.lists(st.floats(0.1, 1e6), min_size=2, max_size=5),
+    budget=st.floats(8.0, 1e5),
+)
+def test_property6_waterfill_is_argmin(coeffs, budget):
+    """Cauchy-Schwarz allocation beats random feasible allocations."""
+    alloc, c_star = P.waterfill(coeffs, budget)
+    assert sum(alloc) == pytest.approx(budget, rel=1e-6)
+    assert P.round_cost(coeffs, alloc) == pytest.approx(c_star, rel=1e-6)
+    import random
+
+    rng = random.Random(42)
+    for _ in range(20):
+        cuts = sorted(rng.random() for _ in range(len(coeffs) - 1))
+        parts = []
+        prev = 0.0
+        for c in cuts + [1.0]:
+            parts.append((c - prev) * budget)
+            prev = c
+        if min(parts) <= 0:
+            continue
+        assert c_star <= P.round_cost(coeffs, parts) * (1 + 1e-9)
+
+
+def test_table6_closed_forms():
+    b, q, out, m_b, part, sigma = 4000.0, 16000.0, 8000.0, 256.0, 16, 0.5
+    plan = P.ehj_plan(b, q, out, m_b, part, sigma)
+    got = P.ehj_round_costs(b, q, out, plan)
+    want = P.ehj_optimal_round_costs(b, q, out, m_b, part, sigma)
+    for g, w in zip(got, want):
+        assert g == pytest.approx(w, rel=1e-6)
+    # Table VI split ratios: P1 R_r:R_w = 1 : sigma*sqrt(P).
+    r_r, r_w = plan.p1
+    assert r_w / r_r == pytest.approx(sigma * math.sqrt(part), rel=1e-6)
+
+
+def test_ehj_data_cost_allocation_independent():
+    b, q, out, sigma = 1000.0, 2000.0, 500.0, 0.25
+    d = sum(P.ehj_data_costs(b, q, out, sigma))
+    expected = (1 + sigma) * b + (1 + sigma) * q + (1 - sigma) * out + sigma * (b + q) + sigma * out
+    assert d == pytest.approx(expected)

@@ -1,0 +1,87 @@
+"""Integrity checks over the dry-run result cache (results/dryrun/*.json).
+
+These validate the DELIVERABLE, not the code: all 80 (arch x shape x mesh)
+cells exist, none errored, skips follow the task rules, and roofline records
+are complete and self-consistent.  Skipped wholesale if the cache is absent
+(fresh checkout) — regenerate with `python -m repro.launch.dryrun --all`.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(RESULTS, "*.json")),
+    reason="dry-run cache absent; run `python -m repro.launch.dryrun --all`",
+)
+
+
+def _load_all():
+    cells = {}
+    for path in glob.glob(os.path.join(RESULTS, "*.json")):
+        d = json.load(open(path))
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def test_all_80_cells_present_and_clean():
+    cells = _load_all()
+    missing, errors = [], []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single_pod", "multi_pod"):
+                c = cells.get((arch, shape, mesh))
+                if c is None:
+                    missing.append((arch, shape, mesh))
+                elif c["status"] == "error":
+                    errors.append((arch, shape, mesh, c.get("error", "")[:80]))
+    assert not missing, f"missing cells: {missing}"
+    assert not errors, f"errored cells: {errors}"
+
+
+def test_skips_follow_task_rules():
+    cells = _load_all()
+    for (arch, shape, mesh), c in cells.items():
+        applicable, _ = shape_applicable(ARCHS[arch], SHAPES[shape])
+        if c["status"] == "skipped":
+            assert not applicable, f"{arch}/{shape} skipped but applicable"
+        elif c["status"] == "ok":
+            assert applicable, f"{arch}/{shape} ran but should be skipped"
+
+
+def test_roofline_records_complete():
+    cells = _load_all()
+    for key, c in cells.items():
+        if c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        for field in ("compute_seconds", "memory_seconds",
+                      "memory_seconds_lower", "collective_seconds",
+                      "dominant", "model_flops", "mfu_bound"):
+            assert field in r, f"{key}: missing {field}"
+        assert r["compute_seconds"] > 0, key
+        assert r["memory_seconds"] >= r["memory_seconds_lower"], key
+        assert r["dominant"] in ("compute", "memory", "collective"), key
+        assert c["memory"]["peak_bytes_estimate"] > 0, key
+
+
+def test_multi_pod_shards_the_pod_axis():
+    """Per-device footprint on 512 chips must not exceed the 256-chip run
+    (the pod axis adds data parallelism; training state is ZeRO-sharded)."""
+    cells = _load_all()
+    for arch in ARCHS:
+        single = cells.get((arch, "train_4k", "single_pod"))
+        multi = cells.get((arch, "train_4k", "multi_pod"))
+        if not single or not multi or "ok" not in (single["status"], multi["status"]):
+            continue
+        if single["status"] != "ok" or multi["status"] != "ok":
+            continue
+        s = single["memory"]["peak_bytes_estimate"]
+        m = multi["memory"]["peak_bytes_estimate"]
+        assert m <= s * 1.05, (arch, s, m)

@@ -1,0 +1,158 @@
+"""Unit + property tests for the TPU planner and the roofline HLO parser."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import TPU_V5E
+from repro.core.planner import (conventional_matmul_tiles, matmul_costs,
+                                matmul_vmem, plan_dispatch, plan_grad_buckets,
+                                plan_kv_pages, plan_matmul_tiles,
+                                plan_microbatches, plan_sort)
+from repro.core.roofline import (CollectiveOp, collective_summary,
+                                 parse_hlo_collectives, shape_bytes)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.sampled_from([512, 2048, 4096, 8192]),
+       n=st.sampled_from([512, 2048, 16384]),
+       k=st.sampled_from([512, 1024, 4096]))
+def test_matmul_plan_feasible_and_not_worse(m, n, k):
+    plan = plan_matmul_tiles(m, n, k, in_bytes=2)
+    assert matmul_vmem(plan.bm, plan.bn, plan.bk, 2) <= TPU_V5E.vmem_bytes // 2
+    conv = conventional_matmul_tiles(m, n, k, in_bytes=2)
+    assert plan.l_cost <= conv.l_cost * (1 + 1e-9)
+    # MXU alignment
+    assert plan.bn % 128 == 0 and plan.bk % 128 == 0 and plan.bm % 8 == 0
+
+
+def test_matmul_costs_monotone_in_tile_size():
+    # Bigger tiles (same budget) -> fewer rounds, at most same D per side.
+    d1, c1 = matmul_costs(4096, 4096, 4096, 128, 128, 128, 2, 4)
+    d2, c2 = matmul_costs(4096, 4096, 4096, 512, 512, 512, 2, 4)
+    assert c2 < c1 and d2 < d1
+
+
+def test_sort_plan_uses_table4_fanin():
+    plan = plan_sort(1 << 22, item_bytes=8)
+    assert plan.k >= 2
+    assert 0.5 < plan.r_in_frac < 1.0
+    assert plan.passes >= 1
+
+
+def test_dispatch_plan_waterfill_ratios():
+    plan = plan_dispatch(tokens_per_device=4096, token_bytes=4096, experts=64,
+                         ep_degree=16, buffer_budget=1 << 24)
+    assert plan.sigma == pytest.approx(15 / 16)
+    # Property 6: R_s / R_r = sigma * sqrt(P).
+    assert plan.stage_pool / plan.read_pool == pytest.approx(
+        plan.sigma * (16 ** 0.5), rel=1e-6)
+    assert plan.a2a_rounds > 0
+
+
+def test_grad_bucket_plan_beats_extremes():
+    total, bwd, group = 4 * 10 ** 9, 0.1, 16
+    plan = plan_grad_buckets(total, bwd, group)
+    from repro.core.planner import BucketPlan
+
+    def exposed(b):
+        ring = 2 * (group - 1) / group
+        comm = ring * total / TPU_V5E.ici_bandwidth + b * TPU_V5E.collective_launch_s
+        tail = ring * (total / b) / TPU_V5E.ici_bandwidth + TPU_V5E.collective_launch_s
+        return max(comm - bwd, 0) + tail
+
+    assert plan.exposed_seconds <= exposed(1) + 1e-9
+    assert plan.exposed_seconds <= exposed(256) + 1e-9
+
+
+def test_kv_page_plan_fits_vmem_and_beats_tiny_pages():
+    plan = plan_kv_pages(context_len=32768, kv_heads=1, head_dim=128)
+    assert plan.page_tokens >= 128
+    tiny_l = (2.0 * 32768 * 128 * 2
+              + TPU_V5E.tau_dma_bytes * 2.0 * (32768 / 8))
+    assert plan.l_cost < tiny_l
+
+
+def test_microbatch_plan_fits_budget():
+    plan = plan_microbatches(per_device_batch=16, seq_len=4096, d_model=6144,
+                             n_layers=52, hbm_activation_budget=6 << 30)
+    act = (16 / plan.microbatches) * 4096 * 6144 * 2 * 2.0 * 52
+    assert act <= 6 << 30
+    assert 16 % plan.microbatches == 0
+
+
+# ---------------------------------------------------------------------------
+# roofline parser
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert shape_bytes("(bf16[64], f32[8,8])") == 64 * 2 + 64 * 4
+    assert shape_bytes("pred[]") == 1
+
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[512,128]{1,0} parameter(0)
+  %ar = f32[512,128]{1,0} all-reduce(%p0), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = f32[2048,128]{1,0} all-gather(%ar), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[128,128]{1,0} reduce-scatter(%ar), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %out = f32[2048,128]{1,0} copy(%ag)
+}
+"""
+
+
+def test_parse_hlo_collectives_sample():
+    ops = parse_hlo_collectives(HLO_SAMPLE)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "reduce-scatter"]
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.operand_bytes == 512 * 128 * 4
+    assert ar.group_size == 4
+    assert ar.wire_bytes == pytest.approx(2 * 512 * 128 * 4 * 3 / 4)
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.output_bytes == 2048 * 128 * 4
+    assert ag.wire_bytes == pytest.approx(2048 * 128 * 4 * 3 / 4)
+
+
+def test_parse_real_compiled_module():
+    """End-to-end: compile a sharded program and parse its collectives."""
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.roofline import parse_hlo_collectives
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def f(a, b):
+    return jnp.sum(a @ b)
+a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+sa = NamedSharding(mesh, P("data", "model"))
+sb = NamedSharding(mesh, P("model", None))
+c = jax.jit(f, in_shardings=(sa, sb),
+            out_shardings=NamedSharding(mesh, P())).lower(a, b).compile()
+ops = parse_hlo_collectives(c.as_text())
+assert len(ops) >= 1, "expected at least one collective"
+assert all(o.operand_bytes > 0 for o in ops)
+print("PARSER_OK", len(ops))
+"""
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "PARSER_OK" in out.stdout

@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the paper's system (headline claims).
+
+Each test exercises a full slice of the stack — policy engine -> operator ->
+measured ledger -> Eq. (1) latency — asserting the paper's top-line behavior
+rather than unit-level details (those live in the other test files).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TABLE_I, latency_cost
+from repro.core.policies import (bnlj_conventional, bnlj_plan,
+                                 bnlj_costs_exact, ems_costs_exact)
+from repro.core.planner import conventional_matmul_tiles, plan_matmul_tiles
+from repro.remote import RemoteMemory, bnlj, bnlj_oracle, make_relation
+
+TCP = TABLE_I["tcp"]
+
+
+def test_headline_round_reduction_97_percent():
+    """Abstract: 'REMOP reduces transfer rounds by up to 97%'.
+
+    The paper's own §II-C instance: equal split cuts BNLJ read rounds 96.5%
+    and the L-optimal EMS fan-in cuts merge rounds ~10.9x — both measured
+    from our closed forms, matching the printed numbers exactly.
+    """
+    _, c_conv = bnlj_costs_exact(500, 1000, 0, 99, 1, 1)
+    _, c_remop = bnlj_costs_exact(500, 1000, 0, 50, 50, 1)
+    assert 1 - c_remop / c_conv > 0.96
+    _, e_conv, _ = ems_costs_exact(13_000, 101, 100, 100)
+    _, e_remop, _ = ems_costs_exact(13_000, 101, 4, 67)
+    assert e_conv / e_remop > 10
+
+
+def test_end_to_end_policy_beats_conventional_on_live_data():
+    """Full stack: REMOP plan -> real BNLJ over simulated remote memory ->
+    identical output, fewer rounds, lower Eq.(1) latency (RTT-dominant tier).
+    """
+    results = {}
+    for name, plan in [("conv", bnlj_conventional(13)),
+                       ("remop", bnlj_plan(13, TCP.tau_pages, 1 / 512))]:
+        remote = RemoteMemory(TCP)
+        outer = make_relation(remote, 80 * 8, 8, 512, seed=0)
+        inner = make_relation(remote, 160 * 8, 8, 512, seed=1)
+        res = bnlj(remote, outer, inner, plan)
+        want = bnlj_oracle(remote, outer, inner)
+        assert res.output_rows == len(want)  # correctness under every policy
+        results[name] = (res.c_read + res.c_write, remote.latency_seconds())
+    assert results["remop"][0] < results["conv"][0]  # fewer rounds
+    assert results["remop"][1] < results["conv"][1]  # lower latency
+
+
+def test_tau_limits_recover_classical_policies():
+    """Definition 3: tau->0 gives min-D (outer-heavy); tau->inf gives min-C."""
+    lo = bnlj_plan(101, 1e-9)
+    hi = bnlj_plan(101, 1e9)
+    assert lo.p_r > 0.9  # volume-minimizing outer-heavy limit
+    assert abs(hi.p_r - 0.5) < 0.05  # round-minimizing equal split
+
+
+def test_tpu_planner_same_algebra_same_direction():
+    """The TPU side makes the same trade: REMOP tiles cut DMA rounds at a
+    bounded data-volume premium (the 2/r_in bound from §III-A e)."""
+    remop = plan_matmul_tiles(4096, 24576, 3072, in_bytes=2)
+    conv = conventional_matmul_tiles(4096, 24576, 3072, in_bytes=2)
+    assert remop.c_rounds < conv.c_rounds * 0.5
+    assert remop.d_bytes < conv.d_bytes * 4  # bounded extra volume
+    assert remop.l_cost < conv.l_cost
+
+
+def test_train_and_decode_one_arch_end_to_end():
+    """Tiny full loop: init -> 3 train steps -> prefill -> decode, all finite."""
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ShapeSpec
+    from repro.data.pipeline import synthetic_batches
+    from repro.distributed.sharding import Sharder
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_mesh_for
+    from repro.models import transformer as tf
+    from repro.optim.adamw import AdamWConfig
+
+    cfg = reduced(ARCHS["gemma-2b"])
+    shape = ShapeSpec("t", seq_len=16, global_batch=2, kind="train")
+    sharder = Sharder(make_mesh_for(1), sequence_parallel=False)
+    step = jax.jit(steps_lib.make_train_step(
+        cfg, AdamWConfig(lr=1e-3, total_steps=3, warmup_steps=1), sharder))
+    state = steps_lib.init_state(cfg, jax.random.key(0))
+    it = synthetic_batches(cfg, shape, seed=0)
+    for _ in range(3):
+        state, metrics = step(state, jax.tree.map(jnp.asarray, next(it)))
+        assert bool(jnp.isfinite(metrics["loss"]))
+    # Serve with the trained params.
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    logits, caches = tf.prefill(state["params"], cfg, {"tokens": tokens})
+    caches = tf.pad_caches(cfg, caches, 12)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, _ = tf.decode_step(state["params"], cfg, caches, nxt,
+                                jnp.asarray(8, jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
