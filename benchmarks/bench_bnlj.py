@@ -10,21 +10,23 @@ outer-heavy allocation.  Derived values:
 from __future__ import annotations
 
 from repro.core import TABLE_I, TESTBED
-from repro.core.policies import BNLJPlan, bnlj_conventional, bnlj_costs_exact
-from repro.remote import RemoteMemory, bnlj, make_relation
+from repro.core.policies import BNLJPlan, bnlj_costs_exact
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory, make_relation
 from benchmarks.common import Row, timed
 
 # Microbench sims use the paper's Table I TCP constants (RTT 500us ->
 # tau ~ 2.44 pages at 256 KiB pages); the testbed tier (RTT 155us, tau 0.74)
 # is volume-dominated and exercises the tau->0 limit instead.
 TIER = TABLE_I["tcp"]
+BNLJ = registry.get("bnlj")
 
 
 def _run_plan(plan, seed=0, r_pages=120, s_pages=240, rows=8, domain=4096):
     remote = RemoteMemory(TIER)
     outer = make_relation(remote, r_pages * rows, rows, domain, seed=seed)
     inner = make_relation(remote, s_pages * rows, rows, domain, seed=seed + 1)
-    res = bnlj(remote, outer, inner, plan)
+    res = BNLJ.run(remote, outer, inner, plan)
     rounds = res.c_read + res.c_write
     latency = remote.latency_seconds()
     return rounds, latency, res.output_rows
@@ -33,7 +35,8 @@ def _run_plan(plan, seed=0, r_pages=120, s_pages=240, rows=8, domain=4096):
 def run() -> list[Row]:
     rows: list[Row] = []
     m = 13.0
-    conv = bnlj_conventional(m)
+    stats = WorkloadStats(size_r=120, size_s=240, selectivity=1 / 4096)
+    conv = plan_operator("bnlj", stats, TIER, m, policy="conventional")
 
     def conv_run():
         return _run_plan(conv)
@@ -56,8 +59,7 @@ def run() -> list[Row]:
     rows.append((f"fig4_bnlj_best_cfg_rin{r_in}_pr{p_r}", 0.0, round(lat_best, 4)))
 
     # Direct REMOP policy (Table III + Property 4) vs conventional.
-    from repro.core.policies import bnlj_plan
-    policy = bnlj_plan(m, TIER.tau_pages, selectivity=1 / 4096)
+    policy = plan_operator("bnlj", stats, TIER, m)
     rounds_pol, lat_pol, out_pol = _run_plan(policy)
     assert out_pol == out_conv
     rows.append(("fig4_bnlj_policy_latency_reduction", 0.0,

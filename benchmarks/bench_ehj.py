@@ -9,18 +9,19 @@ the same direction.
 from __future__ import annotations
 
 from repro.core import TABLE_I, TESTBED
-from repro.core.policies import EHJPlan, ehj_plan
-from repro.remote import RemoteMemory, ehj, make_relation
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory, make_relation
 from benchmarks.common import Row, timed
 
 TIER = TABLE_I["tcp"]  # paper Table I constants (see bench_bnlj)
+EHJ = registry.get("ehj")
 
 
 def _run(plan, seed=0, b_pages=96, q_pages=192, rows=8, domain=64):
     remote = RemoteMemory(TIER)
     build = make_relation(remote, b_pages * rows, rows, domain, seed=seed)
     probe = make_relation(remote, q_pages * rows, rows, domain, seed=seed + 1)
-    res = ehj(remote, build, probe, plan)
+    res = EHJ.run(remote, build, probe, plan)
     return res.c_write, remote.latency_seconds(), res.output_rows
 
 
@@ -28,10 +29,10 @@ def run() -> list[Row]:
     rows_out: list[Row] = []
     m_b, sigma = 24.0, 0.5
     for parts in (4, 8, 16):
-        remop = ehj_plan(96, 192, 64, m_b, parts, sigma)
-        starved = EHJPlan(m_b=m_b, partitions=parts, sigma=sigma,
-                          p1=(m_b - 1, 1.0), p2=(m_b - 2, 1.0, 1.0),
-                          p3=(m_b - 1, 1.0))
+        stats = WorkloadStats(size_r=96, size_s=192, out=64,
+                              partitions=parts, sigma=sigma)
+        remop = plan_operator("ehj", stats, TIER, m_b)
+        starved = plan_operator("ehj", stats, TIER, m_b, policy="conventional")
 
         def run_pair():
             w_s, lat_s, out_s = _run(starved)

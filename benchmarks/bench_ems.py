@@ -8,29 +8,31 @@ vs the conventional max-fan-in policy, and the exact §II-C round counts.
 from __future__ import annotations
 
 from repro.core import TABLE_I, TESTBED
-from repro.core.policies import (EMSPlan, ems_costs_exact, ems_duckdb,
-                                 ems_split_opt)
-from repro.remote import RemoteMemory, ems_sort
+from repro.core.policies import EMSPlan, ems_costs_exact, ems_split_opt
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory
 from repro.remote.simulator import make_key_pages
 from benchmarks.common import Row, timed
 
 TIER = TABLE_I["tcp"]  # paper Table I constants (see bench_bnlj)
+EMS = registry.get("ems")
 
 
 def _run_plan(plan, n_pages=256, rows=8, seed=0):
     remote = RemoteMemory(TIER)
     ids = make_key_pages(remote, n_pages, rows, seed=seed)
-    res = ems_sort(remote, ids, plan, rows_per_page=rows,
-                   count_run_formation=False)
+    res = EMS.run(remote, ids, plan, rows_per_page=rows,
+                  count_run_formation=False)
     return res.c_read + res.c_write, remote.latency_seconds(), res.passes
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
     m = 12.0
+    stats = WorkloadStats(size_r=256)
 
     def duck():
-        return _run_plan(ems_duckdb(m))
+        return _run_plan(plan_operator("ems", stats, TIER, m, policy="duckdb"))
 
     us_duck, (rounds_duck, lat_duck, _) = timed(duck, repeats=1)
 

@@ -14,10 +14,8 @@ from __future__ import annotations
 import math
 
 from repro.core import TABLE_I, TESTBED
-from repro.core.policies import (BNLJPlan, EMSPlan, bnlj_conventional,
-                                 bnlj_plan, ehj_plan, EHJPlan, ems_duckdb,
-                                 ems_plan)
-from repro.remote import RemoteMemory, bnlj, ehj, ems_sort, make_relation
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory, make_relation
 from repro.remote.simulator import make_key_pages
 from benchmarks.common import Row, timed
 
@@ -29,28 +27,27 @@ M_B = 24.0
 def _q_join(remote, remop: bool, seed: int):
     outer = make_relation(remote, 90 * 8, 8, 2048, seed=seed)
     inner = make_relation(remote, 180 * 8, 8, 2048, seed=seed + 1)
-    plan = (bnlj_plan(M, TIER.tau_pages, 1 / 2048) if remop
-            else bnlj_conventional(M))
-    bnlj(remote, outer, inner, plan, prefetch=remop)
+    plan = plan_operator("bnlj", WorkloadStats(selectivity=1 / 2048), TIER, M,
+                         policy="remop" if remop else "conventional")
+    registry.get("bnlj").run(remote, outer, inner, plan, prefetch=remop)
 
 
 def _q_sort(remote, remop: bool, seed: int):
     ids = make_key_pages(remote, 200, 8, seed=seed)
-    plan = ems_plan(200, M, TIER.tau_pages, k_cap=8) if remop else ems_duckdb(M)
-    ems_sort(remote, ids, plan, rows_per_page=8, prefetch=remop,
-             count_run_formation=False)
+    plan = plan_operator("ems", WorkloadStats(size_r=200, k_cap=8), TIER, M,
+                         policy="remop" if remop else "duckdb")
+    registry.get("ems").run(remote, ids, plan, rows_per_page=8, prefetch=remop,
+                            count_run_formation=False)
 
 
 def _q_hash(remote, remop: bool, seed: int):
     build = make_relation(remote, 80 * 8, 8, 96, seed=seed)
     probe = make_relation(remote, 160 * 8, 8, 96, seed=seed + 1)
-    if remop:
-        plan = ehj_plan(80, 160, 48, M_B, 16, 0.5)
-    else:
-        plan = EHJPlan(m_b=M_B, partitions=16, sigma=0.5,
-                       p1=(M_B - 1, 1.0), p2=(M_B - 2, 1.0, 1.0),
-                       p3=(M_B - 1, 1.0))
-    ehj(remote, build, probe, plan, prefetch=remop)
+    plan = plan_operator(
+        "ehj", WorkloadStats(size_r=80, size_s=160, out=48,
+                             partitions=16, sigma=0.5), TIER, M_B,
+        policy="remop" if remop else "conventional")
+    registry.get("ehj").run(remote, build, probe, plan, prefetch=remop)
 
 
 QUERIES = {

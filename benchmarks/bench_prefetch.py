@@ -9,8 +9,9 @@ claim under test.
 from __future__ import annotations
 
 from repro.core import TABLE_I, TESTBED
-from repro.core.policies import BNLJPlan, EMSPlan, ehj_plan, ems_split_opt
-from repro.remote import RemoteMemory, bnlj, ehj, ems_sort, make_relation
+from repro.core.policies import BNLJPlan, EMSPlan, ems_split_opt
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory, make_relation
 from repro.remote.simulator import make_key_pages
 from benchmarks.common import Row, timed
 
@@ -21,16 +22,19 @@ def _bnlj(prefetch):
     remote = RemoteMemory(TIER)
     outer = make_relation(remote, 80 * 8, 8, 512, seed=1)
     inner = make_relation(remote, 160 * 8, 8, 512, seed=2)
-    bnlj(remote, outer, inner, BNLJPlan(m=13, r_in=10 / 13, p_r=0.5),
-         prefetch=prefetch)
+    registry.get("bnlj").run(remote, outer, inner,
+                             BNLJPlan(m=13, r_in=10 / 13, p_r=0.5),
+                             prefetch=prefetch)
     return remote.ledger.latency_seconds(TIER, prefetch=prefetch)
 
 
 def _ems(prefetch):
     remote = RemoteMemory(TIER)
     ids = make_key_pages(remote, 256, 8, seed=3)
-    ems_sort(remote, ids, EMSPlan(m=12, k=4, r_in=ems_split_opt(4)),
-             rows_per_page=8, prefetch=prefetch, count_run_formation=False)
+    registry.get("ems").run(remote, ids,
+                            EMSPlan(m=12, k=4, r_in=ems_split_opt(4)),
+                            rows_per_page=8, prefetch=prefetch,
+                            count_run_formation=False)
     return remote.ledger.latency_seconds(TIER, prefetch=prefetch)
 
 
@@ -38,8 +42,10 @@ def _ehj(prefetch):
     remote = RemoteMemory(TIER)
     build = make_relation(remote, 96 * 8, 8, 64, seed=4)
     probe = make_relation(remote, 192 * 8, 8, 64, seed=5)
-    ehj(remote, build, probe, ehj_plan(96, 192, 64, 24, 16, 0.5),
-        prefetch=prefetch)
+    plan = plan_operator(
+        "ehj", WorkloadStats(size_r=96, size_s=192, out=64,
+                             partitions=16, sigma=0.5), TIER, 24)
+    registry.get("ehj").run(remote, build, probe, plan, prefetch=prefetch)
     return remote.ledger.latency_seconds(TIER, prefetch=prefetch)
 
 

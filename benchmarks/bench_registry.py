@@ -1,0 +1,47 @@
+"""Engine registry smoke bench: one planning entry point for every operator.
+
+Derived values: registered operator/policy coverage (every policy of every
+operator plans successfully on every Table I and TESTBED tier) and the
+planning cost per operator in microseconds.  Agreement with the per-operator
+closed forms is regression-tested in tests/test_engine.py.
+"""
+
+from __future__ import annotations
+
+from repro.core import TABLE_I, TESTBED
+from repro.engine import WorkloadStats, plan_operator, registry
+from benchmarks.common import Row, timed
+
+STATS = WorkloadStats(size_r=200, size_s=400, out=64, selectivity=1 / 512,
+                      partitions=16, sigma=0.5, k_cap=8)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    tiers = list(TABLE_I.values()) + list(TESTBED.values())
+
+    def plan_everything():
+        n = 0
+        for op in registry.names():
+            spec = registry.get(op)
+            for policy in spec.policies:
+                for tier in tiers:
+                    plan = plan_operator(op, STATS, tier, 24, policy=policy)
+                    assert isinstance(plan, spec.plan_type) and plan.op == op
+                    n += 1
+        return n
+
+    us, n_plans = timed(plan_everything, repeats=3)
+    rows.append((f"registry_{len(registry.names())}ops_policy_tier_coverage",
+                 us, n_plans))
+
+    for op, m in (("bnlj", 13), ("ems", 12), ("ehj", 24)):
+        us, _ = timed(lambda op=op, m=m: plan_operator(op, STATS, "tcp", m),
+                      repeats=50)
+        rows.append((f"registry_plan_{op}_us", us, 0.0))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

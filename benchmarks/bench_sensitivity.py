@@ -14,8 +14,8 @@ import dataclasses
 
 from repro.core import TABLE_I, TESTBED
 from repro.core.cost_model import TierSpec
-from repro.core.policies import BNLJPlan, bnlj_conventional, bnlj_plan
-from repro.remote import RemoteMemory, bnlj, make_relation
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory, make_relation
 from benchmarks.common import Row, timed
 
 BASE = TABLE_I["tcp"]
@@ -32,13 +32,14 @@ def _advantage(m: float, tier: TierSpec, r_pages=40, s_pages=80) -> float:
         remote = RemoteMemory(tier)
         outer = make_relation(remote, r_pages * 8, 8, 1024, seed=11)
         inner = make_relation(remote, s_pages * 8, 8, 1024, seed=12)
-        bnlj(remote, outer, inner, plan)
+        registry.get("bnlj").run(remote, outer, inner, plan)
         return remote.latency_seconds()
 
     if s_pages + 2 <= m:  # in-memory fast path: both engines converge
         return 0.0
-    lat_conv = one(bnlj_conventional(m))
-    lat_remop = one(bnlj_plan(m, tier.tau_pages, selectivity=1 / 1024))
+    stats = WorkloadStats(size_r=r_pages, size_s=s_pages, selectivity=1 / 1024)
+    lat_conv = one(plan_operator("bnlj", stats, tier, m, policy="conventional"))
+    lat_remop = one(plan_operator("bnlj", stats, tier, m))
     return 1 - lat_remop / lat_conv
 
 

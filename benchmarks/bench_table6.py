@@ -7,7 +7,9 @@ configurations (target ~ 0: Cauchy-Schwarz is exact).
 
 from __future__ import annotations
 
-from repro.core.policies import ehj_optimal_round_costs, ehj_plan, ehj_round_costs
+from repro.core import TABLE_I
+from repro.core.policies import ehj_optimal_round_costs, ehj_round_costs
+from repro.engine import WorkloadStats, plan_operator
 from benchmarks.common import Row, timed
 
 
@@ -18,7 +20,11 @@ def run() -> list[Row]:
     def check_all():
         worst = 0.0
         for sigma, parts in grid:
-            plan = ehj_plan(b, q, out, m_b, parts, sigma)
+            plan = plan_operator(
+                "ehj",
+                WorkloadStats(size_r=b, size_s=q, out=out,
+                              partitions=parts, sigma=sigma),
+                TABLE_I["tcp"], m_b)
             got = ehj_round_costs(b, q, out, plan)
             want = ehj_optimal_round_costs(b, q, out, m_b, parts, sigma)
             for g, w in zip(got, want):

@@ -1,4 +1,10 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# All *policy* planning in the harness goes through the engine registry
+# (`repro.engine.plan_operator`); no bench module imports the per-operator
+# policy constructors (bnlj_plan/ems_plan/ehj_plan/...) directly.  Sweep
+# benches still build explicit BNLJPlan/EMSPlan grid points by hand — those
+# are plan-space coordinates, not policies.
 from __future__ import annotations
 
 import sys
@@ -6,11 +12,12 @@ import traceback
 
 from benchmarks import (bench_bnlj, bench_cost_model, bench_ehj, bench_ems,
                         bench_endtoend, bench_kernel_policy, bench_prefetch,
-                        bench_sensitivity, bench_table3, bench_table4,
-                        bench_table6)
+                        bench_registry, bench_sensitivity, bench_table3,
+                        bench_table4, bench_table6)
 from benchmarks.common import emit
 
 MODULES = [
+    ("engine_registry", bench_registry),
     ("table1_eq1", bench_cost_model),
     ("table3", bench_table3),
     ("table4", bench_table4),

@@ -8,10 +8,10 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.core import TABLE_I, latency_cost
-from repro.core.policies import (bnlj_conventional, bnlj_plan, ems_kopt,
-                                 bnlj_costs_exact)
+from repro.core.policies import bnlj_costs_exact, ems_kopt
 from repro.core.planner import conventional_matmul_tiles, plan_matmul_tiles
-from repro.remote import RemoteMemory, bnlj, make_relation
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory, make_relation
 
 # --- 1. the cost model -------------------------------------------------------
 tcp = TABLE_I["tcp"]
@@ -29,10 +29,11 @@ print(f"EMS optimal fan-in at alpha=16: k* = {ems_kopt(16)} (paper Table IV: 17)
 remote = RemoteMemory(tcp)
 outer = make_relation(remote, 60 * 8, 8, key_domain=256, seed=0)
 inner = make_relation(remote, 120 * 8, 8, key_domain=256, seed=1)
-for name, plan in [("conventional", bnlj_conventional(13)),
-                   ("remop", bnlj_plan(13, tcp.tau_pages, 1 / 256))]:
+stats = WorkloadStats(size_r=60, size_s=120, selectivity=1 / 256)
+for name in ("conventional", "remop"):
+    plan = plan_operator("bnlj", stats, tcp, 13, policy=name)
     remote.reset_accounting()
-    res = bnlj(remote, outer, inner, plan)
+    res = registry.get("bnlj").run(remote, outer, inner, plan)
     print(f"BNLJ[{name:12s}] rounds={res.c_read + res.c_write:5d} "
           f"pages={res.d_read + res.d_write:7.0f} "
           f"sim latency={remote.latency_seconds()*1e3:8.1f} ms "

@@ -8,9 +8,8 @@ Run:  PYTHONPATH=src python examples/remote_operator_demo.py
 """
 
 from repro.core import TABLE_I
-from repro.core.policies import (EHJPlan, EMSPlan, bnlj_conventional,
-                                 bnlj_plan, ehj_plan, ems_duckdb, ems_plan)
-from repro.remote import RemoteMemory, bnlj, ehj, ems_sort, make_relation
+from repro.engine import WorkloadStats, plan_operator, registry
+from repro.remote import RemoteMemory, make_relation
 from repro.remote.simulator import make_key_pages
 
 M, M_B = 13.0, 24.0
@@ -20,21 +19,21 @@ def run_bnlj(remote, plan, prefetch=False):
     outer = make_relation(remote, 60 * 8, 8, 512, seed=0)
     inner = make_relation(remote, 120 * 8, 8, 512, seed=1)
     remote.reset_accounting()
-    bnlj(remote, outer, inner, plan, prefetch=prefetch)
+    registry.get("bnlj").run(remote, outer, inner, plan, prefetch=prefetch)
 
 
 def run_ems(remote, plan, prefetch=False):
     ids = make_key_pages(remote, 128, 8, seed=2)
     remote.reset_accounting()
-    ems_sort(remote, ids, plan, rows_per_page=8, prefetch=prefetch,
-             count_run_formation=False)
+    registry.get("ems").run(remote, ids, plan, rows_per_page=8,
+                            prefetch=prefetch, count_run_formation=False)
 
 
 def run_ehj(remote, plan, prefetch=False):
     build = make_relation(remote, 48 * 8, 8, 64, seed=3)
     probe = make_relation(remote, 96 * 8, 8, 64, seed=4)
     remote.reset_accounting()
-    ehj(remote, build, probe, plan, prefetch=prefetch)
+    registry.get("ehj").run(remote, build, probe, plan, prefetch=prefetch)
 
 
 def main():
@@ -42,21 +41,25 @@ def main():
         tier = TABLE_I[tier_name]
         tau = tier.tau_pages
         print(f"\n=== tier {tier_name}: tau = {tau:.3f} pages ===")
+        bnlj_stats = WorkloadStats(size_r=60, size_s=120, selectivity=1 / 512)
+        ems_stats = WorkloadStats(size_r=128, k_cap=8)
+        ehj_stats = WorkloadStats(size_r=48, size_s=96, out=36,
+                                  partitions=16, sigma=0.5)
         ops = {
             "bnlj": (run_bnlj, {
-                "conventional": bnlj_conventional(M),
-                "remop": bnlj_plan(M, tau, 1 / 512),
+                "conventional": plan_operator("bnlj", bnlj_stats, tier, M,
+                                              policy="conventional"),
+                "remop": plan_operator("bnlj", bnlj_stats, tier, M),
             }),
             "ems": (run_ems, {
-                "duckdb-2way": ems_duckdb(M),
-                "remop": ems_plan(128, M, tau, k_cap=8),
+                "duckdb-2way": plan_operator("ems", ems_stats, tier, M,
+                                             policy="duckdb"),
+                "remop": plan_operator("ems", ems_stats, tier, M),
             }),
             "ehj": (run_ehj, {
-                "starved-pools": EHJPlan(m_b=M_B, partitions=16, sigma=0.5,
-                                         p1=(M_B - 1, 1.0),
-                                         p2=(M_B - 2, 1.0, 1.0),
-                                         p3=(M_B - 1, 1.0)),
-                "remop": ehj_plan(48, 96, 36, M_B, 16, 0.5),
+                "starved-pools": plan_operator("ehj", ehj_stats, tier, M_B,
+                                               policy="conventional"),
+                "remop": plan_operator("ehj", ehj_stats, tier, M_B),
             }),
         }
         for op_name, (runner, plans) in ops.items():

@@ -2,6 +2,8 @@
 
 Layers:
   core/        cost model L = D + tau*C, policies (Prop. 4/5/6), TPU planner
+  engine/      shared spill engine: buffer pools, page cursors, transfer
+               scheduler, operator/plan registry (plan_operator entry point)
   remote/      faithful paper reproduction over a simulated remote-memory tier
   models/      assigned architectures (dense/MoE/SSM/hybrid/enc-dec/VLM/audio)
   kernels/     Pallas TPU kernels sized by the REMOP planner

@@ -5,6 +5,7 @@ from repro.core.cost_model import (
     TESTBED,
     TPU_TIERS,
     TPU_V5E,
+    LedgerSnapshot,
     TierSpec,
     TPUSpec,
     TransferLedger,
@@ -16,7 +17,7 @@ from repro.core import policies, planner, roofline
 
 __all__ = [
     "TABLE_I", "TESTBED", "TPU_TIERS", "TPU_V5E",
-    "TierSpec", "TPUSpec", "TransferLedger",
+    "LedgerSnapshot", "TierSpec", "TPUSpec", "TransferLedger",
     "alpha", "beta", "latency_cost",
     "policies", "planner", "roofline",
 ]

@@ -130,6 +130,34 @@ TPU_V5E = TPUSpec()
 # --------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class LedgerSnapshot:
+    """Immutable point-in-time copy of a :class:`TransferLedger`.
+
+    Produced by ``TransferLedger.snapshot()``; ``TransferLedger.delta`` turns
+    two snapshots (or the live ledger and one snapshot) into the D/C counts
+    attributable to a region of execution.  Operators report their per-call
+    accounting this way instead of copying the mutable ledger.
+    """
+
+    d_read: float = 0.0
+    d_write: float = 0.0
+    c_read: int = 0
+    c_write: int = 0
+    c_prefetch_hidden: int = 0
+
+    @property
+    def d_total(self) -> float:
+        return self.d_read + self.d_write
+
+    @property
+    def c_total(self) -> int:
+        return self.c_read + self.c_write
+
+    def latency_cost(self, tau: float) -> float:
+        return latency_cost(self.d_total, self.c_total, tau)
+
+
 @dataclasses.dataclass
 class TransferLedger:
     """Counts transferred pages (D) and transfer rounds (C), split by direction.
@@ -162,6 +190,26 @@ class TransferLedger:
     def write(self, pages: float) -> None:
         self.d_write += pages
         self.c_write += 1
+
+    def snapshot(self) -> LedgerSnapshot:
+        """Freeze the current counters (Definition 1/2 state) for later deltas."""
+        return LedgerSnapshot(
+            d_read=self.d_read,
+            d_write=self.d_write,
+            c_read=self.c_read,
+            c_write=self.c_write,
+            c_prefetch_hidden=self.c_prefetch_hidden,
+        )
+
+    def delta(self, since: LedgerSnapshot) -> LedgerSnapshot:
+        """Counters accumulated since ``since`` (a prior ``snapshot()``)."""
+        return LedgerSnapshot(
+            d_read=self.d_read - since.d_read,
+            d_write=self.d_write - since.d_write,
+            c_read=self.c_read - since.c_read,
+            c_write=self.c_write - since.c_write,
+            c_prefetch_hidden=self.c_prefetch_hidden - since.c_prefetch_hidden,
+        )
 
     def merge(self, other: "TransferLedger") -> None:
         self.d_read += other.d_read

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import ClassVar, List, Sequence, Tuple
 
 # ==========================================================================
 # Generic allocator (Property 6 machinery)
@@ -80,6 +80,7 @@ def _golden_min(f, lo: float, hi: float, iters: int = 200) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class BNLJPlan:
+    op: ClassVar[str] = "bnlj"  # engine.registry.OperatorPlan tag
     m: float  # total budget (pages)
     r_in: float  # input-region fraction
     p_r: float  # outer fraction of the input region
@@ -196,6 +197,7 @@ def bnlj_conventional(m: float) -> BNLJPlan:
 
 @dataclasses.dataclass(frozen=True)
 class EMSPlan:
+    op: ClassVar[str] = "ems"  # engine.registry.OperatorPlan tag
     m: float
     k: int
     r_in: float
@@ -317,6 +319,7 @@ def ems_duckdb(m: float) -> EMSPlan:
 
 @dataclasses.dataclass(frozen=True)
 class EHJPlan:
+    op: ClassVar[str] = "ehj"  # engine.registry.OperatorPlan tag
     m_b: float  # I/O buffer-pool budget (pages)
     partitions: int  # radix P
     sigma: float  # spilled partition fraction (system-determined)
@@ -355,6 +358,19 @@ def ehj_plan(
     return EHJPlan(
         m_b=m_b, partitions=partitions, sigma=sigma,
         p1=tuple(a1), p2=tuple(a2), p3=tuple(a3),
+    )
+
+
+def ehj_starved(m_b: float, partitions: int, sigma: float) -> EHJPlan:
+    """Disk-oriented baseline: maximal read block, 1-page write pools.
+
+    The DuckDB-default analogue the paper compares Property 6 against
+    (Table VII): nearly the whole budget goes to the read block while every
+    write/staging/output pool gets a single page.
+    """
+    return EHJPlan(
+        m_b=m_b, partitions=partitions, sigma=sigma,
+        p1=(m_b - 1.0, 1.0), p2=(m_b - 2.0, 1.0, 1.0), p3=(m_b - 1.0, 1.0),
     )
 
 

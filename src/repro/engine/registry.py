@@ -1,0 +1,194 @@
+"""Operator/plan registry: one entry point for planning every spill operator.
+
+Benchmarks, examples, and future query layers plan through
+
+    plan_operator("bnlj" | "ems" | "ehj", stats, tier, m_pages, policy=...)
+
+instead of importing per-operator constructors.  Each registered
+:class:`OperatorSpec` bundles the plan type, the available buffer policies
+(REMOP optimum plus the paper's baselines), the data-plane runner, and the
+correctness oracle, so adding an operator (external aggregation, a new tier
+stack) is one ``register()`` call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, Union, runtime_checkable
+
+from repro.core.cost_model import TABLE_I, TESTBED, TPU_TIERS, TierSpec
+from repro.core.policies import (
+    BNLJPlan,
+    EHJPlan,
+    EMSPlan,
+    bnlj_conventional,
+    bnlj_plan,
+    ehj_plan,
+    ehj_starved,
+    ems_conventional,
+    ems_duckdb,
+    ems_plan,
+)
+
+
+@runtime_checkable
+class OperatorPlan(Protocol):
+    """A buffer plan for one spill operator; ``op`` names its registry entry."""
+
+    op: str
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadStats:
+    """Operator-independent workload description; all sizes in pages.
+
+    ``size_r`` is the primary input (BNLJ outer, EMS sort input, EHJ build),
+    ``size_s`` the secondary (inner / probe), ``out`` the output estimate.
+    ``selectivity`` is the BNLJ join selectivity ``f`` (beta = f*M);
+    ``partitions``/``sigma`` are the EHJ radix count and spilled fraction;
+    ``k_cap`` optionally caps the EMS merge fan-in.
+    """
+
+    size_r: float = 0.0
+    size_s: float = 0.0
+    out: float = 0.0
+    selectivity: float = 0.0
+    partitions: int = 16
+    sigma: float = 0.5
+    k_cap: Optional[int] = None
+
+
+Planner = Callable[[WorkloadStats, float, float, str], OperatorPlan]
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    """Everything the engine knows about one spill operator."""
+
+    name: str
+    plan_type: type
+    policies: Tuple[str, ...]  # first entry is the default ("remop")
+    planner: Planner
+    run: Callable[..., Any]  # data-plane executor over a RemoteMemory
+    oracle: Callable[..., Any]  # accounting-free correctness reference
+
+
+_REGISTRY: Dict[str, OperatorSpec] = {}
+_builtin_registered = False
+
+
+def register(spec: OperatorSpec) -> OperatorSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"operator {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> OperatorSpec:
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown operator {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> Tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_tier(tier: Union[TierSpec, str]) -> TierSpec:
+    """Accept a TierSpec or a tier name from Table I / TESTBED / TPU tiers."""
+    if isinstance(tier, TierSpec):
+        return tier
+    for table in (TABLE_I, TESTBED, TPU_TIERS):
+        if tier in table:
+            return table[tier]
+    known = sorted(set(TABLE_I) | set(TESTBED) | set(TPU_TIERS))
+    raise KeyError(f"unknown tier {tier!r}; known: {known}")
+
+
+def plan_operator(
+    op: str,
+    stats: WorkloadStats,
+    tier: Union[TierSpec, str],
+    m_pages: float,
+    policy: str = "remop",
+) -> OperatorPlan:
+    """Plan ``op``'s buffers for a workload on a tier under one policy.
+
+    ``m_pages`` is the operator's local budget M (the EHJ I/O pool M_B); tau
+    comes from the tier's ``tau_pages``.  ``policy`` selects the REMOP optimum
+    or one of the paper's baselines (see ``get(op).policies``).
+    """
+    spec = get(op)
+    if policy not in spec.policies:
+        raise ValueError(
+            f"operator {op!r} has no policy {policy!r}; available: {spec.policies}"
+        )
+    return spec.planner(stats, resolve_tier(tier).tau_pages, float(m_pages), policy)
+
+
+# --------------------------------------------------------------------------
+# Built-in operators
+# --------------------------------------------------------------------------
+
+
+def _plan_bnlj(stats: WorkloadStats, tau: float, m: float, policy: str) -> BNLJPlan:
+    if policy == "conventional":
+        return bnlj_conventional(m)
+    return bnlj_plan(m, tau, selectivity=stats.selectivity)
+
+
+def _plan_ems(stats: WorkloadStats, tau: float, m: float, policy: str) -> EMSPlan:
+    if policy == "conventional":
+        return ems_conventional(m)
+    if policy == "duckdb":
+        return ems_duckdb(m)
+    return ems_plan(stats.size_r, m, tau, k_cap=stats.k_cap)
+
+
+def _plan_ehj(stats: WorkloadStats, tau: float, m: float, policy: str) -> EHJPlan:
+    if policy == "conventional":
+        return ehj_starved(m, stats.partitions, stats.sigma)
+    return ehj_plan(
+        stats.size_r, stats.size_s, stats.out, m, stats.partitions, stats.sigma
+    )
+
+
+def _ensure_builtin() -> None:
+    """Register the built-in operators on first lookup.
+
+    Deferred (rather than at import) because the operator modules themselves
+    import the engine's buffers/scheduler — eager registration would re-enter
+    a partially-imported module.
+    """
+    global _builtin_registered
+    if _builtin_registered:
+        return
+
+    # The flag is only set once registration succeeds, so a failed deferred
+    # import resurfaces as the real ImportError on the next lookup instead of
+    # a misleading "unknown operator" KeyError.
+    from repro.remote.bnlj import bnlj, bnlj_oracle
+    from repro.remote.ehj import ehj, ehj_oracle
+    from repro.remote.ems import ems_oracle, ems_sort
+
+    register(OperatorSpec(
+        name="bnlj", plan_type=BNLJPlan,
+        policies=("remop", "conventional"),
+        planner=_plan_bnlj, run=bnlj, oracle=bnlj_oracle,
+    ))
+    register(OperatorSpec(
+        name="ems", plan_type=EMSPlan,
+        policies=("remop", "conventional", "duckdb"),
+        planner=_plan_ems, run=ems_sort, oracle=ems_oracle,
+    ))
+    register(OperatorSpec(
+        name="ehj", plan_type=EHJPlan,
+        policies=("remop", "conventional"),
+        planner=_plan_ehj, run=ehj, oracle=ehj_oracle,
+    ))
+    _builtin_registered = True

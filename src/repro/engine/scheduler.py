@@ -1,0 +1,101 @@
+"""Transfer scheduler: the single owner of a remote tier's round accounting.
+
+Every batched read/write an operator issues flows through one
+:class:`TransferScheduler`, which
+
+  * forwards it to the :class:`repro.remote.simulator.RemoteMemory` store as
+    exactly one transfer round (Definition 2),
+  * records §IV-E prefetch hiding in one place: a round issued with
+    ``prefetch=True`` models the double buffer fetching one batch ahead, so
+    its RTT is hidden (``ledger.c_prefetch_hidden``).  Stream consumers
+    (:class:`repro.engine.buffers.PageCursor`) enforce the rule that a
+    stream's *first* round is never marked,
+  * exposes ledger ``snapshot()`` / ``delta()`` so callers report per-region
+    D/C counts without copying the mutable ledger, and
+  * can *coalesce* adjacent read batches into fewer rounds
+    (:meth:`read_coalesced`) when a caller trades buffer space for rounds.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import LedgerSnapshot, TransferLedger
+
+
+class TransferScheduler:
+    """Schedules batched transfer rounds against one remote tier."""
+
+    def __init__(self, remote):
+        self.remote = remote
+
+    # -- ledger accounting ---------------------------------------------------
+
+    @property
+    def ledger(self) -> TransferLedger:
+        return self.remote.ledger
+
+    def snapshot(self) -> LedgerSnapshot:
+        return self.remote.ledger.snapshot()
+
+    def delta(self, since: LedgerSnapshot) -> LedgerSnapshot:
+        return self.remote.ledger.delta(since)
+
+    # -- transfer rounds -----------------------------------------------------
+
+    def read(
+        self,
+        page_ids: Sequence[int],
+        *,
+        prefetch: bool = False,
+    ) -> List[np.ndarray]:
+        """One swap-in round.
+
+        ``prefetch=True`` marks the round as overlapped by the double buffer
+        (its RTT is hidden).  A stream's first round can never be hidden —
+        there is nothing to overlap it with — so stream consumers pass
+        ``prefetch`` only from the second round on (see ``PageCursor``).
+        """
+        if not len(page_ids):
+            return []
+        return self.remote.read_batch(page_ids, prefetched=prefetch)
+
+    def read_coalesced(
+        self,
+        id_batches: Sequence[Sequence[int]],
+        *,
+        max_pages: Optional[int] = None,
+        prefetch: bool = False,
+    ) -> List[np.ndarray]:
+        """Merge adjacent read batches into as few rounds as possible.
+
+        Consecutive batches are fused into rounds of at most ``max_pages``
+        pages (unbounded when ``None``) — batches larger than the bound are
+        split, so a caller can size its local buffer to ``max_pages`` —
+        trading local buffer space for rounds, the engine-level version of
+        REMON's batched fetch.  Returns all pages in the original order.
+        """
+        pages: List[np.ndarray] = []
+        pending: List[int] = []
+        issued = 0
+
+        def flush(ids: List[int]) -> None:
+            nonlocal issued
+            pages.extend(self.read(ids, prefetch=prefetch and issued > 0))
+            issued += 1
+
+        for batch in id_batches:
+            pending.extend(batch)
+            if max_pages is not None:
+                while len(pending) >= max_pages:
+                    flush(pending[:max_pages])
+                    pending = pending[max_pages:]
+        if pending:
+            flush(pending)
+        return pages
+
+    def write(self, pages: Sequence[np.ndarray]) -> List[int]:
+        """One flush-out round; returns the new remote page ids."""
+        return self.remote.write_batch(pages)

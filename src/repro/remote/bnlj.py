@@ -2,18 +2,21 @@
 
 Faithful to §III-A / §IV-B: the budget ``M`` is split into an input region
 (``p_R`` of it pinned for the outer block, the rest cycling inner blocks) and
-an output region flushed when full.  Every block read and output flush is one
-transfer round on the :class:`RemoteMemory` ledger.
+an output region flushed when full.  All round accounting flows through the
+spill engine: block reads are :class:`repro.engine.PageCursor` streams and the
+output region is a single-stream :class:`repro.engine.BufferPool`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 
 from repro.core.policies import BNLJPlan
+from repro.engine.buffers import BufferPool, PageCursor
+from repro.engine.scheduler import TransferScheduler
 from repro.remote.simulator import Relation, RemoteMemory
 
 
@@ -58,57 +61,26 @@ def bnlj(
     p_r = max(1, int(round(plan.outer_pages)))
     p_s = max(1, int(round(plan.inner_pages)))
     r_out = max(1, int(round(plan.output_pages)))
-    rows_per_page = outer.rows_per_page
 
-    before = dataclasses.replace(remote.ledger)
-    out_ids: List[int] = []
-    out_rows = 0
-    out_buf: List[np.ndarray] = []
-    out_buf_rows = 0
+    sched = TransferScheduler(remote)
+    before = sched.snapshot()
+    out_pool = BufferPool(sched, r_out, outer.rows_per_page)
 
-    def flush(force: bool = False) -> None:
-        nonlocal out_buf, out_buf_rows, out_rows
-        while out_buf_rows >= r_out * rows_per_page or (force and out_buf_rows > 0):
-            take = min(out_buf_rows, r_out * rows_per_page)
-            allrows = np.concatenate(out_buf, axis=0)
-            chunk, rest = allrows[:take], allrows[take:]
-            pages = [
-                chunk[i : i + rows_per_page]
-                for i in range(0, len(chunk), rows_per_page)
-            ]
-            out_ids.extend(remote.write_batch(pages))  # 1 write round
-            out_rows += len(chunk)
-            out_buf = [rest] if len(rest) else []
-            out_buf_rows = len(rest)
-            if force and out_buf_rows == 0:
-                break
+    for r_block in PageCursor(sched, outer.page_ids, p_r).blocks():
+        # Inner stream is sequential and predictable: prefetchable (§IV-E);
+        # a fresh cursor per outer block, so its first round is never hidden.
+        for s_block in PageCursor(sched, inner.page_ids, p_s, prefetch=prefetch).blocks():
+            out_pool.add(_block_join(r_block, s_block))
+    out_pool.flush_all()
 
-    n_outer_blocks = (len(outer.page_ids) + p_r - 1) // p_r
-    for bi in range(n_outer_blocks):
-        r_ids = outer.page_ids[bi * p_r : (bi + 1) * p_r]
-        r_pages = remote.read_batch(r_ids)  # 1 read round; block stays pinned
-        r_block = np.concatenate(r_pages, axis=0)
-        n_inner_blocks = (len(inner.page_ids) + p_s - 1) // p_s
-        for bj in range(n_inner_blocks):
-            s_ids = inner.page_ids[bj * p_s : (bj + 1) * p_s]
-            # Inner stream is sequential and predictable: prefetchable (§IV-E).
-            s_pages = remote.read_batch(s_ids, prefetched=prefetch and bj > 0)
-            s_block = np.concatenate(s_pages, axis=0)
-            matched = _block_join(r_block, s_block)
-            if len(matched):
-                out_buf.append(matched)
-                out_buf_rows += len(matched)
-                flush()
-    flush(force=True)
-
-    led = remote.ledger
+    d = sched.delta(before)
     return JoinResult(
-        output_page_ids=out_ids,
-        output_rows=out_rows,
-        d_read=led.d_read - before.d_read,
-        d_write=led.d_write - before.d_write,
-        c_read=led.c_read - before.c_read,
-        c_write=led.c_write - before.c_write,
+        output_page_ids=out_pool.pages(),
+        output_rows=out_pool.rows_flushed,
+        d_read=d.d_read,
+        d_write=d.d_write,
+        c_read=d.c_read,
+        c_write=d.c_write,
     )
 
 

@@ -5,8 +5,10 @@ fraction ``sigma`` of partitions spill.  Phase P1 partitions the build side
 (resident partitions become in-memory hash tables, spilled tuples flush
 through the R_w write pool); P2 partitions the probe side (resident tuples
 probe on the fly, spilled tuples stage through R_s, resident output through
-R_o); P3 re-reads each spilled pair and joins it.  Buffer pools obey the plan;
-every block read / pool flush is one transfer round.
+R_o); P3 re-reads each spilled pair and joins it.  The R_w/R_s/R_o pools are
+per-partition-sliced :class:`repro.engine.BufferPool` instances and every
+block read is a :class:`repro.engine.PageCursor` round, so the ledger counts
+match the Table V terms.
 """
 
 from __future__ import annotations
@@ -17,6 +19,8 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.policies import EHJPlan
+from repro.engine.buffers import BufferPool, PageCursor
+from repro.engine.scheduler import TransferScheduler
 from repro.remote.bnlj import _block_join
 from repro.remote.simulator import Relation, RemoteMemory, relation_rows
 
@@ -32,51 +36,6 @@ class HashJoinResult:
     per_phase_rounds: Dict[str, int]
 
 
-class _PartitionPool:
-    """A write pool divided into per-partition slices (R_w / R_s / R_o).
-
-    §III-C: a pool of ``capacity_pages`` shared by ``n_streams`` partitions
-    gives each a slice of ``capacity/n_streams`` pages; when a slice fills it
-    is flushed in one batched write round, so a stream of V pages costs
-    ~ V / (capacity/n_streams) rounds — the sigma^2*P*|B|/R_w term.
-    """
-
-    def __init__(self, remote: RemoteMemory, capacity_pages: float,
-                 rows_per_page: int, n_streams: int = 1):
-        self.remote = remote
-        slice_pages = max(1, int(capacity_pages / max(n_streams, 1)))
-        self.slice_rows = slice_pages * rows_per_page
-        self.rows_per_page = rows_per_page
-        self.buffers: Dict[int, List[np.ndarray]] = {}
-        self.buffered: Dict[int, int] = {}
-        self.out_pages: Dict[int, List[int]] = {}
-        self.flushes = 0
-
-    def add(self, pid: int, rows: np.ndarray) -> None:
-        if not len(rows):
-            return
-        self.buffers.setdefault(pid, []).append(rows)
-        self.buffered[pid] = self.buffered.get(pid, 0) + len(rows)
-        while self.buffered[pid] >= self.slice_rows:
-            self._flush(pid, self.slice_rows)
-
-    def _flush(self, pid: int, take_rows: int | None = None) -> None:
-        rows = np.concatenate(self.buffers.pop(pid), axis=0)
-        take = len(rows) if take_rows is None else min(take_rows, len(rows))
-        chunk, rest = rows[:take], rows[take:]
-        self.buffered[pid] = len(rest)
-        if len(rest):
-            self.buffers[pid] = [rest]
-        pages = [chunk[i : i + self.rows_per_page] for i in range(0, len(chunk), self.rows_per_page)]
-        self.out_pages.setdefault(pid, []).extend(self.remote.write_batch(pages))
-        self.flushes += 1
-
-    def flush_all(self) -> None:
-        for pid in list(self.buffers):
-            if self.buffered.get(pid, 0):
-                self._flush(pid)
-
-
 def ehj(
     remote: RemoteMemory,
     build: Relation,
@@ -90,31 +49,27 @@ def ehj(
     p = plan.partitions
     n_spilled = int(round(plan.sigma * p))
     spilled = set(range(p - n_spilled, p))  # deterministic spill set
-    before = dataclasses.replace(remote.ledger)
+    sched = TransferScheduler(remote)
+    before = sched.snapshot()
     phase_rounds: Dict[str, int] = {}
-
-    def snapshot() -> int:
-        return remote.ledger.c_total
 
     def hash_part(keys: np.ndarray) -> np.ndarray:
         h = keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
         return ((h >> np.uint64(33)) % np.uint64(p)).astype(np.int64)
 
     # ---- P1: partition build, build resident tables, spill the rest -------
-    t0 = snapshot()
+    t0 = sched.snapshot()
     r_r1, r_w1 = plan.p1
-    read_pages = max(1, int(round(r_r1)))
-    build_pool = _PartitionPool(remote, r_w1, rows_per_page, n_streams=max(len(spilled), 1))
+    build_pool = BufferPool(sched, r_w1, rows_per_page,
+                            n_streams=max(len(spilled), 1))
     resident_build: Dict[int, List[np.ndarray]] = {q: [] for q in range(p) if q not in spilled}
-    for start in range(0, len(build.page_ids), read_pages):
-        ids = build.page_ids[start : start + read_pages]
-        pages = remote.read_batch(ids, prefetched=prefetch and start > 0)
-        rows = np.concatenate(pages, axis=0)
+    for rows in PageCursor(sched, build.page_ids, round(r_r1),
+                           prefetch=prefetch).blocks():
         parts = hash_part(rows[:, 0])
         for q in np.unique(parts):
             sel = rows[parts == q]
             if int(q) in spilled:
-                build_pool.add(int(q), sel)
+                build_pool.add(sel, stream=int(q))
             else:
                 resident_build[int(q)].append(sel)
     build_pool.flush_all()
@@ -122,68 +77,59 @@ def ehj(
         q: (np.concatenate(v, axis=0) if v else np.empty((0, 2), dtype=np.int64))
         for q, v in resident_build.items()
     }
-    phase_rounds["P1"] = snapshot() - t0
+    phase_rounds["P1"] = sched.delta(t0).c_total
 
     # ---- P2: partition probe; probe resident, stage spilled ----------------
-    t0 = snapshot()
+    t0 = sched.snapshot()
     r_r2, r_s2, r_o2 = plan.p2
-    read_pages = max(1, int(round(r_r2)))
-    stage_pool = _PartitionPool(remote, r_s2, rows_per_page, n_streams=max(len(spilled), 1))
-    out_pool = _PartitionPool(remote, r_o2, rows_per_page)
+    stage_pool = BufferPool(sched, r_s2, rows_per_page,
+                            n_streams=max(len(spilled), 1))
+    out_pool = BufferPool(sched, r_o2, rows_per_page)
     output_rows = 0
-    for start in range(0, len(probe.page_ids), read_pages):
-        ids = probe.page_ids[start : start + read_pages]
-        pages = remote.read_batch(ids, prefetched=prefetch and start > 0)
-        rows = np.concatenate(pages, axis=0)
+    for rows in PageCursor(sched, probe.page_ids, round(r_r2),
+                           prefetch=prefetch).blocks():
         parts = hash_part(rows[:, 0])
         for q in np.unique(parts):
             sel = rows[parts == q]
             if int(q) in spilled:
-                stage_pool.add(int(q), sel)
+                stage_pool.add(sel, stream=int(q))
             else:
                 matched = _block_join(resident_tables[int(q)], sel)
                 if len(matched):
                     output_rows += len(matched)
-                    out_pool.add(p, matched)  # single resident-output stream
+                    out_pool.add(matched)  # single resident-output stream
     stage_pool.flush_all()
-    phase_rounds["P2"] = snapshot() - t0
+    phase_rounds["P2"] = sched.delta(t0).c_total
 
     # ---- P3: external rounds over spilled pairs ----------------------------
-    t0 = snapshot()
+    t0 = sched.snapshot()
     r_r3, r_o3 = plan.p3
-    read_pages = max(1, int(round(r_r3)))
-    ext_out_pool = _PartitionPool(remote, r_o3, rows_per_page)
+    read_pages = round(r_r3)
+    ext_out_pool = BufferPool(sched, r_o3, rows_per_page)
     for q in sorted(spilled):
-        b_ids = build_pool.out_pages.get(q, [])
-        q_ids = stage_pool.out_pages.get(q, [])
+        b_ids = build_pool.pages(q)
+        q_ids = stage_pool.pages(q)
         if not b_ids or not q_ids:
             continue
-        b_rows_parts = []
-        for start in range(0, len(b_ids), read_pages):
-            b_rows_parts.extend(
-                remote.read_batch(b_ids[start : start + read_pages],
-                                  prefetched=prefetch and start > 0)
-            )
-        b_rows = np.concatenate(b_rows_parts, axis=0)
-        for start in range(0, len(q_ids), read_pages):
-            q_pages = remote.read_batch(q_ids[start : start + read_pages],
-                                        prefetched=prefetch and start > 0)
-            matched = _block_join(b_rows, np.concatenate(q_pages, axis=0))
+        b_rows = PageCursor(sched, b_ids, read_pages, prefetch=prefetch).read_all()
+        for q_rows in PageCursor(sched, q_ids, read_pages,
+                                 prefetch=prefetch).blocks():
+            matched = _block_join(b_rows, q_rows)
             if len(matched):
                 output_rows += len(matched)
-                ext_out_pool.add(q, matched)
+                ext_out_pool.add(matched, stream=q)
     out_pool.flush_all()
     ext_out_pool.flush_all()
-    phase_rounds["P3"] = snapshot() - t0
+    phase_rounds["P3"] = sched.delta(t0).c_total
 
-    led = remote.ledger
+    d = sched.delta(before)
     return HashJoinResult(
         output_rows=output_rows,
         sigma=plan.sigma,
-        d_read=led.d_read - before.d_read,
-        d_write=led.d_write - before.d_write,
-        c_read=led.c_read - before.c_read,
-        c_write=led.c_write - before.c_write,
+        d_read=d.d_read,
+        d_write=d.d_write,
+        c_read=d.c_read,
+        c_write=d.c_write,
         per_phase_rounds=phase_rounds,
     )
 

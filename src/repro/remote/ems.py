@@ -2,9 +2,11 @@
 
 Run formation sorts M-page chunks in "local memory" and writes them back as
 sorted runs; the merge phase merges groups of ``k`` runs through per-run input
-buffers of ``floor(R_in/k)`` pages and an ``R_out``-page output buffer.  Every
-refill and every output flush is one transfer round, exactly as analysed in
-§III-B (and the §II-C worked example).
+buffers of ``floor(R_in/k)`` pages and an ``R_out``-page output buffer.  Each
+run streams through a :class:`repro.engine.PageCursor` (one refill = one read
+round) and the output region is a :class:`repro.engine.BufferPool` (one slice
+flush = one write round), exactly as analysed in §III-B (and the §II-C worked
+example).
 """
 
 from __future__ import annotations
@@ -15,6 +17,8 @@ from typing import List
 import numpy as np
 
 from repro.core.policies import EMSPlan
+from repro.engine.buffers import BufferPool, PageCursor
+from repro.engine.scheduler import TransferScheduler
 from repro.remote.simulator import RemoteMemory
 
 
@@ -28,54 +32,8 @@ class SortResult:
     c_write: int
 
 
-class _RunCursor:
-    """Streams one sorted run through a per-run input buffer."""
-
-    def __init__(self, remote: RemoteMemory, page_ids: List[int], buf_pages: int,
-                 prefetch: bool):
-        self.remote = remote
-        self.page_ids = page_ids
-        self.buf_pages = max(1, buf_pages)
-        self.pos = 0
-        self.buf = np.empty((0,), dtype=np.int64)
-        self.refills = 0
-        self.prefetch = prefetch
-
-    @property
-    def exhausted(self) -> bool:
-        return self.pos >= len(self.page_ids) and len(self.buf) == 0
-
-    def refill(self) -> None:
-        """One read round: load the next buf_pages pages of this run."""
-        if self.pos >= len(self.page_ids) or len(self.buf) > 0:
-            return
-        ids = self.page_ids[self.pos : self.pos + self.buf_pages]
-        pages = self.remote.read_batch(ids, prefetched=self.prefetch and self.pos > 0)
-        self.pos += len(ids)
-        self.refills += 1
-        self.buf = np.concatenate([p.ravel() for p in pages])
-
-    def safe_bound(self) -> int | None:
-        """Largest key below which this run cannot produce unseen elements."""
-        if len(self.buf) == 0:
-            return None
-        if self.pos >= len(self.page_ids):
-            return None  # fully buffered: no bound needed
-        return int(self.buf[-1])
-
-    def take_upto(self, bound: int | None) -> np.ndarray:
-        if len(self.buf) == 0:
-            return self.buf
-        if bound is None:
-            out, self.buf = self.buf, self.buf[:0]
-            return out
-        idx = np.searchsorted(self.buf, bound, side="right")
-        out, self.buf = self.buf[:idx], self.buf[idx:]
-        return out
-
-
 def _merge_group(
-    remote: RemoteMemory,
+    sched: TransferScheduler,
     runs: List[List[int]],
     plan: EMSPlan,
     rows_per_page: int,
@@ -84,26 +42,15 @@ def _merge_group(
     """Merge up to k runs into one; returns the new run's page ids."""
     per_run = max(1, int(plan.input_pages) // max(len(runs), 1))
     r_out = max(1, int(round(plan.output_pages)))
-    cursors = [_RunCursor(remote, r, per_run, prefetch) for r in runs]
-    out_ids: List[int] = []
-    pending = np.empty((0,), dtype=np.int64)
-
-    def flush(force: bool = False) -> None:
-        nonlocal pending
-        cap = r_out * rows_per_page
-        while len(pending) >= cap or (force and len(pending) > 0):
-            take = min(len(pending), cap)
-            chunk, pending = pending[:take], pending[take:]
-            pages = [chunk[i : i + rows_per_page] for i in range(0, len(chunk), rows_per_page)]
-            out_ids.extend(remote.write_batch(pages))  # 1 write round
-            if force and len(pending) == 0:
-                break
+    cursors = [
+        PageCursor(sched, r, per_run, prefetch=prefetch, ravel=True) for r in runs
+    ]
+    out_pool = BufferPool(sched, r_out, rows_per_page)
 
     while True:
         for c in cursors:
-            if len(c.buf) == 0 and c.pos < len(c.page_ids):
-                c.refill()  # 1 read round per refill
-        active = [c for c in cursors if len(c.buf) > 0]
+            c.refill()  # 1 read round per refill; no-op unless buffer is empty
+        active = [c for c in cursors if c.buffered > 0]
         if not active:
             break
         # Emit everything provably below every active run's buffered horizon
@@ -114,13 +61,14 @@ def _merge_group(
         merged = np.sort(np.concatenate(taken), kind="stable")
         if len(merged) == 0:
             # Bound excluded everything buffered: force the binding cursor on.
-            binding = min(active, key=lambda c: c.safe_bound() or np.iinfo(np.int64).max)
-            pending = np.concatenate([pending, np.sort(binding.take_upto(None))])
+            binding = min(
+                active, key=lambda c: c.safe_bound() or np.iinfo(np.int64).max
+            )
+            out_pool.add(np.sort(binding.take_upto(None)))
         else:
-            pending = np.concatenate([pending, merged])
-        flush()
-    flush(force=True)
-    return out_ids
+            out_pool.add(merged)
+    out_pool.flush_all()
+    return out_pool.pages()
 
 
 def ems_sort(
@@ -132,7 +80,8 @@ def ems_sort(
     count_run_formation: bool = True,
 ) -> SortResult:
     """Full external merge sort of the pages' int64 keys under `plan`."""
-    before = dataclasses.replace(remote.ledger)
+    sched = TransferScheduler(remote)
+    before = sched.snapshot()
     m_pages = max(1, int(plan.m))
 
     # ---- run formation: sort M-page chunks locally (§III-B a) -------------
@@ -140,13 +89,13 @@ def ems_sort(
     for start in range(0, len(page_ids), m_pages):
         ids = page_ids[start : start + m_pages]
         if count_run_formation:
-            pages = remote.read_batch(ids)  # 1 round
+            pages = sched.read(ids)  # 1 round
         else:
-            pages = [remote._store[i] for i in ids]
+            pages = remote.peek_batch(ids)
         data = np.sort(np.concatenate([p.ravel() for p in pages]), kind="stable")
         out_pages = [data[i : i + rows_per_page] for i in range(0, len(data), rows_per_page)]
         if count_run_formation:
-            runs.append(remote.write_batch(out_pages))  # 1 round
+            runs.append(sched.write(out_pages))  # 1 round
         else:
             runs.append(remote.put_local(out_pages))
 
@@ -159,21 +108,21 @@ def ems_sort(
             if len(group) == 1:
                 nxt.append(group[0])
             else:
-                nxt.append(_merge_group(remote, group, plan, rows_per_page, prefetch))
+                nxt.append(_merge_group(sched, group, plan, rows_per_page, prefetch))
         runs = nxt
         passes += 1
 
-    led = remote.ledger
+    d = sched.delta(before)
     return SortResult(
         run_page_ids=runs[0] if runs else [],
         passes=passes,
-        d_read=led.d_read - before.d_read,
-        d_write=led.d_write - before.d_write,
-        c_read=led.c_read - before.c_read,
-        c_write=led.c_write - before.c_write,
+        d_read=d.d_read,
+        d_write=d.d_write,
+        c_read=d.c_read,
+        c_write=d.c_write,
     )
 
 
 def ems_oracle(remote: RemoteMemory, page_ids: List[int]) -> np.ndarray:
     """Dense oracle: all keys, fully sorted (no accounting)."""
-    return np.sort(np.concatenate([remote._store[i].ravel() for i in page_ids]))
+    return np.sort(np.concatenate([p.ravel() for p in remote.peek_batch(page_ids)]))

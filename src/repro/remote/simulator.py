@@ -24,13 +24,18 @@ from repro.core.cost_model import TierSpec, TransferLedger
 class RemoteMemory:
     """A remote tier holding pages, with round/volume accounting."""
 
-    def __init__(self, tier: TierSpec, seed: int = 0):
+    def __init__(self, tier: TierSpec):
         self.tier = tier
         self.ledger = TransferLedger()
         self._store: dict[int, np.ndarray] = {}
         self._next_id = 0
 
     # -- allocation ---------------------------------------------------------
+
+    @property
+    def pages_resident(self) -> int:
+        """Number of pages currently held by the remote store."""
+        return len(self._store)
 
     def put_local(self, pages: Sequence[np.ndarray]) -> List[int]:
         """Seed the store without accounting (initial data placement)."""
@@ -40,6 +45,10 @@ class RemoteMemory:
             ids.append(self._next_id)
             self._next_id += 1
         return ids
+
+    def peek_batch(self, page_ids: Sequence[int]) -> List[np.ndarray]:
+        """Oracle-side reads without accounting (no transfer round)."""
+        return [self._store[i] for i in page_ids]
 
     # -- batched transfer rounds ---------------------------------------------
 
@@ -136,4 +145,4 @@ def make_key_pages(
 
 def relation_rows(remote: RemoteMemory, rel: Relation) -> np.ndarray:
     """Oracle-side full materialization (no accounting): rows as one array."""
-    return np.concatenate([remote._store[i] for i in rel.page_ids], axis=0)
+    return np.concatenate(remote.peek_batch(rel.page_ids), axis=0)

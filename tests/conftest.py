@@ -1,0 +1,98 @@
+"""Shared pytest configuration.
+
+Provides a deterministic fallback for ``hypothesis`` when the package is not
+installed (e.g. minimal containers): the property tests then run against a
+fixed pseudo-random sample of each strategy instead of failing collection.
+The fallback covers exactly the strategy surface this suite uses
+(``integers``, ``floats``, ``sampled_from``, ``booleans``, ``lists``) and the
+``@settings(max_examples=..., deadline=...)`` knob; installing the real
+``hypothesis`` (see requirements-dev.txt) transparently takes precedence.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _sampled_from(elements):
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def _lists(elements, min_size=0, max_size=None):
+        hi = min_size + 8 if max_size is None else max_size
+
+        def draw(rng):
+            return [elements.draw(rng) for _ in range(rng.randint(min_size, hi))]
+
+        return _Strategy(draw)
+
+    def _given(**param_strategies):
+        def decorate(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                # Seed from the test name so each test gets a stable, distinct
+                # example stream across runs and processes.
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    kwargs = {
+                        name: strat.draw(rng)
+                        for name, strat in param_strategies.items()
+                    }
+                    try:
+                        fn(**kwargs)
+                    except AssertionError as exc:
+                        raise AssertionError(
+                            f"{exc}\nFalsifying example ({fn.__name__}): {kwargs!r}"
+                        ) from exc
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return decorate
+
+    def _settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.__doc__ = "Deterministic stand-in for hypothesis (see tests/conftest.py)."
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _st.lists = _lists
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

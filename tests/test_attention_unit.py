@@ -4,6 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis (or the tests/conftest.py fallback) is required",
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import (chunked_attention, full_attention, _mask)

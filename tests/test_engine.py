@@ -1,0 +1,307 @@
+"""Unit tests for the shared spill-engine layer (`repro.engine`).
+
+Covers the accounting contract documented in ``repro/engine/__init__.py``:
+ceil-semantics flush rounds for BufferPool, prefetch-hidden accounting for
+PageCursor, ledger snapshot/delta round-trips, read-round coalescing, and the
+operator registry reproducing the legacy per-operator plan constructors.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import TABLE_I, TESTBED
+from repro.core.cost_model import LedgerSnapshot
+from repro.core.policies import (
+    bnlj_conventional, bnlj_plan, ehj_plan, ehj_starved, ems_conventional,
+    ems_duckdb, ems_plan,
+)
+from repro.engine import (
+    BufferPool, PageCursor, TransferScheduler, WorkloadStats, plan_operator,
+    registry,
+)
+from repro.remote import RemoteMemory
+from repro.remote.simulator import make_key_pages
+
+TIER = TESTBED["remon_tcp"]
+ROWS = 8
+
+
+def _mk():
+    remote = RemoteMemory(TIER)
+    return remote, TransferScheduler(remote)
+
+
+# ---------------------------------------------------------------------------
+# BufferPool
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("v_pages,cap_pages", [(1, 1), (7, 2), (16, 4), (17, 4), (40, 7)])
+def test_bufferpool_stream_costs_ceil_rounds(v_pages, cap_pages):
+    """A stream of V pages through a c-page slice costs ceil(V/c) write rounds."""
+    remote, sched = _mk()
+    pool = BufferPool(sched, cap_pages, ROWS)
+    rng = np.random.default_rng(0)
+    total = v_pages * ROWS
+    sent = []
+    done = 0
+    while done < total:  # add in ragged chunks to exercise mid-chunk flushes
+        n = min(int(rng.integers(1, 3 * ROWS)), total - done)
+        chunk = rng.integers(0, 1 << 30, size=(n, 2), dtype=np.int64)
+        pool.add(chunk)
+        sent.append(chunk)
+        done += n
+    pool.flush_all()
+    assert remote.ledger.c_write == math.ceil(v_pages / cap_pages)
+    assert remote.ledger.d_write == v_pages
+    assert pool.rows_flushed == total
+    got = np.concatenate(remote.peek_batch(pool.pages()), axis=0)
+    np.testing.assert_array_equal(got, np.concatenate(sent, axis=0))
+
+
+def test_bufferpool_slices_capacity_across_streams():
+    """n_streams share the pool: slice = floor(capacity/n), per-stream rounds."""
+    remote, sched = _mk()
+    pool = BufferPool(sched, 9, ROWS, n_streams=4)  # slice = 2 pages
+    assert pool.slice_pages == 2
+    for q in range(4):
+        pool.add(np.full((5 * ROWS, 2), q, dtype=np.int64), stream=q)
+    pool.flush_all()
+    # Each stream: 5 pages through a 2-page slice -> ceil(5/2) = 3 rounds.
+    assert remote.ledger.c_write == 4 * 3
+    for q in range(4):
+        pages = remote.peek_batch(pool.pages(q))
+        assert sum(len(p) for p in pages) == 5 * ROWS
+        assert all((p == q).all() for p in pages)
+
+
+def test_bufferpool_flush_all_is_noop_when_empty():
+    remote, sched = _mk()
+    pool = BufferPool(sched, 4, ROWS)
+    pool.add(np.empty((0, 2), dtype=np.int64))
+    pool.flush_all()
+    assert remote.ledger.c_write == 0
+    assert pool.pages() == []
+
+
+# ---------------------------------------------------------------------------
+# PageCursor
+# ---------------------------------------------------------------------------
+
+
+def test_pagecursor_blocks_round_and_prefetch_accounting():
+    """V pages / c-page batches = ceil(V/c) rounds; all but the first hidden."""
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 11, ROWS, seed=1)
+    blocks = list(PageCursor(sched, ids, 3, prefetch=True).blocks())
+    assert len(blocks) == math.ceil(11 / 3)
+    assert remote.ledger.c_read == 4
+    assert remote.ledger.d_read == 11
+    assert remote.ledger.c_prefetch_hidden == 3  # first refill is never hidden
+    got = np.concatenate([b.ravel() for b in blocks])
+    np.testing.assert_array_equal(
+        got, np.concatenate([p.ravel() for p in remote.peek_batch(ids)])
+    )
+
+
+def test_pagecursor_refill_then_blocks_drops_nothing():
+    """Mixing the buffered and block APIs drains the buffer before streaming."""
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 6, ROWS, seed=9)
+    cur = PageCursor(sched, ids, 2, ravel=True)
+    assert cur.refill()  # batch 1 buffered; its round is already charged
+    got = np.concatenate([b.ravel() for b in cur.blocks()])
+    np.testing.assert_array_equal(
+        got, np.concatenate([p.ravel() for p in remote.peek_batch(ids)])
+    )
+    assert remote.ledger.c_read == 3  # the buffered batch is not re-read
+    assert cur.exhausted
+
+
+def test_pagecursor_without_prefetch_hides_nothing():
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 6, ROWS, seed=2)
+    PageCursor(sched, ids, 2).read_all()
+    assert remote.ledger.c_read == 3
+    assert remote.ledger.c_prefetch_hidden == 0
+
+
+def test_pagecursor_streams_are_independent():
+    """Two prefetching cursors each pay one unhidden (first) round."""
+    remote, sched = _mk()
+    a = make_key_pages(remote, 4, ROWS, seed=3)
+    b = make_key_pages(remote, 4, ROWS, seed=4)
+    PageCursor(sched, a, 2, prefetch=True).read_all()
+    PageCursor(sched, b, 2, prefetch=True).read_all()
+    assert remote.ledger.c_read == 4
+    assert remote.ledger.c_prefetch_hidden == 2
+
+
+def test_pagecursor_sorted_run_helpers():
+    remote, sched = _mk()
+    keys = np.arange(4 * ROWS, dtype=np.int64)
+    ids = remote.put_local([keys[i : i + ROWS] for i in range(0, len(keys), ROWS)])
+    cur = PageCursor(sched, ids, 2, ravel=True)
+    assert cur.refill()
+    assert cur.buffered == 2 * ROWS
+    assert cur.safe_bound() == 2 * ROWS - 1  # more pages remain -> bound = buf max
+    np.testing.assert_array_equal(cur.take_upto(4), np.arange(5))
+    np.testing.assert_array_equal(cur.take_upto(None), np.arange(5, 2 * ROWS))
+    assert cur.refill()
+    assert cur.safe_bound() is None  # fully buffered: no bound needed
+    assert not cur.exhausted
+    cur.take_upto(None)
+    assert cur.exhausted
+    assert remote.ledger.c_read == 2
+
+
+# ---------------------------------------------------------------------------
+# TransferScheduler: snapshot/delta + coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_snapshot_delta_roundtrip():
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 10, ROWS, seed=5)
+    sched.read(ids[:4])
+    s0 = sched.snapshot()
+    assert s0 == LedgerSnapshot(d_read=4.0, c_read=1)
+    sched.read(ids[4:6])  # a stream's first round: never marked hidden
+    sched.read(ids[6:], prefetch=True)  # overlapped round: hidden
+    sched.write([np.zeros(ROWS, dtype=np.int64)])
+    d = sched.delta(s0)
+    assert (d.d_read, d.c_read) == (6.0, 2)
+    assert (d.d_write, d.c_write) == (1.0, 1)
+    assert d.c_prefetch_hidden == 1
+    assert d.d_total == 7.0 and d.c_total == 3
+    # Deltas compose: (now - s0) + s0 counters == live ledger.
+    led = remote.ledger
+    assert s0.c_total + d.c_total == led.c_total
+    assert s0.d_total + d.d_total == led.d_total
+    # A snapshot is immutable — later traffic must not leak into it.
+    with pytest.raises(Exception):
+        s0.c_read = 99
+
+
+def test_snapshot_latency_cost_matches_ledger():
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 8, ROWS, seed=6)
+    before = sched.snapshot()
+    sched.read(ids)
+    tau = TIER.tau_pages
+    assert sched.delta(before).latency_cost(tau) == pytest.approx(
+        remote.ledger.latency_cost(tau)
+    )
+
+
+def test_read_coalesced_merges_adjacent_rounds():
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 12, ROWS, seed=7)
+    batches = [ids[i : i + 2] for i in range(0, 12, 2)]  # 6 batches of 2
+
+    pages = sched.read_coalesced(batches, max_pages=4)
+    assert remote.ledger.c_read == 3  # 6 rounds fused into 3
+    assert remote.ledger.d_read == 12
+    np.testing.assert_array_equal(
+        np.concatenate([p.ravel() for p in pages]),
+        np.concatenate([p.ravel() for p in remote.peek_batch(ids)]),
+    )
+
+    remote.reset_accounting()
+    sched.read_coalesced(batches)  # unbounded: one round
+    assert remote.ledger.c_read == 1
+
+    remote.reset_accounting()
+    # A batch larger than the bound is split: rounds never exceed max_pages.
+    pages = sched.read_coalesced([ids[:6], ids[6:]], max_pages=4)
+    assert remote.ledger.c_read == 3
+    assert remote.ledger.d_read == 12
+    np.testing.assert_array_equal(
+        np.concatenate([p.ravel() for p in pages]),
+        np.concatenate([p.ravel() for p in remote.peek_batch(ids)]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry / plan_operator
+# ---------------------------------------------------------------------------
+
+_TIERS = list(TABLE_I.values()) + list(TESTBED.values())
+
+
+@pytest.mark.parametrize("tier", _TIERS, ids=[t.name for t in _TIERS])
+def test_plan_operator_reproduces_legacy_constructors(tier):
+    """Registry planning == the old bnlj_plan/ems_plan/ehj_plan on every tier."""
+    tau = tier.tau_pages
+    stats = WorkloadStats(size_r=200, size_s=400, out=64, selectivity=1 / 512,
+                          partitions=16, sigma=0.5, k_cap=8)
+    assert plan_operator("bnlj", stats, tier, 13) == bnlj_plan(13, tau, 1 / 512)
+    assert plan_operator("bnlj", stats, tier, 13, policy="conventional") == \
+        bnlj_conventional(13)
+    assert plan_operator("ems", stats, tier, 12) == ems_plan(200, 12, tau, k_cap=8)
+    assert plan_operator("ems", stats, tier, 12, policy="duckdb") == ems_duckdb(12)
+    assert plan_operator("ems", stats, tier, 12, policy="conventional") == \
+        ems_conventional(12)
+    assert plan_operator("ehj", stats, tier, 24) == \
+        ehj_plan(200, 400, 64, 24, 16, 0.5)
+    assert plan_operator("ehj", stats, tier, 24, policy="conventional") == \
+        ehj_starved(24, 16, 0.5)
+
+
+def test_plan_operator_accepts_tier_names():
+    stats = WorkloadStats(selectivity=1 / 256)
+    assert plan_operator("bnlj", stats, "tcp", 13) == \
+        plan_operator("bnlj", stats, TABLE_I["tcp"], 13)
+
+
+def test_plan_operator_rejects_unknown_op_policy_tier():
+    stats = WorkloadStats()
+    with pytest.raises(KeyError, match="unknown operator"):
+        plan_operator("external_agg", stats, TIER, 13)
+    with pytest.raises(ValueError, match="no policy"):
+        plan_operator("bnlj", stats, TIER, 13, policy="duckdb")
+    with pytest.raises(KeyError, match="unknown tier"):
+        plan_operator("bnlj", stats, "floppy", 13)
+
+
+def test_registry_specs_are_complete():
+    assert registry.names() == ("bnlj", "ehj", "ems")
+    for name in registry.names():
+        spec = registry.get(name)
+        plan = plan_operator(name, WorkloadStats(size_r=64, size_s=128, out=32),
+                             TIER, 16)
+        assert isinstance(plan, spec.plan_type)
+        assert plan.op == name  # OperatorPlan protocol tag
+        assert spec.policies[0] == "remop"
+        assert callable(spec.run) and callable(spec.oracle)
+
+
+def test_registry_run_matches_oracle_end_to_end():
+    """Registry runner + registry plan produce oracle-identical output."""
+    from repro.remote import make_relation
+
+    remote = RemoteMemory(TIER)
+    outer = make_relation(remote, 20 * ROWS, ROWS, 128, seed=21)
+    inner = make_relation(remote, 40 * ROWS, ROWS, 128, seed=22)
+    spec = registry.get("bnlj")
+    plan = plan_operator("bnlj", WorkloadStats(selectivity=1 / 128), TIER, 11)
+    res = spec.run(remote, outer, inner, plan)
+    assert res.output_rows == len(spec.oracle(remote, outer, inner))
+
+
+# ---------------------------------------------------------------------------
+# RemoteMemory satellite
+# ---------------------------------------------------------------------------
+
+
+def test_pages_resident_tracks_store():
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 5, ROWS, seed=8)
+    assert remote.pages_resident == 5
+    new = sched.write([np.zeros(ROWS, dtype=np.int64)] * 2)
+    assert remote.pages_resident == 7
+    remote.free(ids[:3])
+    assert remote.pages_resident == 4
+    assert remote.peek_batch(new)[0].shape == (ROWS,)

@@ -23,8 +23,8 @@ from repro.remote.simulator import make_key_pages
 TIER = TESTBED["remon_tcp"]
 
 
-def _mk(seed=0):
-    return RemoteMemory(TIER, seed=seed)
+def _mk():
+    return RemoteMemory(TIER)
 
 
 # ---------------------------------------------------------------------------
