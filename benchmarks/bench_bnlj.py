@@ -9,7 +9,7 @@ outer-heavy allocation.  Derived values:
 
 from __future__ import annotations
 
-from repro.core import TABLE_I, TESTBED
+from repro.core import TABLE_I
 from repro.core.policies import BNLJPlan, bnlj_costs_exact
 from repro.engine import WorkloadStats, plan_operator, registry
 from repro.remote import RemoteMemory, make_relation

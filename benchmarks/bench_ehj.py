@@ -8,7 +8,7 @@ the same direction.
 
 from __future__ import annotations
 
-from repro.core import TABLE_I, TESTBED
+from repro.core import TABLE_I
 from repro.engine import WorkloadStats, plan_operator, registry
 from repro.remote import RemoteMemory, make_relation
 from benchmarks.common import Row, timed

@@ -7,7 +7,7 @@ vs the conventional max-fan-in policy, and the exact §II-C round counts.
 
 from __future__ import annotations
 
-from repro.core import TABLE_I, TESTBED
+from repro.core import TABLE_I
 from repro.core.policies import EMSPlan, ems_costs_exact, ems_split_opt
 from repro.engine import WorkloadStats, plan_operator, registry
 from repro.remote import RemoteMemory

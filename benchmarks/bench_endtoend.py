@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 
-from repro.core import TABLE_I, TESTBED
+from repro.core import TABLE_I
 from repro.engine import WorkloadStats, plan_operator, registry
 from repro.remote import RemoteMemory, make_relation
 from repro.remote.simulator import make_key_pages

@@ -64,7 +64,6 @@ def run() -> list[Row]:
     us, bp = timed(buckets)
     per_tensor = plan_grad_buckets(2 * 10 ** 9, 0.050, 16, max_buckets=256)
     naive = 400  # one all-reduce per parameter tensor (~400 tensors)
-    from repro.core.planner import plan_grad_buckets as pgb
     exposed_naive = None
     # evaluate naive exposed via the same model
     ring = 2.0 * 15 / 16

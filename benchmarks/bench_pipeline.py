@@ -1,0 +1,131 @@
+"""Query pipelines under one budget: memory arbiter vs even split.
+
+Composes multi-operator pipelines (the TPC-style spilling-query stand-in) and
+compares the arbiter's budget split against the naive even split, on both the
+modeled latency cost (the quantity the arbiter minimizes) and the *simulated*
+wall latency of running every operator against one shared RemoteMemory.
+
+Besides the usual CSV rows, writes ``BENCH_pipeline.json`` at the repo root —
+the machine-readable perf trajectory artifact CI uploads on every push.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import TABLE_I
+from repro.engine import (
+    WorkloadStats,
+    model_latency,
+    plan_pipeline,
+    run_pipeline,
+)
+from repro.remote import RemoteMemory, make_relation
+from repro.remote.simulator import make_key_pages
+from benchmarks.common import Row, timed
+
+TIER_NAME = "tcp"
+TIER = TABLE_I[TIER_NAME]
+ROWS = 8
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_pipeline.json")
+
+# (name, ops, per-op stats, global budget M, workload builder).
+PIPELINES = [
+    (
+        "join_sort", ["ehj", "ems"],
+        [WorkloadStats(size_r=64, size_s=128, out=48, partitions=8, sigma=0.5),
+         WorkloadStats(size_r=160, k_cap=8)],
+        40.0,
+    ),
+    (
+        "scan_sort_agg", ["bnlj", "ems", "eagg"],
+        [WorkloadStats(size_r=48, size_s=96, out=24, selectivity=1 / 2048),
+         WorkloadStats(size_r=120, k_cap=8),
+         WorkloadStats(size_r=96, out=16, partitions=8, sigma=0.5)],
+        64.0,
+    ),
+]
+
+
+def _workloads(remote, ops, stats, seed=0):
+    built = []
+    for i, (op, st) in enumerate(zip(ops, stats)):
+        s = seed + 10 * i
+        if op in ("bnlj", "ehj"):
+            r = make_relation(remote, int(st.size_r) * ROWS, ROWS, 2048 if op == "bnlj" else 96,
+                              seed=s)
+            q = make_relation(remote, int(st.size_s) * ROWS, ROWS, 2048 if op == "bnlj" else 96,
+                              seed=s + 1)
+            built.append(((r, q), {}))
+        elif op == "ems":
+            built.append(((make_key_pages(remote, int(st.size_r), ROWS, seed=s),),
+                          {"rows_per_page": ROWS}))
+        else:  # eagg
+            built.append(((make_relation(remote, int(st.size_r) * ROWS, ROWS, 128,
+                                         seed=s),), {}))
+    return built
+
+
+def _simulate(pplan, ops, stats) -> float:
+    remote = RemoteMemory(TIER)
+    run_pipeline(remote, pplan, _workloads(remote, ops, stats))
+    return remote.latency_seconds()
+
+
+def run() -> list[Row]:
+    rows_out: list[Row] = []
+    report = {"schema": 1, "tier": TIER_NAME, "pipelines": []}
+    for name, ops, stats, m_total in PIPELINES:
+        arb = plan_pipeline(ops, stats, TIER, m_total)
+        even = [m_total / len(ops)] * len(ops)
+        even_modeled = sum(
+            model_latency(op, st, TIER, m) for op, st, m in zip(ops, stats, even)
+        )
+        even_plan = _even_pipeline(ops, stats, m_total)
+
+        def simulate_pair():
+            return _simulate(arb, ops, stats), _simulate(even_plan, ops, stats)
+
+        us, (lat_arb, lat_even) = timed(simulate_pair, repeats=1)
+        modeled_red = 1 - arb.total_modeled_latency / even_modeled
+        sim_red = 1 - lat_arb / lat_even
+        rows_out.append((f"pipeline_{name}_modeled_latency_reduction_vs_even",
+                         us, round(modeled_red, 4)))
+        rows_out.append((f"pipeline_{name}_sim_latency_reduction_vs_even",
+                         0.0, round(sim_red, 4)))
+        report["pipelines"].append({
+            "name": name,
+            "ops": ops,
+            "m_total": m_total,
+            "budgets": list(arb.budgets),
+            "modeled_latency": {"arbiter": arb.total_modeled_latency,
+                                "even": even_modeled},
+            "simulated_seconds": {"arbiter": lat_arb, "even": lat_even},
+        })
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows_out
+
+
+def _even_pipeline(ops, stats, m_total):
+    """An even-split PipelinePlan built through plan_operator directly."""
+    from repro.engine.pipeline import OperatorBudget, PipelinePlan
+    from repro.engine.registry import plan_operator, resolve_tier
+
+    m = m_total / len(ops)
+    budgets = tuple(
+        OperatorBudget(op=op, stats=st, m_pages=m,
+                       plan=plan_operator(op, st, TIER, m),
+                       modeled_latency=model_latency(op, st, TIER, m))
+        for op, st in zip(ops, stats)
+    )
+    return PipelinePlan(tier=resolve_tier(TIER), m_total=m_total,
+                        policy="remop", ops=budgets)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

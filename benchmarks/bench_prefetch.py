@@ -8,7 +8,7 @@ claim under test.
 
 from __future__ import annotations
 
-from repro.core import TABLE_I, TESTBED
+from repro.core import TABLE_I
 from repro.core.policies import BNLJPlan, EMSPlan, ems_split_opt
 from repro.engine import WorkloadStats, plan_operator, registry
 from repro.remote import RemoteMemory, make_relation

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import TABLE_I, TESTBED
+from repro.core import TABLE_I
 from repro.core.cost_model import TierSpec
 from repro.engine import WorkloadStats, plan_operator, registry
 from repro.remote import RemoteMemory, make_relation

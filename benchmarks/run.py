@@ -1,4 +1,6 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
+# and writes the same rows as machine-readable ``BENCH_run.json`` (plus any
+# per-module BENCH_*.json, e.g. bench_pipeline's) for the CI perf trajectory.
 #
 # All *policy* planning in the harness goes through the engine registry
 # (`repro.engine.plan_operator`); no bench module imports the per-operator
@@ -7,13 +9,17 @@
 # are plan-space coordinates, not policies.
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import traceback
 
-from benchmarks import (bench_bnlj, bench_cost_model, bench_ehj, bench_ems,
-                        bench_endtoend, bench_kernel_policy, bench_prefetch,
-                        bench_registry, bench_sensitivity, bench_table3,
-                        bench_table4, bench_table6)
+from benchmarks import (bench_bnlj, bench_cost_model, bench_eagg, bench_ehj,
+                        bench_ems, bench_endtoend, bench_kernel_policy,
+                        bench_pipeline, bench_prefetch, bench_registry,
+                        bench_sensitivity, bench_table3, bench_table4,
+                        bench_table6)
 from benchmarks.common import emit
 
 MODULES = [
@@ -26,22 +32,49 @@ MODULES = [
     ("fig5_ems", bench_ems),
     ("fig6a_ehj", bench_ehj),
     ("fig6b_prefetch", bench_prefetch),
+    ("eagg", bench_eagg),
     ("fig9_fig12_sensitivity", bench_sensitivity),
     ("fig7_fig8_endtoend", bench_endtoend),
+    ("pipeline_arbiter", bench_pipeline),
     ("tpu_policies", bench_kernel_policy),
 ]
 
+# The CI `bench-smoke` subset: the registry/operator/arbiter surfaces this
+# repo actively grows, fast enough for every push (~tens of seconds).
+QUICK = {"engine_registry", "table1_eq1", "table3", "table4", "table6",
+         "fig6a_ehj", "eagg", "pipeline_arbiter"}
 
-def main() -> None:
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_run.json")
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="run only the fast bench-smoke subset (CI per-push)")
+    args = ap.parse_args(argv)
+    modules = [(t, m) for t, m in MODULES if not args.quick or t in QUICK]
+
     print("name,us_per_call,derived")
     failures = 0
-    for tag, mod in MODULES:
+    report = {"schema": 1, "quick": args.quick, "rows": [], "failed": []}
+    for tag, mod in modules:
         try:
-            emit(mod.run())
+            rows = mod.run()
         except Exception:
             failures += 1
             print(f"{tag}_FAILED,0.0,nan")
+            report["failed"].append(tag)
             traceback.print_exc(file=sys.stderr)
+            continue
+        emit(rows)
+        report["rows"].extend(
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in rows
+        )
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
     if failures:
         sys.exit(1)
 

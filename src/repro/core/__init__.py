@@ -1,4 +1,4 @@
-"""REMOP core: latency cost model, buffer-allocation policies, TPU planner."""
+"""REMOP core: cost model, buffer policies, memory arbiter, TPU planner."""
 
 from repro.core.cost_model import (
     TABLE_I,
@@ -13,11 +13,13 @@ from repro.core.cost_model import (
     beta,
     latency_cost,
 )
-from repro.core import policies, planner, roofline
+from repro.core import arbiter, policies, planner, roofline
+from repro.core.arbiter import ArbiterItem, arbitrate
 
 __all__ = [
     "TABLE_I", "TESTBED", "TPU_TIERS", "TPU_V5E",
     "LedgerSnapshot", "TierSpec", "TPUSpec", "TransferLedger",
     "alpha", "beta", "latency_cost",
-    "policies", "planner", "roofline",
+    "ArbiterItem", "arbitrate",
+    "arbiter", "policies", "planner", "roofline",
 ]

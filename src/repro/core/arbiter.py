@@ -1,0 +1,106 @@
+"""Query-level memory arbiter: split one page budget across a pipeline.
+
+REMOP's §III policies optimize a *single* operator's buffers for a given
+budget M.  A real spilling query runs several operators against one shared
+budget, so the remaining degree of freedom is the split M = sum_i M_i.  The
+arbiter minimizes the total modeled latency cost
+
+    sum_i L_i(M_i)     s.t.  sum_i M_i = M,  M_i >= min_i
+
+where each ``L_i`` is the operator's policy-aware closed-form cost
+(``D + tau*C`` of the plan the policy would pick at budget ``M_i`` — the
+``model`` hook on :class:`repro.engine.registry.OperatorSpec`).  Each L_i is
+(weakly) decreasing and near-convex in M_i, so a greedy marginal-cost descent
+in page quanta is near-optimal; the even split is also evaluated and the
+better of the two is returned, so the arbiter is never worse than splitting
+the budget evenly.
+
+This module is pure algorithm: it knows nothing about operators or tiers,
+only items with a minimum and a latency function of their budget.  The
+engine-facing wrapper is :func:`repro.engine.pipeline.plan_pipeline`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterItem:
+    """One pipeline member: a name, its floor, and its modeled cost L(m)."""
+
+    name: str
+    min_pages: float
+    latency_of: Callable[[float], float]
+
+
+def even_split(items: Sequence[ArbiterItem], budget: float) -> List[float]:
+    """Budget/n each, with any item below its floor topped up from the rest."""
+    _check_feasible(items, budget)
+    n = len(items)
+    alloc = [budget / n] * n
+    # Top up floored items; shave the surplus pro rata from the unfloored.
+    deficit = sum(max(it.min_pages - a, 0.0) for it, a in zip(items, alloc))
+    if deficit > 0.0:
+        surplus_idx = [i for i, it in enumerate(items) if alloc[i] > it.min_pages]
+        headroom = sum(alloc[i] - items[i].min_pages for i in surplus_idx)
+        for i, it in enumerate(items):
+            if alloc[i] <= it.min_pages:
+                alloc[i] = it.min_pages
+            else:
+                alloc[i] -= deficit * (alloc[i] - it.min_pages) / headroom
+    return alloc
+
+
+def greedy_split(
+    items: Sequence[ArbiterItem], budget: float, step: float = 1.0
+) -> List[float]:
+    """Marginal-cost descent: repeatedly give one page quantum to the item
+    whose modeled latency drops the most for it."""
+    _check_feasible(items, budget)
+    alloc = [it.min_pages for it in items]
+    cur = [it.latency_of(a) for it, a in zip(items, alloc)]
+    remaining = budget - sum(alloc)
+    while remaining > 1e-9:
+        s = min(step, remaining)
+        best, best_gain, best_next = 0, -float("inf"), cur[0]
+        for i, it in enumerate(items):
+            nxt = it.latency_of(alloc[i] + s)
+            gain = cur[i] - nxt
+            if gain > best_gain:
+                best, best_gain, best_next = i, gain, nxt
+        alloc[best] += s
+        cur[best] = best_next
+        remaining -= s
+    return alloc
+
+
+def arbitrate(
+    items: Sequence[ArbiterItem], budget: float, step: float = 1.0
+) -> Tuple[List[float], float]:
+    """Best of greedy marginal-cost descent and the (clamped) even split.
+
+    Returns ``(allocations, total modeled latency)``; allocations sum to
+    ``budget`` exactly and respect every item's floor.
+    """
+    candidates = [greedy_split(items, budget, step=step)]
+    if len(items) > 1:
+        candidates.append(even_split(items, budget))
+    scored = [
+        (sum(it.latency_of(a) for it, a in zip(items, alloc)), alloc)
+        for alloc in candidates
+    ]
+    total, alloc = min(scored, key=lambda pair: pair[0])
+    return alloc, total
+
+
+def _check_feasible(items: Sequence[ArbiterItem], budget: float) -> None:
+    if not items:
+        raise ValueError("empty pipeline: nothing to arbitrate")
+    floor = sum(it.min_pages for it in items)
+    if budget < floor:
+        raise ValueError(
+            f"budget {budget} pages is below the pipeline floor {floor} "
+            f"(minima: {[(it.name, it.min_pages) for it in items]})"
+        )

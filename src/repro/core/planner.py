@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import Tuple
 
 from repro.core.cost_model import TPU_V5E, TPUSpec
 from repro.core import policies

@@ -401,3 +401,137 @@ def ehj_latency(b: float, q: float, out: float, plan: EHJPlan, tau: float) -> fl
     d = sum(ehj_data_costs(b, q, out, plan.sigma))
     c = sum(ehj_round_costs(b, q, out, plan))
     return d + tau * c
+
+
+# ==========================================================================
+# External (grace-style) hash aggregation
+# ==========================================================================
+#
+# Same Property-6 structure as EHJ, one relation and two phases.  P1 scans the
+# N-page input through R_r, aggregates resident partitions in memory and
+# spills the others through a per-partition-sliced R_w pool; resident groups
+# flush through R_o.  P2 re-reads each spilled partition through R_r and
+# flushes its aggregated groups through R_o.  With spilled fraction sigma over
+# P partitions and OUT pages of group output, the Table-V-style terms are
+#
+#   phase  pools        D_i                              a_j (C_j = a_j / R_j)
+#   P1     R_r,R_w,R_o  (1+sigma)N + (1-sigma)OUT        N, sigma^2 P N, (1-sigma)OUT
+#   P2     R_r,R_o      sigma (N + OUT)                  sigma N, sigma OUT
+
+
+@dataclasses.dataclass(frozen=True)
+class EAggPlan:
+    op: ClassVar[str] = "eagg"  # engine.registry.OperatorPlan tag
+    m_b: float  # I/O buffer-pool budget (pages)
+    partitions: int  # radix P
+    sigma: float  # spilled partition fraction (system-determined)
+    # Per-phase allocations [R_r, R_w, R_o] / [R_r, R_o].
+    p1: Tuple[float, ...] = ()
+    p2: Tuple[float, ...] = ()
+
+
+def eagg_phase_coeffs(
+    n: float, out: float, partitions: int, sigma: float
+) -> Tuple[Tuple[float, ...], Tuple[float, ...]]:
+    """Round-cost coefficients a_j per phase (Table V analogue)."""
+    p1 = (n, sigma * sigma * partitions * n, (1.0 - sigma) * out)
+    p2 = (sigma * n, sigma * out)
+    return p1, p2
+
+
+def eagg_data_costs(n: float, out: float, sigma: float) -> Tuple[float, float]:
+    """Per-phase D_i: allocation-independent."""
+    d1 = (1.0 + sigma) * n + (1.0 - sigma) * out
+    d2 = sigma * (n + out)
+    return d1, d2
+
+
+def eagg_plan(
+    n: float, out: float, m_b: float, partitions: int, sigma: float
+) -> EAggPlan:
+    """Property 6 applied per phase: R_j proportional to sqrt(a_j)."""
+    c1, c2 = eagg_phase_coeffs(n, out, partitions, sigma)
+    a1, _ = waterfill(c1, m_b)
+    a2, _ = waterfill(c2, m_b)
+    return EAggPlan(
+        m_b=m_b, partitions=partitions, sigma=sigma, p1=tuple(a1), p2=tuple(a2)
+    )
+
+
+def eagg_starved(m_b: float, partitions: int, sigma: float) -> EAggPlan:
+    """Disk-oriented baseline: maximal read block, 1-page write/output pools."""
+    return EAggPlan(
+        m_b=m_b, partitions=partitions, sigma=sigma,
+        p1=(m_b - 2.0, 1.0, 1.0), p2=(m_b - 1.0, 1.0),
+    )
+
+
+def eagg_round_costs(n: float, out: float, plan: EAggPlan) -> Tuple[float, float]:
+    """Evaluate the per-phase C_i for a concrete plan."""
+    c1, c2 = eagg_phase_coeffs(n, out, plan.partitions, plan.sigma)
+    return round_cost(c1, plan.p1), round_cost(c2, plan.p2)
+
+
+def eagg_optimal_round_costs(
+    n: float, out: float, m_b: float, partitions: int, sigma: float
+) -> Tuple[float, float]:
+    """Closed forms C_i* (Property 6 / Table VI analogue)."""
+    c1 = (
+        math.sqrt(n)
+        + sigma * math.sqrt(partitions * n)
+        + math.sqrt((1.0 - sigma) * out)
+    ) ** 2 / m_b
+    c2 = sigma * (math.sqrt(n) + math.sqrt(out)) ** 2 / m_b
+    return c1, c2
+
+
+def eagg_costs_exact(
+    n_pages: int,
+    rows_per_page: int,
+    spilled_rows: Sequence[int],
+    resident_groups: int,
+    spilled_groups: int,
+    plan: EAggPlan,
+) -> Tuple[float, float]:
+    """Exact (ceil-based) D and C mirroring the engine's round semantics.
+
+    ``spilled_rows`` are the per-spilled-partition row counts (skew-aware);
+    ``resident_groups``/``spilled_groups`` the group-output row counts flushed
+    in P1/P2.  Replicates the integer slice/batch sizing of
+    :class:`repro.engine.BufferPool` / :class:`repro.engine.PageCursor`, so
+    the simulated ledger of :func:`repro.remote.eagg.eagg` matches exactly.
+    """
+    n_spilled = max(len(spilled_rows), 1)
+    r_r1, r_w1, r_o1 = plan.p1
+    r_r2, r_o2 = plan.p2
+
+    def pool_rounds(rows: int, slice_pages: int) -> Tuple[int, int]:
+        """(pages written, write rounds) for one stream through one pool slice."""
+        if rows <= 0:
+            return 0, 0
+        slice_rows = slice_pages * rows_per_page
+        full, rem = divmod(rows, slice_rows)
+        pages = full * slice_pages + math.ceil(rem / rows_per_page)
+        return pages, full + (1 if rem else 0)
+
+    d = float(n_pages)
+    c = math.ceil(n_pages / max(1, int(round(r_r1))))  # P1 input scan
+
+    slice_w = max(1, int(r_w1 / n_spilled))
+    batch2 = max(1, int(round(r_r2)))
+    for rows in spilled_rows:  # P1 spill writes + P2 re-reads
+        pages, rounds = pool_rounds(rows, slice_w)
+        d += 2 * pages
+        c += rounds + (math.ceil(pages / batch2) if pages else 0)
+
+    for groups, r_o in ((resident_groups, r_o1), (spilled_groups, r_o2)):
+        pages, rounds = pool_rounds(groups, max(1, int(r_o)))
+        d += pages
+        c += rounds
+    return d, float(c)
+
+
+def eagg_latency(n: float, out: float, plan: EAggPlan, tau: float) -> float:
+    d = sum(eagg_data_costs(n, out, plan.sigma))
+    c = sum(eagg_round_costs(n, out, plan))
+    return d + tau * c

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.cost_model import TPU_V5E, TPUSpec
 

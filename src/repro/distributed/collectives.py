@@ -13,12 +13,11 @@ compress (``optim.compression``) before reducing.
 
 from __future__ import annotations
 
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import TPU_V5E
 from repro.core.planner import BucketPlan, plan_grad_buckets
 
 

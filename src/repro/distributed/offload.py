@@ -12,10 +12,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, List
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.cost_model import TPU_TIERS
 

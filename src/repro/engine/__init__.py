@@ -15,8 +15,14 @@ move data across the remote tier exclusively through this layer:
     through a fixed-size buffer, one refill per read round, with an optional
     double-buffer prefetch and sorted-run merge helpers.
   * ``engine.registry`` maps operator names to :class:`OperatorSpec` bundles
-    (plan type, buffer policies, runner, oracle); :func:`plan_operator` is
-    the single planning entry point used by the benchmark harness.
+    (plan type, buffer policies, runner, oracle, latency model, min_pages);
+    :func:`plan_operator` is the single planning entry point used by the
+    benchmark harness.
+  * ``engine.pipeline`` plans whole queries: :func:`plan_pipeline` hands a
+    global budget to the :mod:`repro.core.arbiter` (minimizing total modeled
+    latency across the registered operators' cost models) and
+    :func:`run_pipeline` executes the result against one shared
+    ``RemoteMemory`` ledger.
 
 The accounting contract (paper §II, Definitions 1–3)
 ----------------------------------------------------
@@ -54,8 +60,16 @@ from repro.engine.registry import (
     OperatorPlan,
     OperatorSpec,
     WorkloadStats,
+    model_latency,
     plan_operator,
     resolve_tier,
+)
+from repro.engine.pipeline import (
+    OperatorBudget,
+    PipelinePlan,
+    PipelineRunResult,
+    plan_pipeline,
+    run_pipeline,
 )
 
 __all__ = [
@@ -65,7 +79,13 @@ __all__ = [
     "OperatorPlan",
     "OperatorSpec",
     "WorkloadStats",
+    "model_latency",
     "plan_operator",
     "resolve_tier",
     "registry",
+    "OperatorBudget",
+    "PipelinePlan",
+    "PipelineRunResult",
+    "plan_pipeline",
+    "run_pipeline",
 ]

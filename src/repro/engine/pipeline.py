@@ -1,0 +1,154 @@
+"""Pipeline planning and execution: many operators, one budget, one tier.
+
+``plan_pipeline`` is the query-level entry point: it wraps each registered
+operator's latency model (``OperatorSpec.model``) as an
+:class:`repro.core.arbiter.ArbiterItem`, lets the arbiter split the global
+page budget M, and then plans every operator at its awarded budget through
+the normal ``plan_operator`` path — so a single-operator pipeline degenerates
+to exactly the standalone plan.
+
+``run_pipeline`` executes a planned pipeline against *one shared*
+:class:`repro.remote.simulator.RemoteMemory`: all operators account on the
+same ledger, and per-operator D/C come back as snapshot deltas (engine
+contract rule 4), so pipeline totals are measured, not summed estimates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.arbiter import ArbiterItem, arbitrate
+from repro.core.cost_model import LedgerSnapshot, TierSpec
+from repro.engine.registry import (
+    OperatorPlan,
+    WorkloadStats,
+    get,
+    plan_operator,
+    resolve_tier,
+)
+from repro.engine.scheduler import TransferScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorBudget:
+    """One pipeline member's share: awarded pages, plan, and modeled cost."""
+
+    op: str
+    stats: WorkloadStats
+    m_pages: float
+    plan: OperatorPlan
+    modeled_latency: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """An arbitrated pipeline: per-operator budgets summing to ``m_total``."""
+
+    tier: TierSpec
+    m_total: float
+    policy: str
+    ops: Tuple[OperatorBudget, ...]
+
+    @property
+    def budgets(self) -> Tuple[float, ...]:
+        return tuple(ob.m_pages for ob in self.ops)
+
+    @property
+    def total_modeled_latency(self) -> float:
+        return sum(ob.modeled_latency for ob in self.ops)
+
+
+def _broadcast_stats(
+    ops: Sequence[str], stats: Union[WorkloadStats, Sequence[WorkloadStats]]
+) -> List[WorkloadStats]:
+    if isinstance(stats, WorkloadStats):
+        return [stats] * len(ops)
+    stats = list(stats)
+    if len(stats) != len(ops):
+        raise ValueError(
+            f"got {len(stats)} WorkloadStats for {len(ops)} operators"
+        )
+    return stats
+
+
+def plan_pipeline(
+    ops: Sequence[str],
+    stats: Union[WorkloadStats, Sequence[WorkloadStats]],
+    tier: Union[TierSpec, str],
+    m_pages: float,
+    policy: str = "remop",
+    step: float = 1.0,
+) -> PipelinePlan:
+    """Split ``m_pages`` across ``ops`` minimizing total modeled latency.
+
+    ``stats`` is one :class:`WorkloadStats` per operator (or a single one
+    broadcast to all).  Budgets sum to exactly ``m_pages`` and each respects
+    the operator's ``min_pages``; infeasible budgets raise ``ValueError``.
+    """
+    tier_spec = resolve_tier(tier)
+    tau = tier_spec.tau_pages
+    all_stats = _broadcast_stats(ops, stats)
+    items = []
+    for op, st in zip(ops, all_stats):
+        spec = get(op)  # raises ValueError for unknown operators
+        if spec.model is None:
+            raise ValueError(f"operator {op!r} has no latency model")
+        items.append(ArbiterItem(
+            name=op,
+            min_pages=spec.min_pages,
+            latency_of=lambda m, spec=spec, st=st: spec.model(st, tau, m, policy),
+        ))
+    alloc, _ = arbitrate(items, float(m_pages), step=step)
+    budgets = tuple(
+        OperatorBudget(
+            op=op,
+            stats=st,
+            m_pages=m,
+            plan=plan_operator(op, st, tier_spec, m, policy=policy),
+            modeled_latency=get(op).model(st, tau, m, policy),
+        )
+        for op, st, m in zip(ops, all_stats, alloc)
+    )
+    return PipelinePlan(tier=tier_spec, m_total=float(m_pages), policy=policy,
+                        ops=budgets)
+
+
+@dataclasses.dataclass
+class PipelineRunResult:
+    """Measured per-operator and total D/C of one shared-tier execution."""
+
+    per_op: List[Tuple[str, Any, LedgerSnapshot]]  # (op, run result, delta)
+    total: LedgerSnapshot
+
+    def latency_seconds(self, tier: TierSpec) -> float:
+        return tier.latency_seconds(self.total.d_total, self.total.c_total)
+
+    def latency_cost(self, tau: float) -> float:
+        return self.total.latency_cost(tau)
+
+
+def run_pipeline(
+    remote,
+    pplan: PipelinePlan,
+    workloads: Sequence[Tuple[Sequence[Any], Optional[Dict[str, Any]]]],
+) -> PipelineRunResult:
+    """Run every operator of ``pplan`` in order against one RemoteMemory.
+
+    ``workloads[i]`` is ``(args, kwargs)`` for operator ``i``'s data plane:
+    ``spec.run(remote, *args, plan, **kwargs)`` — e.g. ``((outer, inner), {})``
+    for BNLJ or ``((page_ids,), {"rows_per_page": 8})`` for EMS.  All
+    operators share ``remote``'s ledger; per-operator D/C are snapshot deltas.
+    """
+    if len(workloads) != len(pplan.ops):
+        raise ValueError(
+            f"got {len(workloads)} workloads for {len(pplan.ops)} operators"
+        )
+    sched = TransferScheduler(remote)
+    before = sched.snapshot()
+    per_op: List[Tuple[str, Any, LedgerSnapshot]] = []
+    for ob, (args, kwargs) in zip(pplan.ops, workloads):
+        t0 = sched.snapshot()
+        result = get(ob.op).run(remote, *args, ob.plan, **(kwargs or {}))
+        per_op.append((ob.op, result, sched.delta(t0)))
+    return PipelineRunResult(per_op=per_op, total=sched.delta(before))

@@ -16,16 +16,25 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Protocol, Tuple, Union, runtime_checkable
 
+import math
+
 from repro.core.cost_model import TABLE_I, TESTBED, TPU_TIERS, TierSpec
 from repro.core.policies import (
     BNLJPlan,
+    EAggPlan,
     EHJPlan,
     EMSPlan,
     bnlj_conventional,
+    bnlj_latency,
     bnlj_plan,
+    eagg_latency,
+    eagg_plan,
+    eagg_starved,
+    ehj_latency,
     ehj_plan,
     ehj_starved,
     ems_conventional,
+    ems_costs,
     ems_duckdb,
     ems_plan,
 )
@@ -59,6 +68,9 @@ class WorkloadStats:
 
 
 Planner = Callable[[WorkloadStats, float, float, str], OperatorPlan]
+# Modeled latency cost L(stats, tau, m_pages, policy) — the arbiter's
+# marginal-cost hook (repro.core.arbiter consumes L as a function of m).
+LatencyModel = Callable[[WorkloadStats, float, float, str], float]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +83,8 @@ class OperatorSpec:
     planner: Planner
     run: Callable[..., Any]  # data-plane executor over a RemoteMemory
     oracle: Callable[..., Any]  # accounting-free correctness reference
+    model: Optional[LatencyModel] = None  # modeled L for pipeline arbitration
+    min_pages: float = 3.0  # smallest plannable budget (pages)
 
 
 _REGISTRY: Dict[str, OperatorSpec] = {}
@@ -89,7 +103,7 @@ def get(name: str) -> OperatorSpec:
     try:
         return _REGISTRY[name]
     except KeyError:
-        raise KeyError(
+        raise ValueError(
             f"unknown operator {name!r}; registered: {sorted(_REGISTRY)}"
         ) from None
 
@@ -128,7 +142,30 @@ def plan_operator(
         raise ValueError(
             f"operator {op!r} has no policy {policy!r}; available: {spec.policies}"
         )
+    if m_pages < spec.min_pages:
+        raise ValueError(
+            f"operator {op!r} needs m_pages >= {spec.min_pages} "
+            f"(one page per buffer pool at minimum), got {m_pages}"
+        )
     return spec.planner(stats, resolve_tier(tier).tau_pages, float(m_pages), policy)
+
+
+def model_latency(
+    op: str,
+    stats: WorkloadStats,
+    tier: Union[TierSpec, str],
+    m_pages: float,
+    policy: str = "remop",
+) -> float:
+    """Modeled latency cost L = D + tau*C for ``op`` planned with ``m_pages``.
+
+    This is the objective the query-level memory arbiter minimizes when it
+    splits one global budget across a pipeline (see ``engine.pipeline``).
+    """
+    spec = get(op)
+    if spec.model is None:
+        raise ValueError(f"operator {op!r} has no latency model")
+    return spec.model(stats, resolve_tier(tier).tau_pages, float(m_pages), policy)
 
 
 # --------------------------------------------------------------------------
@@ -158,6 +195,40 @@ def _plan_ehj(stats: WorkloadStats, tau: float, m: float, policy: str) -> EHJPla
     )
 
 
+def _plan_eagg(stats: WorkloadStats, tau: float, m: float, policy: str) -> EAggPlan:
+    if policy == "conventional":
+        return eagg_starved(m, stats.partitions, stats.sigma)
+    return eagg_plan(stats.size_r, stats.out, m, stats.partitions, stats.sigma)
+
+
+# Latency models: closed-form L = D + tau*C of the policy's plan at budget m.
+# Each is (weakly) decreasing in m, which is what the arbiter's greedy
+# marginal-cost descent assumes.
+
+
+def _model_bnlj(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+    plan = _plan_bnlj(stats, tau, m, policy)
+    return bnlj_latency(stats.size_r, stats.size_s, stats.out, plan, tau)
+
+
+def _model_ems(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+    plan = _plan_ems(stats, tau, m, policy)
+    d, c, _ = ems_costs(stats.size_r, m, plan)
+    # Run formation (§III-B a): one read + one write round per M-page chunk.
+    chunks = math.ceil(stats.size_r / max(m, 1.0))
+    return (d + 2.0 * stats.size_r) + tau * (c + 2.0 * chunks)
+
+
+def _model_ehj(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+    plan = _plan_ehj(stats, tau, m, policy)
+    return ehj_latency(stats.size_r, stats.size_s, stats.out, plan, tau)
+
+
+def _model_eagg(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+    plan = _plan_eagg(stats, tau, m, policy)
+    return eagg_latency(stats.size_r, stats.out, plan, tau)
+
+
 def _ensure_builtin() -> None:
     """Register the built-in operators on first lookup.
 
@@ -173,6 +244,7 @@ def _ensure_builtin() -> None:
     # import resurfaces as the real ImportError on the next lookup instead of
     # a misleading "unknown operator" KeyError.
     from repro.remote.bnlj import bnlj, bnlj_oracle
+    from repro.remote.eagg import eagg, eagg_oracle
     from repro.remote.ehj import ehj, ehj_oracle
     from repro.remote.ems import ems_oracle, ems_sort
 
@@ -180,15 +252,24 @@ def _ensure_builtin() -> None:
         name="bnlj", plan_type=BNLJPlan,
         policies=("remop", "conventional"),
         planner=_plan_bnlj, run=bnlj, oracle=bnlj_oracle,
+        model=_model_bnlj,
     ))
     register(OperatorSpec(
         name="ems", plan_type=EMSPlan,
         policies=("remop", "conventional", "duckdb"),
         planner=_plan_ems, run=ems_sort, oracle=ems_oracle,
+        model=_model_ems,
     ))
     register(OperatorSpec(
         name="ehj", plan_type=EHJPlan,
         policies=("remop", "conventional"),
         planner=_plan_ehj, run=ehj, oracle=ehj_oracle,
+        model=_model_ehj,
+    ))
+    register(OperatorSpec(
+        name="eagg", plan_type=EAggPlan,
+        policies=("remop", "conventional"),
+        planner=_plan_eagg, run=eagg, oracle=eagg_oracle,
+        model=_model_eagg,
     ))
     _builtin_registered = True

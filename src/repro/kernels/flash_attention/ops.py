@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.cost_model import TPU_V5E
 from repro.kernels.flash_attention.flash_attention import flash_attention

@@ -7,7 +7,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import TPU_V5E
 from repro.core.planner import MatmulTilePlan, conventional_matmul_tiles, plan_matmul_tiles
 from repro.kernels.matmul.matmul import matmul_pallas
 

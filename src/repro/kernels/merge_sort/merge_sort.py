@@ -17,8 +17,6 @@ rounds (C) exactly as the paper does.
 
 from __future__ import annotations
 
-import functools
-import math
 
 import jax
 import jax.numpy as jnp

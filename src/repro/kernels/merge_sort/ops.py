@@ -3,12 +3,11 @@
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.planner import SortPlan, plan_sort
+from repro.core.planner import plan_sort
 from repro.kernels.merge_sort.merge_sort import merge_pass, sort_blocks
 
 

@@ -7,16 +7,14 @@ and the multi-pod dry-run (launch/dryrun.py) — the dry-run just calls
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig
 from repro.distributed import sharding as shlib
 from repro.distributed.sharding import Sharder, use_sharder
-from repro.launch import specs as specs_lib
 from repro.models import transformer as tf
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 

@@ -7,13 +7,11 @@ pod the same driver builds the production mesh and full config.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 
 import jax
-import numpy as np
 
-from repro.configs import ARCHS, SHAPES, reduced
+from repro.configs import ARCHS, reduced
 from repro.configs.base import ShapeSpec
 from repro.checkpoint.store import CheckpointStore
 from repro.data.pipeline import PrefetchingLoader, synthetic_batches

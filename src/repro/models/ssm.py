@@ -9,7 +9,6 @@ inter-chunk passes (rounds) against intra-chunk matmul volume.
 
 from __future__ import annotations
 
-import math
 from typing import Dict, Tuple
 
 import jax

@@ -15,9 +15,7 @@ Caches are layer-stacked pytrees threaded through the decode scan.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

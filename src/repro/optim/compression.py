@@ -9,7 +9,7 @@ a REMOP-flavored trade on the D term: fewer bytes per round, same rounds.
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

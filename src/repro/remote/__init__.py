@@ -4,10 +4,12 @@ from repro.remote.simulator import RemoteMemory, Relation, make_relation
 from repro.remote.bnlj import bnlj, bnlj_oracle, JoinResult
 from repro.remote.ems import ems_sort, ems_oracle, SortResult
 from repro.remote.ehj import ehj, ehj_oracle, HashJoinResult
+from repro.remote.eagg import eagg, eagg_oracle, AggResult
 
 __all__ = [
     "RemoteMemory", "Relation", "make_relation",
     "bnlj", "bnlj_oracle", "JoinResult",
     "ems_sort", "ems_oracle", "SortResult",
     "ehj", "ehj_oracle", "HashJoinResult",
+    "eagg", "eagg_oracle", "AggResult",
 ]

@@ -14,7 +14,7 @@ mirroring REMON's batched evict/fetch interface.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Sequence
+from typing import Iterable, List, Sequence
 
 import numpy as np
 

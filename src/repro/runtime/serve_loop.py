@@ -9,7 +9,7 @@ whole batch.  Slot release on EOS/length gives continuous batching.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,194 @@
+"""Query-level memory arbiter: budget splits, edge cases, shared-ledger runs.
+
+Acceptance (ISSUE 2): ``plan_pipeline([ehj, ems], stats, tier, M)`` exists,
+its per-operator budgets sum to <= M, and the total modeled latency never
+exceeds the even-split allocation on the Table I tiers.  Edge cases: budget
+below the sum of operator minima, single-operator pipelines (must match
+standalone planning exactly), unknown operators, and too-small m_pages in
+``plan_operator``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import TABLE_I, TESTBED
+from repro.core.arbiter import ArbiterItem, arbitrate, even_split, greedy_split
+from repro.engine import (
+    WorkloadStats,
+    model_latency,
+    plan_operator,
+    plan_pipeline,
+    registry,
+    run_pipeline,
+)
+from repro.remote import RemoteMemory, make_relation
+from repro.remote.simulator import make_key_pages
+
+TIER = TESTBED["remon_tcp"]
+ROWS = 8
+
+STATS = WorkloadStats(size_r=120, size_s=240, out=48, selectivity=1 / 512,
+                      partitions=8, sigma=0.5, k_cap=8)
+
+
+# ---------------------------------------------------------------------------
+# Core allocation algorithm (repro.core.arbiter)
+# ---------------------------------------------------------------------------
+
+
+def test_arbitrate_prefers_the_hungrier_item():
+    """All marginal value on one item -> greedy routes the surplus there."""
+    flat = ArbiterItem("flat", 2.0, lambda m: 100.0)
+    hungry = ArbiterItem("hungry", 2.0, lambda m: 1000.0 / m)
+    alloc, total = arbitrate([flat, hungry], 20.0)
+    assert sum(alloc) == pytest.approx(20.0)
+    assert alloc[1] == pytest.approx(18.0)  # flat item stays at its floor
+    assert total == pytest.approx(100.0 + 1000.0 / 18.0)
+
+
+def test_arbitrate_never_worse_than_even_split():
+    items = [
+        ArbiterItem("a", 3.0, lambda m: 500.0 / m),
+        ArbiterItem("b", 3.0, lambda m: 80.0 / np.sqrt(m)),
+        ArbiterItem("c", 3.0, lambda m: 40.0 + 10.0 / m),
+    ]
+    alloc, total = arbitrate(items, 30.0)
+    even = even_split(items, 30.0)
+    even_total = sum(it.latency_of(a) for it, a in zip(items, even))
+    assert total <= even_total + 1e-9
+    assert sum(alloc) == pytest.approx(30.0)
+    assert all(a >= it.min_pages for it, a in zip(items, alloc))
+
+
+def test_arbitrate_budget_below_floor_raises():
+    items = [ArbiterItem("a", 3.0, lambda m: 1.0 / m)] * 3
+    with pytest.raises(ValueError, match="below the pipeline floor"):
+        arbitrate(items, 8.0)
+    with pytest.raises(ValueError, match="empty pipeline"):
+        arbitrate([], 8.0)
+
+
+def test_even_split_tops_up_floored_items():
+    items = [
+        ArbiterItem("small", 2.0, lambda m: 1.0 / m),
+        ArbiterItem("big", 14.0, lambda m: 1.0 / m),
+    ]
+    alloc = even_split(items, 20.0)  # naive half would leave "big" at 10 < 14
+    assert alloc[1] == pytest.approx(14.0)
+    assert sum(alloc) == pytest.approx(20.0)
+    greedy = greedy_split(items, 20.0)
+    assert sum(greedy) == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------------------
+# plan_pipeline (engine wiring)
+# ---------------------------------------------------------------------------
+
+_TABLE_I_TIERS = list(TABLE_I.values())
+
+
+@pytest.mark.parametrize("tier", _TABLE_I_TIERS, ids=[t.name for t in _TABLE_I_TIERS])
+def test_plan_pipeline_beats_even_split_on_table1_tiers(tier):
+    """Acceptance: sum(budgets) <= M and modeled L <= even-split L, all tiers."""
+    m_total = 48.0
+    pplan = plan_pipeline(["ehj", "ems"], STATS, tier, m_total)
+    assert sum(pplan.budgets) <= m_total + 1e-9
+    assert all(b >= registry.get(ob.op).min_pages for b, ob in
+               zip(pplan.budgets, pplan.ops))
+    even = [m_total / 2, m_total / 2]
+    even_latency = sum(
+        model_latency(op, STATS, tier, m) for op, m in zip(["ehj", "ems"], even)
+    )
+    assert pplan.total_modeled_latency <= even_latency + 1e-9
+
+
+def test_plan_pipeline_four_operator_mix():
+    pplan = plan_pipeline(["bnlj", "ems", "ehj", "eagg"], STATS, "tcp", 96.0)
+    assert sum(pplan.budgets) == pytest.approx(96.0)
+    assert [ob.plan.op for ob in pplan.ops] == ["bnlj", "ems", "ehj", "eagg"]
+    for ob in pplan.ops:
+        assert ob.plan == plan_operator(ob.op, STATS, "tcp", ob.m_pages)
+        assert ob.modeled_latency == pytest.approx(
+            model_latency(ob.op, STATS, "tcp", ob.m_pages)
+        )
+
+
+@pytest.mark.parametrize("op", ["bnlj", "ems", "ehj", "eagg"])
+def test_single_operator_pipeline_matches_standalone(op):
+    """A 1-op pipeline gets the whole budget and the standalone plan exactly."""
+    m = 17.0
+    pplan = plan_pipeline([op], STATS, TIER, m)
+    assert pplan.budgets == (m,)
+    assert pplan.ops[0].plan == plan_operator(op, STATS, TIER, m)
+
+
+def test_plan_pipeline_per_operator_stats():
+    ems_stats = WorkloadStats(size_r=400, k_cap=8)
+    pplan = plan_pipeline(["ehj", "ems"], [STATS, ems_stats], TIER, 40.0)
+    assert pplan.ops[0].stats is STATS and pplan.ops[1].stats is ems_stats
+    with pytest.raises(ValueError, match="WorkloadStats"):
+        plan_pipeline(["ehj", "ems"], [STATS], TIER, 40.0)
+
+
+def test_plan_pipeline_edge_cases_raise():
+    with pytest.raises(ValueError, match="below the pipeline floor"):
+        plan_pipeline(["ehj", "ems"], STATS, TIER, 5.0)
+    with pytest.raises(ValueError, match="unknown operator"):
+        plan_pipeline(["ehj", "quicksort"], STATS, TIER, 40.0)
+
+
+def test_plan_operator_validates_min_pages_and_unknown_op():
+    """Satellite bugfix: ValueError (not bare KeyError) with actionable text."""
+    with pytest.raises(ValueError, match="registered.*bnlj"):
+        plan_operator("external_agg", STATS, TIER, 13)
+    with pytest.raises(ValueError, match="m_pages >= 3"):
+        plan_operator("ems", STATS, TIER, 2)
+
+
+# ---------------------------------------------------------------------------
+# run_pipeline: one shared RemoteMemory across operators
+# ---------------------------------------------------------------------------
+
+
+def test_run_pipeline_shares_one_ledger_and_matches_oracles():
+    remote = RemoteMemory(TIER)
+    build = make_relation(remote, 48 * ROWS, ROWS, 128, seed=31)
+    probe = make_relation(remote, 96 * ROWS, ROWS, 128, seed=32)
+    sort_ids = make_key_pages(remote, 120, ROWS, seed=33)
+    agg_rel = make_relation(remote, 64 * ROWS, ROWS, 96, seed=34)
+
+    stats = [
+        WorkloadStats(size_r=48, size_s=96, out=36, partitions=8, sigma=0.5),
+        WorkloadStats(size_r=120, k_cap=8),
+        WorkloadStats(size_r=64, out=12, partitions=8, sigma=0.5),
+    ]
+    pplan = plan_pipeline(["ehj", "ems", "eagg"], stats, TIER, 56.0)
+    res = run_pipeline(remote, pplan, [
+        ((build, probe), {}),
+        ((sort_ids,), {"rows_per_page": ROWS}),
+        ((agg_rel,), {}),
+    ])
+
+    # Per-op deltas compose to the measured total on the one shared ledger.
+    assert sum(d.d_total for _, _, d in res.per_op) == res.total.d_total
+    assert sum(d.c_total for _, _, d in res.per_op) == res.total.c_total
+    assert res.total == remote.ledger.snapshot()
+    assert res.latency_cost(TIER.tau_pages) == pytest.approx(
+        remote.ledger.latency_cost(TIER.tau_pages)
+    )
+
+    # Every operator still produces oracle-correct output mid-pipeline.
+    ehj_res, ems_res, eagg_res = (r for _, r, _ in res.per_op)
+    assert ehj_res.output_rows == registry.get("ehj").oracle(remote, build, probe)
+    got = np.concatenate(
+        [remote.peek_batch([i])[0].ravel() for i in ems_res.run_page_ids]
+    )
+    np.testing.assert_array_equal(got, registry.get("ems").oracle(remote, sort_ids))
+    assert eagg_res.group_rows == len(registry.get("eagg").oracle(remote, agg_rel))
+
+
+def test_run_pipeline_workload_count_mismatch_raises():
+    remote = RemoteMemory(TIER)
+    pplan = plan_pipeline(["ems"], WorkloadStats(size_r=40), TIER, 10.0)
+    with pytest.raises(ValueError, match="workloads"):
+        run_pipeline(remote, pplan, [])

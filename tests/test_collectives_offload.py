@@ -9,7 +9,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.planner import plan_grad_buckets
 from repro.distributed.collectives import partition_buckets
 from repro.distributed.offload import HostOffloader, plan_offload_chunks
 

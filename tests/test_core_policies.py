@@ -5,7 +5,7 @@ import math
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import TABLE_I, TESTBED, TierSpec, TransferLedger, latency_cost
+from repro.core import TABLE_I, TESTBED, TransferLedger, latency_cost
 from repro.core import policies as P
 
 

@@ -5,7 +5,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 _ENV = {**os.environ,
         "XLA_FLAGS": "--xla_force_host_platform_device_count=8",

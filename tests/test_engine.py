@@ -258,16 +258,20 @@ def test_plan_operator_accepts_tier_names():
 
 def test_plan_operator_rejects_unknown_op_policy_tier():
     stats = WorkloadStats()
-    with pytest.raises(KeyError, match="unknown operator"):
+    # Unknown op is a ValueError naming the registered operators (not a bare
+    # KeyError), so callers see what they could have asked for.
+    with pytest.raises(ValueError, match="unknown operator.*bnlj"):
         plan_operator("external_agg", stats, TIER, 13)
     with pytest.raises(ValueError, match="no policy"):
         plan_operator("bnlj", stats, TIER, 13, policy="duckdb")
     with pytest.raises(KeyError, match="unknown tier"):
         plan_operator("bnlj", stats, "floppy", 13)
+    with pytest.raises(ValueError, match="m_pages >="):
+        plan_operator("bnlj", stats, TIER, 2)
 
 
 def test_registry_specs_are_complete():
-    assert registry.names() == ("bnlj", "ehj", "ems")
+    assert registry.names() == ("bnlj", "eagg", "ehj", "ems")
     for name in registry.names():
         spec = registry.get(name)
         plan = plan_operator(name, WorkloadStats(size_r=64, size_s=128, out=32),
@@ -276,6 +280,11 @@ def test_registry_specs_are_complete():
         assert plan.op == name  # OperatorPlan protocol tag
         assert spec.policies[0] == "remop"
         assert callable(spec.run) and callable(spec.oracle)
+        assert spec.model is not None and spec.min_pages >= 1.0
+        # Latency model is (weakly) decreasing in the budget.
+        stats = WorkloadStats(size_r=64, size_s=128, out=32)
+        assert spec.model(stats, TIER.tau_pages, 32.0, "remop") <= \
+            spec.model(stats, TIER.tau_pages, 8.0, "remop")
 
 
 def test_registry_run_matches_oracle_end_to_end():

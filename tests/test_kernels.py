@@ -264,7 +264,6 @@ def test_ssd_scan_matches_ref(b, nc, h, p, n, dtype):
 def test_ssd_scan_matches_model_scan():
     """The kernel reproduces the exact scan inside models/ssm.ssd_forward."""
     from repro.configs import ARCHS, reduced
-    from repro.models import ssm as ssm_mod
 
     cfg = reduced(ARCHS["mamba2-370m"])
     b, nc = 2, 4

@@ -10,8 +10,7 @@ from repro.core.planner import (conventional_matmul_tiles, matmul_costs,
                                 matmul_vmem, plan_dispatch, plan_grad_buckets,
                                 plan_kv_pages, plan_matmul_tiles,
                                 plan_microbatches, plan_sort)
-from repro.core.roofline import (CollectiveOp, collective_summary,
-                                 parse_hlo_collectives, shape_bytes)
+from repro.core.roofline import parse_hlo_collectives, shape_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -59,8 +58,6 @@ def test_dispatch_plan_waterfill_ratios():
 def test_grad_bucket_plan_beats_extremes():
     total, bwd, group = 4 * 10 ** 9, 0.1, 16
     plan = plan_grad_buckets(total, bwd, group)
-    from repro.core.planner import BucketPlan
-
     def exposed(b):
         ring = 2 * (group - 1) / group
         comm = ring * total / TPU_V5E.ici_bandwidth + b * TPU_V5E.collective_launch_s

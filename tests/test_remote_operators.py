@@ -12,7 +12,6 @@ from hypothesis import given, settings, strategies as st
 from repro.core import TESTBED
 from repro.core.policies import (
     BNLJPlan, EMSPlan, bnlj_costs_exact, bnlj_plan, ehj_plan, ems_costs_exact,
-    ems_plan,
 )
 from repro.remote import (
     RemoteMemory, bnlj, bnlj_oracle, ehj, ehj_oracle, ems_sort, ems_oracle,

@@ -7,9 +7,8 @@ rather than unit-level details (those live in the other test files).
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import TABLE_I, latency_cost
+from repro.core import TABLE_I
 from repro.core.policies import (bnlj_conventional, bnlj_plan,
                                  bnlj_costs_exact, ems_costs_exact)
 from repro.core.planner import conventional_matmul_tiles, plan_matmul_tiles
