@@ -1,0 +1,159 @@
+"""Memory-hierarchy sweeps: placement-aware arbiter vs single-tier spilling.
+
+Sweeps DRAM -> RDMA -> SSD capacity splits (Table I constants) for a fixed
+multi-operator pipeline and compares three ways of placing spill:
+
+  * the hierarchy-aware arbiter (joint pages + tier assignment),
+  * the best *feasible* single-tier placement (all operators' spill on one
+    tier, pages split by the 1-D arbiter), and
+  * the worst feasible single-tier placement (the price of guessing wrong).
+
+Both the modeled latency cost (what the arbiter minimizes) and the simulated
+wall latency of running every operator against one shared
+:class:`repro.remote.simulator.MemoryHierarchy` are reported; the arbiter is
+never worse than the best single tier on the modeled objective by
+construction, and the sweep shows how the gap moves with tier capacities.
+
+Writes ``BENCH_tiering.json`` at the repo root — a machine-readable perf
+artifact CI uploads and gates with ``scripts/check_regression.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Optional
+
+from repro.core import TABLE_I
+from repro.core.cost_model import HierarchySpec
+from repro.engine import WorkloadStats, plan_pipeline, registry, run_pipeline
+from repro.engine.pipeline import OperatorBudget, PipelinePlan
+from repro.engine.registry import hierarchy_spec, model_latency, plan_operator
+from repro.remote import MemoryHierarchy, make_relation
+from repro.remote.simulator import make_key_pages
+from benchmarks.common import Row
+
+ROWS = 8
+M_TOTAL = 56.0
+OPS = ["ehj", "ems", "eagg"]
+STATS = [
+    WorkloadStats(size_r=48, size_s=96, out=36, partitions=8, sigma=0.5),
+    WorkloadStats(size_r=120, k_cap=8),
+    WorkloadStats(size_r=64, out=12, partitions=8, sigma=0.5),
+]
+# (dram capacity, rdma capacity) sweep points; ssd is the unbounded backstop.
+SWEEPS = [(16, 128), (48, 256), (96, 512), (256, 1024)]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_tiering.json")
+
+
+def _spec(dram_cap: float, rdma_cap: float) -> HierarchySpec:
+    return hierarchy_spec((TABLE_I["dram"], dram_cap), (TABLE_I["rdma"], rdma_cap),
+                          TABLE_I["ssd"])
+
+
+def _single_tier_plan(spec: HierarchySpec, t: int) -> Optional[PipelinePlan]:
+    """All ops placed on tier ``t`` (pages via the 1-D arbiter), if it fits."""
+    level = spec.levels[t]
+    single = plan_pipeline(OPS, STATS, level.tier, M_TOTAL)
+    footprint = sum(
+        registry.get(ob.op).footprint(ob.stats, level.tier.tau_pages, ob.m_pages)
+        for ob in single.ops
+    )
+    if footprint > level.capacity_pages + 1e-9:
+        return None
+    budgets = tuple(
+        OperatorBudget(
+            op=ob.op, stats=ob.stats, m_pages=ob.m_pages,
+            plan=plan_operator(ob.op, ob.stats, level.tier, ob.m_pages),
+            modeled_latency=model_latency(ob.op, ob.stats, level.tier, ob.m_pages),
+            placement=spec.names[t],
+        )
+        for ob in single.ops
+    )
+    return PipelinePlan(tier=spec.levels[0].tier, m_total=M_TOTAL,
+                        policy="remop", ops=budgets, hierarchy=spec)
+
+
+def _workloads(h: MemoryHierarchy):
+    build = make_relation(h, 48 * ROWS, ROWS, 96, seed=31)
+    probe = make_relation(h, 96 * ROWS, ROWS, 96, seed=32)
+    sort_ids = make_key_pages(h, 120, ROWS, seed=33)
+    agg_rel = make_relation(h, 64 * ROWS, ROWS, 128, seed=34)
+    return [
+        ((build, probe), {}),
+        ((sort_ids,), {"rows_per_page": ROWS}),
+        ((agg_rel,), {}),
+    ]
+
+
+def _simulate(spec: HierarchySpec, pplan: PipelinePlan) -> float:
+    h = MemoryHierarchy(spec)
+    run_pipeline(h, pplan, _workloads(h))
+    return h.latency_seconds()
+
+
+def run() -> list[Row]:
+    rows_out: List[Row] = []
+    report = {"schema": 1, "tiers": ["dram", "rdma", "ssd"], "m_total": M_TOTAL,
+              "ops": OPS, "sweeps": []}
+    for dram_cap, rdma_cap in SWEEPS:
+        spec = _spec(dram_cap, rdma_cap)
+        arb = plan_pipeline(OPS, STATS, spec, M_TOTAL)
+
+        singles = []
+        for t in range(len(spec)):
+            plan_t = _single_tier_plan(spec, t)
+            if plan_t is not None:
+                singles.append((spec.names[t], plan_t))
+        best_name, best_plan = min(
+            singles, key=lambda pair: pair[1].total_modeled_latency
+        )
+        worst_name, worst_plan = max(
+            singles, key=lambda pair: pair[1].total_modeled_latency
+        )
+
+        # The simulations are deterministic, so run each exactly once and
+        # time the batch directly (timed() would re-run them for warmup).
+        t0 = time.perf_counter()
+        sim_arb = _simulate(spec, arb)
+        sim_best = _simulate(spec, best_plan)
+        sim_worst = _simulate(spec, worst_plan)
+        us = (time.perf_counter() - t0) * 1e6
+        tag = f"dram{dram_cap}_rdma{rdma_cap}"
+        modeled_red = 1 - arb.total_modeled_latency / best_plan.total_modeled_latency
+        sim_red = 1 - sim_arb / sim_best
+        rows_out.append((f"tiering_{tag}_modeled_latency_reduction_vs_best_single",
+                         us, round(modeled_red, 4)))
+        rows_out.append((f"tiering_{tag}_sim_latency_reduction_vs_best_single",
+                         0.0, round(sim_red, 4)))
+        report["sweeps"].append({
+            "caps": {"dram": dram_cap, "rdma": rdma_cap},
+            "arbiter": {
+                "placements": list(arb.placements),
+                "budgets": list(arb.budgets),
+                "modeled_latency": arb.total_modeled_latency,
+                "simulated_seconds": sim_arb,
+            },
+            "best_single": {
+                "tier": best_name,
+                "modeled_latency": best_plan.total_modeled_latency,
+                "simulated_seconds": sim_best,
+            },
+            "worst_single": {
+                "tier": worst_name,
+                "modeled_latency": worst_plan.total_modeled_latency,
+                "simulated_seconds": sim_worst,
+            },
+        })
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows_out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,111 @@
+"""Fail CI when benchmark latency metrics regress beyond a threshold.
+
+Compares two ``BENCH_*.json`` artifacts — a committed baseline and a freshly
+generated run — and exits non-zero when any *deterministic* latency metric
+(keys named ``modeled_latency``, ``simulated_seconds``, or
+``latency_cost``; these are simulation outputs, not wall-clock timings, so
+they are stable across CI machines) grew by more than ``--threshold``
+(default 10%).
+
+Usage:
+    python scripts/check_regression.py BASELINE CURRENT [--threshold 0.10]
+
+New metrics (present only in CURRENT) are allowed — the next baseline commit
+picks them up; metrics that *disappear* from CURRENT are reported and fail
+the check, so a benchmark can't dodge the gate by dropping its numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Iterator, Tuple
+
+# Only deterministic simulator outputs are gated; wall-clock fields
+# (us_per_call) and derived ratios are informational.
+METRIC_KEYS = ("modeled_latency", "simulated_seconds", "latency_cost")
+
+
+def _walk(node, path: str = "", in_metric: bool = False) -> Iterator[Tuple[str, float]]:
+    """Yield (path, value) for every numeric leaf under a metric key."""
+    if isinstance(node, dict):
+        for key, value in sorted(node.items()):
+            yield from _walk(value, f"{path}.{key}" if path else key,
+                             in_metric or key in METRIC_KEYS)
+    elif isinstance(node, list):
+        seen: Dict[str, int] = {}
+        for i, value in enumerate(node):
+            label = _element_label(value, i)
+            # Duplicate labels would silently shadow earlier elements in the
+            # metrics dict; disambiguate with the position instead.
+            if label in seen:
+                label = f"{label}#{i}"
+            seen[label] = i
+            yield from _walk(value, f"{path}[{label}]", in_metric)
+    elif in_metric and isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield path, float(node)
+
+
+def _element_label(value, index: int) -> str:
+    """Stable list labels: prefer a name/caps identity over the position."""
+    if isinstance(value, dict):
+        if "name" in value and isinstance(value["name"], str):
+            return value["name"]
+        if "caps" in value and isinstance(value["caps"], dict):
+            return "caps:" + ",".join(
+                f"{k}={v}" for k, v in sorted(value["caps"].items())
+            )
+    return str(index)
+
+
+def metrics_of(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        return dict(_walk(json.load(f)))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_*.json baseline")
+    ap.add_argument("current", help="freshly generated BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="allowed relative latency growth (default 0.10)")
+    args = ap.parse_args(argv)
+
+    base = metrics_of(args.baseline)
+    cur = metrics_of(args.current)
+    if not base:
+        print(f"warning: no gated metrics in baseline {args.baseline}; "
+              "nothing to compare", file=sys.stderr)
+        return 0
+
+    failures = []
+    for key, base_val in sorted(base.items()):
+        if key not in cur:
+            failures.append(f"metric disappeared: {key} (baseline {base_val:.6g})")
+            continue
+        cur_val = cur[key]
+        limit = base_val * (1.0 + args.threshold)
+        status = "OK"
+        if cur_val > limit + 1e-12:
+            pct = (cur_val / base_val - 1.0) * 100.0 if base_val else float("inf")
+            failures.append(
+                f"regression: {key}: {base_val:.6g} -> {cur_val:.6g} (+{pct:.1f}%)"
+            )
+            status = "FAIL"
+        print(f"{status} {key}: {base_val:.6g} -> {cur_val:.6g}")
+    for key in sorted(set(cur) - set(base)):
+        print(f"NEW {key}: {cur[key]:.6g} (not gated yet)")
+
+    if failures:
+        print(f"\n{len(failures)} latency regression(s) beyond "
+              f"{args.threshold:.0%}:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(base)} gated metrics within {args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,21 +5,31 @@ from repro.core.cost_model import (
     TESTBED,
     TPU_TIERS,
     TPU_V5E,
+    HierarchySnapshot,
+    HierarchySpec,
     LedgerSnapshot,
+    TierLevel,
     TierSpec,
     TPUSpec,
     TransferLedger,
     alpha,
     beta,
+    hierarchy_spec,
     latency_cost,
 )
 from repro.core import arbiter, policies, planner, roofline
-from repro.core.arbiter import ArbiterItem, arbitrate
+from repro.core.arbiter import (
+    ArbiterItem,
+    HierarchyItem,
+    arbitrate,
+    arbitrate_hierarchy,
+)
 
 __all__ = [
     "TABLE_I", "TESTBED", "TPU_TIERS", "TPU_V5E",
-    "LedgerSnapshot", "TierSpec", "TPUSpec", "TransferLedger",
-    "alpha", "beta", "latency_cost",
-    "ArbiterItem", "arbitrate",
+    "HierarchySnapshot", "HierarchySpec", "LedgerSnapshot",
+    "TierLevel", "TierSpec", "TPUSpec", "TransferLedger",
+    "alpha", "beta", "hierarchy_spec", "latency_cost",
+    "ArbiterItem", "HierarchyItem", "arbitrate", "arbitrate_hierarchy",
     "arbiter", "policies", "planner", "roofline",
 ]

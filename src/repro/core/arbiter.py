@@ -104,3 +104,185 @@ def _check_feasible(items: Sequence[ArbiterItem], budget: float) -> None:
             f"budget {budget} pages is below the pipeline floor {floor} "
             f"(minima: {[(it.name, it.min_pages) for it in items]})"
         )
+
+
+# --------------------------------------------------------------------------
+# Hierarchy-aware arbitration: jointly assign (pages, tier) per operator
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyItem:
+    """One pipeline member on a memory hierarchy.
+
+    ``latency_of(m, t)`` is the modeled cost of running with budget ``m``
+    placed on tier index ``t`` (L = D + tau_t * C of the policy's plan);
+    ``footprint_of(m, t)`` estimates the spill pages the item parks on tier
+    ``t`` — tier-dependent because the executed plan is (the tier's tau
+    picks e.g. the EMS fan-in, hence pass count) — which is what tier
+    capacities constrain.
+    """
+
+    name: str
+    min_pages: float
+    latency_of: Callable[[float, int], float]
+    footprint_of: Callable[[float, int], float] = lambda m, t: 0.0
+
+
+def _placement_feasible(
+    items: Sequence[HierarchyItem],
+    alloc: Sequence[float],
+    placement: Sequence[int],
+    capacities: Sequence[float],
+) -> bool:
+    used = [0.0] * len(capacities)
+    for it, m, t in zip(items, alloc, placement):
+        used[t] += it.footprint_of(m, t)
+    return all(u <= c + 1e-9 for u, c in zip(used, capacities))
+
+
+def arbitrate_hierarchy(
+    items: Sequence[HierarchyItem],
+    budget: float,
+    capacities: Sequence[float],
+    step: float = 1.0,
+) -> Tuple[List[float], List[int], float]:
+    """Split one page budget AND place each item on a hierarchy tier.
+
+    Greedy marginal-cost descent over joint (grant a page quantum, choose a
+    tier) moves, with capacity-feasible placements tracked by footprint; the
+    best feasible *single-tier* placement (every item on one tier, pages
+    split by :func:`arbitrate`) is also evaluated, so the result is never
+    worse than the best single-tier placement.
+
+    Returns ``(allocations, tier indices, total modeled latency)``;
+    allocations sum to ``budget`` and respect every item's floor, and the
+    placement fits every tier's capacity.  When no candidate satisfies both
+    (every tier finite and footprint-full), raises ``ValueError`` instead of
+    returning an assignment the runtime hierarchy could not honor.
+    """
+    if not items:
+        raise ValueError("empty pipeline: nothing to arbitrate")
+    floor = sum(it.min_pages for it in items)
+    if budget < floor:
+        raise ValueError(
+            f"budget {budget} pages is below the pipeline floor {floor} "
+            f"(minima: {[(it.name, it.min_pages) for it in items]})"
+        )
+    n_tiers = len(capacities)
+    if n_tiers == 0:
+        raise ValueError("empty hierarchy: nothing to place on")
+
+    candidates: List[Tuple[List[float], List[int]]] = [
+        _greedy_joint(items, budget, capacities, step)
+    ]
+    # Single-tier baselines: all items on tier t, pages split by the 1-D
+    # arbiter.  Guarantees the "never worse than best single tier" property.
+    for t in range(n_tiers):
+        flat = [
+            ArbiterItem(it.name, it.min_pages, lambda m, it=it, t=t: it.latency_of(m, t))
+            for it in items
+        ]
+        alloc, _ = arbitrate(flat, budget, step=step)
+        candidates.append((alloc, [t] * len(items)))
+
+    # Only capacity-feasible, fully-allocated assignments may win: the
+    # greedy pass can stop early (capacity exhausted) or fall back to an
+    # over-full tier, and a single-tier baseline can overflow its tier.
+    candidates = [
+        (a, p) for a, p in candidates
+        if _placement_feasible(items, a, p, capacities)
+        and abs(sum(a) - budget) <= 1e-6
+    ]
+    if not candidates:
+        raise ValueError(
+            f"no capacity-feasible (pages, tier) assignment: capacities "
+            f"{list(capacities)} cannot hold the pipeline's spill footprints "
+            f"at budget {budget} (give the bottom tier math.inf capacity for "
+            f"an unbounded backstop)"
+        )
+
+    def total_of(alloc: Sequence[float], placement: Sequence[int]) -> float:
+        return sum(
+            it.latency_of(m, t) for it, m, t in zip(items, alloc, placement)
+        )
+
+    scored = [(total_of(a, p), a, p) for a, p in candidates]
+    total, alloc, placement = min(scored, key=lambda triple: triple[0])
+    return list(alloc), list(placement), total
+
+
+def _greedy_joint(
+    items: Sequence[HierarchyItem],
+    budget: float,
+    capacities: Sequence[float],
+    step: float,
+) -> Tuple[List[float], List[int]]:
+    """Greedy descent over joint (item gets a quantum, on some tier) moves."""
+    n_tiers = len(capacities)
+    alloc = [it.min_pages for it in items]
+    used = [0.0] * n_tiers
+    placement: List[int] = []
+
+    def fits(i: int, m: float, t: int) -> bool:
+        fp = items[i].footprint_of(m, t)
+        cur = used[t]
+        if placement[i] == t:
+            cur -= items[i].footprint_of(alloc[i], t)
+        return cur + fp <= capacities[t] + 1e-9
+
+    # Initial placement at the floors: cheapest feasible tier per item.
+    for i, it in enumerate(items):
+        best_t, best_l = None, float("inf")
+        for t in range(n_tiers):
+            if used[t] + it.footprint_of(alloc[i], t) > capacities[t] + 1e-9:
+                continue
+            latency = it.latency_of(alloc[i], t)
+            if latency < best_l:
+                best_t, best_l = t, latency
+        if best_t is None:  # nothing fits: fall back to the roomiest tier
+            # (the resulting assignment is filtered out as infeasible by
+            # arbitrate_hierarchy unless a later move repairs it)
+            best_t = max(range(n_tiers), key=lambda t: capacities[t] - used[t])
+        placement.append(best_t)
+        used[best_t] += it.footprint_of(alloc[i], best_t)
+
+    cur = [it.latency_of(a, t) for it, a, t in zip(items, alloc, placement)]
+    remaining = budget - sum(alloc)
+    while remaining > 1e-9:
+        s = min(step, remaining)
+        best = None  # (gain, i, t, next_latency)
+        for i, it in enumerate(items):
+            for t in range(n_tiers):
+                if not fits(i, alloc[i] + s, t):
+                    continue
+                nxt = it.latency_of(alloc[i] + s, t)
+                gain = cur[i] - nxt
+                if best is None or gain > best[0]:
+                    best = (gain, i, t, nxt)
+        if best is None:  # no capacity-feasible grant anywhere: stop early
+            break
+        _, i, t, nxt = best
+        used[placement[i]] -= items[i].footprint_of(alloc[i], placement[i])
+        alloc[i] += s
+        placement[i] = t
+        used[t] += items[i].footprint_of(alloc[i], t)
+        cur[i] = nxt
+        remaining -= s
+
+    # Final reassignment sweep: move items to cheaper tiers while it helps.
+    improved = True
+    while improved:
+        improved = False
+        for i, it in enumerate(items):
+            for t in range(n_tiers):
+                if t == placement[i] or not fits(i, alloc[i], t):
+                    continue
+                nxt = it.latency_of(alloc[i], t)
+                if nxt < cur[i] - 1e-12:
+                    used[placement[i]] -= it.footprint_of(alloc[i], placement[i])
+                    placement[i] = t
+                    used[t] += it.footprint_of(alloc[i], t)
+                    cur[i] = nxt
+                    improved = True
+    return alloc, placement

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Tuple
 
 # --------------------------------------------------------------------------
 # Tier specifications
@@ -86,6 +86,21 @@ TESTBED: Dict[str, TierSpec] = {
     # Local SSD spill (DuckDB temp files) for the backend comparison.
     "disk": TierSpec("disk", bandwidth=0.53e9, rtt=100e-6),
 }
+
+def resolve_tier_name(tier: "TierSpec | str") -> TierSpec:
+    """Resolve a tier name against Table I / TESTBED / TPU tiers.
+
+    Lives next to the tables so every lookup (engine registry, hierarchy
+    constructors) shares one copy; ``TierSpec`` inputs pass through.
+    """
+    if isinstance(tier, TierSpec):
+        return tier
+    for table in (TABLE_I, TESTBED, TPU_TIERS):
+        if tier in table:
+            return table[tier]
+    known = sorted(set(TABLE_I) | set(TESTBED) | set(TPU_TIERS))
+    raise KeyError(f"unknown tier {tier!r}; known: {known}")
+
 
 # TPU-side tiers for the framework adaptation (DESIGN.md §3). ----------------
 # "RTT" here is the fixed per-round cost of the mechanism: DMA issue +
@@ -230,6 +245,189 @@ class TransferLedger:
         self.d_read = self.d_write = 0.0
         self.c_read = self.c_write = 0
         self.c_prefetch_hidden = 0
+
+
+# --------------------------------------------------------------------------
+# Memory hierarchy — ordered tiers with capacities (Table I as a *hierarchy*)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierLevel:
+    """One level of a memory hierarchy: a tier plus its page capacity.
+
+    ``capacity_pages`` bounds how many pages the level's store may hold;
+    ``math.inf`` marks an effectively unbounded backstop (the bottom tier).
+    """
+
+    tier: TierSpec
+    capacity_pages: float = math.inf
+
+    def __post_init__(self) -> None:
+        if self.capacity_pages <= 0:
+            raise ValueError(
+                f"tier {self.tier.name!r} needs capacity_pages > 0, "
+                f"got {self.capacity_pages}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySpec:
+    """An ordered memory hierarchy, fastest (top) tier first.
+
+    The order is the *placement priority*: the paper's Table I read as a
+    DRAM -> RDMA -> SSD waterfall.  Planning fills the cheapest (topmost)
+    tier first given per-level capacities; the runtime analogue is
+    :class:`repro.remote.simulator.MemoryHierarchy`.
+    """
+
+    levels: Tuple[TierLevel, ...]
+
+    def __post_init__(self) -> None:
+        if not self.levels:
+            raise ValueError("a hierarchy needs at least one tier level")
+        names = [lv.tier.name for lv in self.levels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names in hierarchy: {names}")
+
+    def __len__(self) -> int:
+        return len(self.levels)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(lv.tier.name for lv in self.levels)
+
+    @property
+    def taus(self) -> Tuple[float, ...]:
+        return tuple(lv.tier.tau_pages for lv in self.levels)
+
+    @property
+    def capacities(self) -> Tuple[float, ...]:
+        return tuple(lv.capacity_pages for lv in self.levels)
+
+    def index(self, tier: "int | str") -> int:
+        """Resolve a tier name or index to its level index."""
+        if isinstance(tier, str):
+            try:
+                return self.names.index(tier)
+            except ValueError:
+                raise KeyError(
+                    f"hierarchy has no tier {tier!r}; tiers: {list(self.names)}"
+                ) from None
+        idx = int(tier)
+        if not -len(self.levels) <= idx < len(self.levels):
+            raise KeyError(f"tier index {idx} out of range for {list(self.names)}")
+        return idx % len(self.levels)
+
+    def level(self, tier: "int | str") -> TierLevel:
+        return self.levels[self.index(tier)]
+
+
+def hierarchy_spec(
+    *levels: "TierSpec | str | Tuple[TierSpec | str, float]",
+) -> HierarchySpec:
+    """Build a :class:`HierarchySpec` from tier / ``(tier, cap)`` levels.
+
+    Tiers are ``TierSpec``\\ s or names resolved against Table I / TESTBED /
+    TPU tiers, e.g. ``hierarchy_spec(("dram", 64), ("rdma", 1024), "ssd")``;
+    a bare tier gets unbounded capacity.  The single normalization point for
+    every hierarchy constructor (``make_hierarchy``, ``resolve_hierarchy``).
+    """
+    built = []
+    for lv in levels:
+        if isinstance(lv, (tuple, list)):
+            tier, cap = lv
+            built.append(TierLevel(resolve_tier_name(tier), float(cap)))
+        else:
+            built.append(TierLevel(resolve_tier_name(lv)))
+    return HierarchySpec(tuple(built))
+
+
+def _sum_snapshots(snaps: "Tuple[LedgerSnapshot, ...]") -> LedgerSnapshot:
+    return LedgerSnapshot(
+        d_read=sum(s.d_read for s in snaps),
+        d_write=sum(s.d_write for s in snaps),
+        c_read=sum(s.c_read for s in snaps),
+        c_write=sum(s.c_write for s in snaps),
+        c_prefetch_hidden=sum(s.c_prefetch_hidden for s in snaps),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySnapshot:
+    """Per-tier :class:`LedgerSnapshot`\\ s of one hierarchy, top tier first.
+
+    The aggregate D/C properties make a hierarchy snapshot a drop-in for a
+    single ledger's snapshot wherever only totals matter (operator result
+    reporting), while ``tier()`` exposes the per-tier split; the per-tier
+    ledgers always sum to the hierarchy-wide totals by construction.
+    """
+
+    tiers: Tuple[Tuple[str, LedgerSnapshot], ...]
+
+    def tier(self, name: str) -> LedgerSnapshot:
+        for n, snap in self.tiers:
+            if n == name:
+                return snap
+        raise KeyError(
+            f"snapshot has no tier {name!r}; tiers: {[n for n, _ in self.tiers]}"
+        )
+
+    @property
+    def total(self) -> LedgerSnapshot:
+        return _sum_snapshots(tuple(s for _, s in self.tiers))
+
+    # Aggregate pass-throughs (keep operator reporting tier-agnostic).
+    @property
+    def d_read(self) -> float:
+        return sum(s.d_read for _, s in self.tiers)
+
+    @property
+    def d_write(self) -> float:
+        return sum(s.d_write for _, s in self.tiers)
+
+    @property
+    def c_read(self) -> int:
+        return sum(s.c_read for _, s in self.tiers)
+
+    @property
+    def c_write(self) -> int:
+        return sum(s.c_write for _, s in self.tiers)
+
+    @property
+    def c_prefetch_hidden(self) -> int:
+        return sum(s.c_prefetch_hidden for _, s in self.tiers)
+
+    @property
+    def d_total(self) -> float:
+        return self.d_read + self.d_write
+
+    @property
+    def c_total(self) -> int:
+        return self.c_read + self.c_write
+
+    def latency_cost(self, tau: "float | HierarchySpec") -> float:
+        """Hierarchy-aware L: per-tier D + tau_t * C summed over tiers.
+
+        A scalar ``tau`` prices every round the same (the single-tier
+        degenerate case); a :class:`HierarchySpec` prices each tier's rounds
+        with that tier's ``tau_pages``.
+        """
+        if isinstance(tau, HierarchySpec):
+            return sum(
+                self.tier(name).latency_cost(t)
+                for name, t in zip(tau.names, tau.taus)
+            )
+        return self.total.latency_cost(tau)
+
+    def latency_seconds(self, spec: HierarchySpec, prefetch: bool = False) -> float:
+        """Eq. (1) summed per tier with each tier's (BW, RTT) constants."""
+        total = 0.0
+        for name, snap in self.tiers:
+            tier = spec.level(name).tier
+            c = snap.c_total - (snap.c_prefetch_hidden if prefetch else 0)
+            total += tier.latency_seconds(snap.d_total, max(c, 0))
+        return total
 
 
 def alpha(m_pages: float, tau: float) -> float:

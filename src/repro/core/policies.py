@@ -535,3 +535,90 @@ def eagg_latency(n: float, out: float, plan: EAggPlan, tau: float) -> float:
     d = sum(eagg_data_costs(n, out, plan.sigma))
     c = sum(eagg_round_costs(n, out, plan))
     return d + tau * c
+
+
+# ==========================================================================
+# Tiered placement (memory hierarchy)
+# ==========================================================================
+#
+# The paper's Table I prices several media; read as an ordered hierarchy
+# (DRAM -> RDMA -> SSD) the planning question becomes *where* spilled pages
+# live, not just how buffers split.  The closed forms below mirror the
+# runtime router (`repro.remote.simulator.MemoryHierarchy`): spill volume
+# fills the cheapest (topmost) tier's free capacity first and overflows
+# downward, and a write round that straddles a capacity boundary pays one
+# round on every tier it lands on.
+
+
+def tiered_split(
+    pages: float,
+    capacities: Sequence[float],
+    occupied: Sequence[float] | None = None,
+    start: int = 0,
+) -> List[float]:
+    """Cheapest-tier-first waterfall of ``pages`` over per-tier free capacity.
+
+    Returns pages placed per tier (index-aligned with ``capacities``); tiers
+    above ``start`` receive nothing.  Raises ``ValueError`` when the pages
+    overflow the whole hierarchy (give the bottom tier ``math.inf`` capacity
+    to model an unbounded backstop).
+    """
+    occ = [0.0] * len(capacities) if occupied is None else list(occupied)
+    if len(occ) != len(capacities):
+        raise ValueError("occupied and capacities must align")
+    placed = [0.0] * len(capacities)
+    remaining = float(pages)
+    for t in range(start, len(capacities)):
+        if remaining <= 0.0:
+            break
+        free = capacities[t] - occ[t]
+        free = remaining if math.isinf(free) else max(math.floor(free), 0)
+        take = min(remaining, free)
+        placed[t] = take
+        remaining -= take
+    if remaining > 1e-9:
+        raise ValueError(
+            f"{pages} pages overflow the hierarchy "
+            f"(capacities {list(capacities)}, occupied {occ})"
+        )
+    return placed
+
+
+def waterfall_io(
+    write_pages: float,
+    round_pages: int,
+    capacities: Sequence[float],
+    occupied: Sequence[float] | None = None,
+    start: int = 0,
+) -> List[Tuple[float, float]]:
+    """Exact per-tier (D, C) of a uniform-round write stream routed first-fit.
+
+    A stream of ``write_pages`` pages arrives in rounds of ``round_pages``
+    (the last round may be partial) targeting tier ``start``; the router
+    places each round's pages into the first free capacity at-or-below the
+    target, so stream page ``i`` lands deterministically and round
+    ``floor(i / round_pages)`` pays one round on every tier it touches —
+    exactly :class:`repro.remote.simulator.MemoryHierarchy` write semantics
+    (integral capacities/occupancy assumed, as in the page-granular store).
+    """
+    if round_pages < 1:
+        raise ValueError(f"round_pages must be >= 1, got {round_pages}")
+    placed = tiered_split(write_pages, capacities, occupied, start)
+    per_tier: List[Tuple[float, float]] = []
+    offset = 0.0  # stream offset of the first page landing on this tier
+    for d in placed:
+        if d <= 0:
+            per_tier.append((0.0, 0.0))
+            continue
+        first_round = math.floor(offset / round_pages)
+        last_round = math.floor((offset + d - 1) / round_pages)
+        per_tier.append((float(d), float(last_round - first_round + 1)))
+        offset += d
+    return per_tier
+
+
+def tiered_latency_cost(
+    per_tier_dc: Sequence[Tuple[float, float]], taus: Sequence[float]
+) -> float:
+    """Hierarchy-wide L = sum_t (D_t + tau_t * C_t) (Definition 3 per tier)."""
+    return sum(d + tau * c for (d, c), tau in zip(per_tier_dc, taus))

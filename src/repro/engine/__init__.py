@@ -3,11 +3,15 @@
 All three REMOP operators (BNLJ, EMS, EHJ) — and any operator added later —
 move data across the remote tier exclusively through this layer:
 
-  * :class:`TransferScheduler` (``engine.scheduler``) owns the
-    :class:`repro.core.TransferLedger`: every batched read/write it issues is
-    one transfer round, it records §IV-E prefetch hiding in one place,
-    supports ledger ``snapshot()``/``delta()`` for per-region accounting, and
-    can coalesce adjacent read rounds.
+  * :class:`TransferScheduler` (``engine.scheduler``) is the tier router and
+    owner of the :class:`repro.core.TransferLedger` stack: every batched
+    read/write it issues is one transfer round per tier touched (its target
+    is a single ``RemoteMemory`` or a whole ``MemoryHierarchy``, with writes
+    named to a placement tier and reads placement-resolved), it records
+    §IV-E prefetch hiding in one place, supports ledger
+    ``snapshot()``/``delta()`` for per-region accounting (per-tier ledgers
+    summing to hierarchy-wide D/C on a hierarchy), and can coalesce adjacent
+    read rounds.
   * :class:`BufferPool` (``engine.buffers``) is the write side: a pool of
     ``capacity`` pages sliced across ``n_streams`` output streams, flushing
     one slice per batched write round when a slice fills.
@@ -62,6 +66,7 @@ from repro.engine.registry import (
     WorkloadStats,
     model_latency,
     plan_operator,
+    resolve_hierarchy,
     resolve_tier,
 )
 from repro.engine.pipeline import (
@@ -81,6 +86,7 @@ __all__ = [
     "WorkloadStats",
     "model_latency",
     "plan_operator",
+    "resolve_hierarchy",
     "resolve_tier",
     "registry",
     "OperatorBudget",

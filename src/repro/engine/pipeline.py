@@ -1,16 +1,25 @@
-"""Pipeline planning and execution: many operators, one budget, one tier.
+"""Pipeline planning and execution: many operators, one budget, one memory stack.
 
-``plan_pipeline`` is the query-level entry point: it wraps each registered
-operator's latency model (``OperatorSpec.model``) as an
+``plan_pipeline`` is the query-level entry point.  On a single tier it wraps
+each registered operator's latency model (``OperatorSpec.model``) as an
 :class:`repro.core.arbiter.ArbiterItem`, lets the arbiter split the global
 page budget M, and then plans every operator at its awarded budget through
 the normal ``plan_operator`` path — so a single-operator pipeline degenerates
-to exactly the standalone plan.
+to exactly the standalone plan.  On a **memory hierarchy** (a
+:class:`repro.core.cost_model.HierarchySpec`, a live
+:class:`repro.remote.simulator.MemoryHierarchy`, or a level list such as
+``[("dram", 64), ("rdma", 256), "ssd"]``) it instead builds
+:class:`repro.core.arbiter.HierarchyItem`\\ s — each operator's modeled cost
+as a function of (pages, tier) plus its spill footprint — and the
+hierarchy-wide arbiter jointly assigns every operator a budget *and* a tier
+placement under the per-tier capacities, never worse than the best
+single-tier placement.
 
-``run_pipeline`` executes a planned pipeline against *one shared*
-:class:`repro.remote.simulator.RemoteMemory`: all operators account on the
-same ledger, and per-operator D/C come back as snapshot deltas (engine
-contract rule 4), so pipeline totals are measured, not summed estimates.
+``run_pipeline`` executes a planned pipeline against *one shared* remote
+target: all operators account on the same ledger stack, and per-operator D/C
+come back as snapshot deltas (engine contract rule 4), so pipeline totals are
+measured, not summed estimates.  On a hierarchy each operator's spill writes
+are routed to its planned placement tier.
 """
 
 from __future__ import annotations
@@ -18,13 +27,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.arbiter import ArbiterItem, arbitrate
-from repro.core.cost_model import LedgerSnapshot, TierSpec
+from repro.core.arbiter import ArbiterItem, HierarchyItem, arbitrate, arbitrate_hierarchy
+from repro.core.cost_model import HierarchySpec, TierSpec
 from repro.engine.registry import (
     OperatorPlan,
     WorkloadStats,
     get,
     plan_operator,
+    resolve_hierarchy,
     resolve_tier,
 )
 from repro.engine.scheduler import TransferScheduler
@@ -32,27 +42,42 @@ from repro.engine.scheduler import TransferScheduler
 
 @dataclasses.dataclass(frozen=True)
 class OperatorBudget:
-    """One pipeline member's share: awarded pages, plan, and modeled cost."""
+    """One pipeline member's share: awarded pages, plan, and modeled cost.
+
+    ``placement`` names the hierarchy tier the operator's spill is routed to
+    (``None`` on a single-tier pipeline, where the pipeline tier applies).
+    """
 
     op: str
     stats: WorkloadStats
     m_pages: float
     plan: OperatorPlan
     modeled_latency: float
+    placement: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelinePlan:
-    """An arbitrated pipeline: per-operator budgets summing to ``m_total``."""
+    """An arbitrated pipeline: per-operator budgets summing to ``m_total``.
+
+    ``hierarchy`` is set when the pipeline was planned against a memory
+    hierarchy; ``tier`` then holds the hierarchy's top tier for the legacy
+    single-tier accessors.
+    """
 
     tier: TierSpec
     m_total: float
     policy: str
     ops: Tuple[OperatorBudget, ...]
+    hierarchy: Optional[HierarchySpec] = None
 
     @property
     def budgets(self) -> Tuple[float, ...]:
         return tuple(ob.m_pages for ob in self.ops)
+
+    @property
+    def placements(self) -> Tuple[Optional[str], ...]:
+        return tuple(ob.placement for ob in self.ops)
 
     @property
     def total_modeled_latency(self) -> float:
@@ -72,10 +97,18 @@ def _broadcast_stats(
     return stats
 
 
+def _is_hierarchy(tier: Any) -> bool:
+    return (
+        isinstance(tier, HierarchySpec)
+        or getattr(tier, "is_hierarchy", False)
+        or isinstance(tier, (list, tuple))
+    )
+
+
 def plan_pipeline(
     ops: Sequence[str],
     stats: Union[WorkloadStats, Sequence[WorkloadStats]],
-    tier: Union[TierSpec, str],
+    tier: Any,
     m_pages: float,
     policy: str = "remop",
     step: float = 1.0,
@@ -83,9 +116,16 @@ def plan_pipeline(
     """Split ``m_pages`` across ``ops`` minimizing total modeled latency.
 
     ``stats`` is one :class:`WorkloadStats` per operator (or a single one
-    broadcast to all).  Budgets sum to exactly ``m_pages`` and each respects
-    the operator's ``min_pages``; infeasible budgets raise ``ValueError``.
+    broadcast to all).  ``tier`` is a single tier (TierSpec or name) or a
+    memory hierarchy (spec, live ``MemoryHierarchy``, or level list); on a
+    hierarchy the arbiter jointly assigns budgets and tier placements.
+    Budgets sum to exactly ``m_pages`` and each respects the operator's
+    ``min_pages``; infeasible budgets raise ``ValueError``.
     """
+    if _is_hierarchy(tier):
+        return _plan_pipeline_hierarchy(
+            ops, stats, resolve_hierarchy(tier), m_pages, policy, step
+        )
     tier_spec = resolve_tier(tier)
     tau = tier_spec.tau_pages
     all_stats = _broadcast_stats(ops, stats)
@@ -114,17 +154,86 @@ def plan_pipeline(
                         ops=budgets)
 
 
+def _plan_pipeline_hierarchy(
+    ops: Sequence[str],
+    stats: Union[WorkloadStats, Sequence[WorkloadStats]],
+    hspec: HierarchySpec,
+    m_pages: float,
+    policy: str,
+    step: float,
+) -> PipelinePlan:
+    """Joint (pages, tier) assignment over a hierarchy's taus and capacities."""
+    taus = hspec.taus
+    all_stats = _broadcast_stats(ops, stats)
+    items = []
+    for op, st in zip(ops, all_stats):
+        spec = get(op)  # raises ValueError for unknown operators
+        if spec.model is None:
+            raise ValueError(f"operator {op!r} has no latency model")
+        footprint = spec.footprint or (lambda st_, tau_, m_: 0.0)
+        items.append(HierarchyItem(
+            name=op,
+            min_pages=spec.min_pages,
+            latency_of=lambda m, t, spec=spec, st=st: spec.model(
+                st, taus[t], m, policy
+            ),
+            footprint_of=lambda m, t, fp=footprint, st=st: fp(st, taus[t], m),
+        ))
+    alloc, placement, _ = arbitrate_hierarchy(
+        items, float(m_pages), hspec.capacities, step=step
+    )
+    budgets = tuple(
+        OperatorBudget(
+            op=op,
+            stats=st,
+            m_pages=m,
+            plan=plan_operator(op, st, hspec.levels[t].tier, m, policy=policy),
+            modeled_latency=get(op).model(st, taus[t], m, policy),
+            placement=hspec.names[t],
+        )
+        for op, st, m, t in zip(ops, all_stats, alloc, placement)
+    )
+    return PipelinePlan(tier=hspec.levels[0].tier, m_total=float(m_pages),
+                        policy=policy, ops=budgets, hierarchy=hspec)
+
+
 @dataclasses.dataclass
 class PipelineRunResult:
-    """Measured per-operator and total D/C of one shared-tier execution."""
+    """Measured per-operator and total D/C of one shared-target execution.
 
-    per_op: List[Tuple[str, Any, LedgerSnapshot]]  # (op, run result, delta)
-    total: LedgerSnapshot
+    ``total`` (and each per-op delta) is a ``LedgerSnapshot`` for a
+    single-tier run and a ``HierarchySnapshot`` — per-tier ledgers summing to
+    the hierarchy-wide D/C — for a hierarchy run.
+    """
 
-    def latency_seconds(self, tier: TierSpec) -> float:
+    per_op: List[Tuple[str, Any, Any]]  # (op, run result, snapshot delta)
+    total: Any
+
+    def latency_seconds(self, tier) -> float:
+        """Eq.-(1) wall latency of the run.
+
+        ``tier`` is the run's ``TierSpec`` for a single-tier execution, or
+        the ``HierarchySpec`` (e.g. ``pplan.hierarchy``) for a hierarchy
+        execution — pricing a multi-tier run's aggregate rounds with one
+        tier's constants would be silently wrong, so that combination raises.
+        """
+        is_hier_run = hasattr(self.total, "tiers")
+        if isinstance(tier, HierarchySpec):
+            if not is_hier_run:
+                raise TypeError(
+                    "single-tier run: pass the run's TierSpec, not a "
+                    "HierarchySpec (the plan's placements were not routed)"
+                )
+            return self.total.latency_seconds(tier)
+        if is_hier_run:
+            raise TypeError(
+                "hierarchy run: pass the HierarchySpec (e.g. pplan.hierarchy)"
+                " so each tier's rounds are priced with its own (BW, RTT)"
+            )
         return tier.latency_seconds(self.total.d_total, self.total.c_total)
 
-    def latency_cost(self, tau: float) -> float:
+    def latency_cost(self, tau) -> float:
+        """L of the whole run; ``tau`` is a scalar or a ``HierarchySpec``."""
         return self.total.latency_cost(tau)
 
 
@@ -133,22 +242,28 @@ def run_pipeline(
     pplan: PipelinePlan,
     workloads: Sequence[Tuple[Sequence[Any], Optional[Dict[str, Any]]]],
 ) -> PipelineRunResult:
-    """Run every operator of ``pplan`` in order against one RemoteMemory.
+    """Run every operator of ``pplan`` in order against one remote target.
 
     ``workloads[i]`` is ``(args, kwargs)`` for operator ``i``'s data plane:
     ``spec.run(remote, *args, plan, **kwargs)`` — e.g. ``((outer, inner), {})``
     for BNLJ or ``((page_ids,), {"rows_per_page": 8})`` for EMS.  All
-    operators share ``remote``'s ledger; per-operator D/C are snapshot deltas.
+    operators share ``remote``'s ledger stack; per-operator D/C are snapshot
+    deltas.  When ``remote`` is a :class:`MemoryHierarchy` and the plan
+    carries placements, each operator's spill writes target its planned tier.
     """
     if len(workloads) != len(pplan.ops):
         raise ValueError(
             f"got {len(workloads)} workloads for {len(pplan.ops)} operators"
         )
     sched = TransferScheduler(remote)
+    route_tiers = bool(getattr(remote, "is_hierarchy", False))
     before = sched.snapshot()
-    per_op: List[Tuple[str, Any, LedgerSnapshot]] = []
+    per_op: List[Tuple[str, Any, Any]] = []
     for ob, (args, kwargs) in zip(pplan.ops, workloads):
         t0 = sched.snapshot()
-        result = get(ob.op).run(remote, *args, ob.plan, **(kwargs or {}))
+        call_kwargs = dict(kwargs or {})
+        if route_tiers and ob.placement is not None:
+            call_kwargs.setdefault("tier", ob.placement)
+        result = get(ob.op).run(remote, *args, ob.plan, **call_kwargs)
         per_op.append((ob.op, result, sched.delta(t0)))
     return PipelineRunResult(per_op=per_op, total=sched.delta(before))

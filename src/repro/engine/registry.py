@@ -18,7 +18,12 @@ from typing import Any, Callable, Dict, Optional, Protocol, Tuple, Union, runtim
 
 import math
 
-from repro.core.cost_model import TABLE_I, TESTBED, TPU_TIERS, TierSpec
+from repro.core.cost_model import (
+    HierarchySpec,
+    TierSpec,
+    hierarchy_spec,
+    resolve_tier_name,
+)
 from repro.core.policies import (
     BNLJPlan,
     EAggPlan,
@@ -36,6 +41,7 @@ from repro.core.policies import (
     ems_conventional,
     ems_costs,
     ems_duckdb,
+    ems_passes,
     ems_plan,
 )
 
@@ -71,6 +77,11 @@ Planner = Callable[[WorkloadStats, float, float, str], OperatorPlan]
 # Modeled latency cost L(stats, tau, m_pages, policy) — the arbiter's
 # marginal-cost hook (repro.core.arbiter consumes L as a function of m).
 LatencyModel = Callable[[WorkloadStats, float, float, str], float]
+# Estimated remote spill footprint F(stats, tau, m_pages) in pages — what a
+# tier's capacity constrains when the hierarchy arbiter places an operator.
+# tau matters because the plan itself is tau-dependent (e.g. the EMS merge
+# fan-in, hence pass count, changes with the placement tier).
+Footprint = Callable[[WorkloadStats, float, float], float]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,10 +92,11 @@ class OperatorSpec:
     plan_type: type
     policies: Tuple[str, ...]  # first entry is the default ("remop")
     planner: Planner
-    run: Callable[..., Any]  # data-plane executor over a RemoteMemory
+    run: Callable[..., Any]  # data-plane executor over a RemoteMemory/hierarchy
     oracle: Callable[..., Any]  # accounting-free correctness reference
     model: Optional[LatencyModel] = None  # modeled L for pipeline arbitration
     min_pages: float = 3.0  # smallest plannable budget (pages)
+    footprint: Optional[Footprint] = None  # spill pages parked on the tier
 
 
 _REGISTRY: Dict[str, OperatorSpec] = {}
@@ -115,13 +127,22 @@ def names() -> Tuple[str, ...]:
 
 def resolve_tier(tier: Union[TierSpec, str]) -> TierSpec:
     """Accept a TierSpec or a tier name from Table I / TESTBED / TPU tiers."""
-    if isinstance(tier, TierSpec):
-        return tier
-    for table in (TABLE_I, TESTBED, TPU_TIERS):
-        if tier in table:
-            return table[tier]
-    known = sorted(set(TABLE_I) | set(TESTBED) | set(TPU_TIERS))
-    raise KeyError(f"unknown tier {tier!r}; known: {known}")
+    return resolve_tier_name(tier)
+
+
+def resolve_hierarchy(hierarchy: Any) -> HierarchySpec:
+    """Normalize a hierarchy argument to a :class:`HierarchySpec`.
+
+    Accepts a spec, a live :class:`repro.remote.simulator.MemoryHierarchy`,
+    or a sequence of levels where each level is a tier (TierSpec or name from
+    the known tables) or a ``(tier, capacity_pages)`` pair — e.g.
+    ``[("dram", 64), ("rdma", 256), "ssd"]``.
+    """
+    if isinstance(hierarchy, HierarchySpec):
+        return hierarchy
+    if getattr(hierarchy, "is_hierarchy", False):
+        return hierarchy.spec
+    return hierarchy_spec(*hierarchy)
 
 
 def plan_operator(
@@ -229,6 +250,35 @@ def _model_eagg(stats: WorkloadStats, tau: float, m: float, policy: str) -> floa
     return eagg_latency(stats.size_r, stats.out, plan, tau)
 
 
+# Spill footprints: pages an operator parks on its placement tier over a run
+# (nothing is freed mid-operator, so this is also the peak residency the
+# hierarchy arbiter must fit under the tier's capacity).  Evaluated at the
+# placement tier's tau, because the plan the operator executes is itself
+# tau-dependent.
+
+
+def _fp_bnlj(stats: WorkloadStats, tau: float, m: float) -> float:
+    # Only the join output is written back.
+    return stats.out
+
+
+def _fp_ems(stats: WorkloadStats, tau: float, m: float) -> float:
+    # Run formation writes N pages of runs; every merge pass writes N more,
+    # with the pass count set by the fan-in this tier's tau selects.
+    plan = _plan_ems(stats, tau, m, "remop")
+    return stats.size_r * (1.0 + ems_passes(stats.size_r, m, plan.k))
+
+
+def _fp_ehj(stats: WorkloadStats, tau: float, m: float) -> float:
+    # Spilled build + probe partitions, plus the join output.
+    return stats.sigma * (stats.size_r + stats.size_s) + stats.out
+
+
+def _fp_eagg(stats: WorkloadStats, tau: float, m: float) -> float:
+    # Spilled raw partitions, plus the group output.
+    return stats.sigma * stats.size_r + stats.out
+
+
 def _ensure_builtin() -> None:
     """Register the built-in operators on first lookup.
 
@@ -252,24 +302,24 @@ def _ensure_builtin() -> None:
         name="bnlj", plan_type=BNLJPlan,
         policies=("remop", "conventional"),
         planner=_plan_bnlj, run=bnlj, oracle=bnlj_oracle,
-        model=_model_bnlj,
+        model=_model_bnlj, footprint=_fp_bnlj,
     ))
     register(OperatorSpec(
         name="ems", plan_type=EMSPlan,
         policies=("remop", "conventional", "duckdb"),
         planner=_plan_ems, run=ems_sort, oracle=ems_oracle,
-        model=_model_ems,
+        model=_model_ems, footprint=_fp_ems,
     ))
     register(OperatorSpec(
         name="ehj", plan_type=EHJPlan,
         policies=("remop", "conventional"),
         planner=_plan_ehj, run=ehj, oracle=ehj_oracle,
-        model=_model_ehj,
+        model=_model_ehj, footprint=_fp_ehj,
     ))
     register(OperatorSpec(
         name="eagg", plan_type=EAggPlan,
         policies=("remop", "conventional"),
         planner=_plan_eagg, run=eagg, oracle=eagg_oracle,
-        model=_model_eagg,
+        model=_model_eagg, footprint=_fp_eagg,
     ))
     _builtin_registered = True

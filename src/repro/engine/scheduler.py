@@ -1,46 +1,73 @@
-"""Transfer scheduler: the single owner of a remote tier's round accounting.
+"""Transfer scheduler: the tier router owning all round accounting.
 
 Every batched read/write an operator issues flows through one
 :class:`TransferScheduler`, which
 
-  * forwards it to the :class:`repro.remote.simulator.RemoteMemory` store as
-    exactly one transfer round (Definition 2),
+  * routes it to its target — a single
+    :class:`repro.remote.simulator.RemoteMemory` tier or a whole
+    :class:`repro.remote.simulator.MemoryHierarchy` — as exactly one transfer
+    round per tier touched (Definition 2).  On a hierarchy, writes name a
+    tier (falling back to the scheduler's default placement) and reads
+    resolve each page's tier from the hierarchy's placement map,
   * records §IV-E prefetch hiding in one place: a round issued with
     ``prefetch=True`` models the double buffer fetching one batch ahead, so
     its RTT is hidden (``ledger.c_prefetch_hidden``).  Stream consumers
     (:class:`repro.engine.buffers.PageCursor`) enforce the rule that a
     stream's *first* round is never marked,
   * exposes ledger ``snapshot()`` / ``delta()`` so callers report per-region
-    D/C counts without copying the mutable ledger, and
+    D/C counts without copying the mutable ledger — a
+    :class:`repro.core.cost_model.LedgerSnapshot` for a single tier, a
+    :class:`repro.core.cost_model.HierarchySnapshot` (per-tier ledgers that
+    sum to the hierarchy-wide D/C) for a hierarchy, and
   * can *coalesce* adjacent read batches into fewer rounds
     (:meth:`read_coalesced`) when a caller trades buffer space for rounds.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.cost_model import LedgerSnapshot, TransferLedger
+from repro.core.cost_model import HierarchySnapshot, LedgerSnapshot, TransferLedger
+
+Snapshot = Union[LedgerSnapshot, HierarchySnapshot]
 
 
 class TransferScheduler:
-    """Schedules batched transfer rounds against one remote tier."""
+    """Schedules batched transfer rounds against one remote target.
 
-    def __init__(self, remote):
-        self.remote = remote
+    ``target`` is a single ``RemoteMemory`` tier or a ``MemoryHierarchy``;
+    ``tier`` names the default placement for writes on a hierarchy (index or
+    tier name; ignored for a single-tier target).  A single-tier hierarchy
+    behaves exactly like the bare tier: same rounds, same ledgers.
+    """
+
+    def __init__(self, target, tier: Union[int, str, None] = None):
+        self.remote = target
+        self.is_hierarchy: bool = bool(getattr(target, "is_hierarchy", False))
+        self.default_tier: Union[int, str, None] = tier
+        if self.is_hierarchy:
+            # Resolve early so a bad placement fails at construction.
+            self.default_tier = target.tier_index(tier)
 
     # -- ledger accounting ---------------------------------------------------
 
     @property
     def ledger(self) -> TransferLedger:
+        """The single tier's ledger (default-placement tier on a hierarchy)."""
+        if self.is_hierarchy:
+            return self.remote.tiers[self.default_tier].ledger
         return self.remote.ledger
 
-    def snapshot(self) -> LedgerSnapshot:
+    def snapshot(self) -> Snapshot:
+        if self.is_hierarchy:
+            return self.remote.snapshot()
         return self.remote.ledger.snapshot()
 
-    def delta(self, since: LedgerSnapshot) -> LedgerSnapshot:
+    def delta(self, since: Snapshot) -> Snapshot:
+        if self.is_hierarchy:
+            return self.remote.delta(since)
         return self.remote.ledger.delta(since)
 
     # -- transfer rounds -----------------------------------------------------
@@ -51,7 +78,7 @@ class TransferScheduler:
         *,
         prefetch: bool = False,
     ) -> List[np.ndarray]:
-        """One swap-in round.
+        """One swap-in round (per tier touched, on a hierarchy).
 
         ``prefetch=True`` marks the round as overlapped by the double buffer
         (its RTT is hidden).  A stream's first round can never be hidden —
@@ -77,6 +104,11 @@ class TransferScheduler:
         trading local buffer space for rounds, the engine-level version of
         REMON's batched fetch.  Returns all pages in the original order.
         """
+        if max_pages is not None and max_pages < 1:
+            raise ValueError(
+                f"read_coalesced needs max_pages >= 1 (or None for unbounded "
+                f"rounds), got {max_pages}"
+            )
         pages: List[np.ndarray] = []
         pending: List[int] = []
         issued = 0
@@ -96,6 +128,20 @@ class TransferScheduler:
             flush(pending)
         return pages
 
-    def write(self, pages: Sequence[np.ndarray]) -> List[int]:
-        """One flush-out round; returns the new remote page ids."""
+    def write(
+        self,
+        pages: Sequence[np.ndarray],
+        *,
+        tier: Union[int, str, None] = None,
+    ) -> List[int]:
+        """One flush-out round; returns the new remote page ids.
+
+        On a hierarchy the batch targets ``tier`` (default: the scheduler's
+        placement tier), waterfalling overflow to lower tiers — each tier
+        receiving pages accounts one round.
+        """
+        if self.is_hierarchy:
+            return self.remote.write_batch(
+                pages, tier=self.default_tier if tier is None else tier
+            )
         return self.remote.write_batch(pages)

@@ -1,13 +1,26 @@
-"""Faithful REMOP reproduction over a simulated remote-memory tier."""
+"""Faithful REMOP reproduction over simulated remote-memory tiers.
 
-from repro.remote.simulator import RemoteMemory, Relation, make_relation
+A single tier is a :class:`RemoteMemory`; an ordered stack of tiers with
+capacities, per-tier ledgers, and migration rounds is a
+:class:`MemoryHierarchy` (the runtime of the paper's Table I read as a
+DRAM -> RDMA -> SSD waterfall).
+"""
+
+from repro.remote.simulator import (
+    MemoryHierarchy,
+    RemoteMemory,
+    Relation,
+    make_hierarchy,
+    make_relation,
+)
 from repro.remote.bnlj import bnlj, bnlj_oracle, JoinResult
 from repro.remote.ems import ems_sort, ems_oracle, SortResult
 from repro.remote.ehj import ehj, ehj_oracle, HashJoinResult
 from repro.remote.eagg import eagg, eagg_oracle, AggResult
 
 __all__ = [
-    "RemoteMemory", "Relation", "make_relation",
+    "MemoryHierarchy", "RemoteMemory", "Relation",
+    "make_hierarchy", "make_relation",
     "bnlj", "bnlj_oracle", "JoinResult",
     "ems_sort", "ems_oracle", "SortResult",
     "ehj", "ehj_oracle", "HashJoinResult",

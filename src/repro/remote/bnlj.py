@@ -56,13 +56,18 @@ def bnlj(
     inner: Relation,
     plan: BNLJPlan,
     prefetch: bool = False,
+    tier: int | str | None = None,
 ) -> JoinResult:
-    """Run BNLJ with the given buffer plan; returns output + ledger deltas."""
+    """Run BNLJ with the given buffer plan; returns output + ledger deltas.
+
+    ``remote`` is a single tier or a :class:`MemoryHierarchy`; on a
+    hierarchy, ``tier`` names the placement the output spill is routed to.
+    """
     p_r = max(1, int(round(plan.outer_pages)))
     p_s = max(1, int(round(plan.inner_pages)))
     r_out = max(1, int(round(plan.output_pages)))
 
-    sched = TransferScheduler(remote)
+    sched = TransferScheduler(remote, tier=tier)
     before = sched.snapshot()
     out_pool = BufferPool(sched, r_out, outer.rows_per_page)
 

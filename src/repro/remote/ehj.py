@@ -43,13 +43,19 @@ def ehj(
     plan: EHJPlan,
     rows_per_page: int | None = None,
     prefetch: bool = False,
+    tier: int | str | None = None,
 ) -> HashJoinResult:
-    """Run the three-phase external hash join under `plan`."""
+    """Run the three-phase external hash join under `plan`.
+
+    ``remote`` is a single tier or a :class:`MemoryHierarchy`; on a
+    hierarchy, ``tier`` names the placement spilled partitions and output
+    are routed to.
+    """
     rows_per_page = rows_per_page or build.rows_per_page
     p = plan.partitions
     n_spilled = int(round(plan.sigma * p))
     spilled = set(range(p - n_spilled, p))  # deterministic spill set
-    sched = TransferScheduler(remote)
+    sched = TransferScheduler(remote, tier=tier)
     before = sched.snapshot()
     phase_rounds: Dict[str, int] = {}
 

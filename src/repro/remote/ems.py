@@ -78,9 +78,14 @@ def ems_sort(
     rows_per_page: int,
     prefetch: bool = False,
     count_run_formation: bool = True,
+    tier: int | str | None = None,
 ) -> SortResult:
-    """Full external merge sort of the pages' int64 keys under `plan`."""
-    sched = TransferScheduler(remote)
+    """Full external merge sort of the pages' int64 keys under `plan`.
+
+    ``remote`` is a single tier or a :class:`MemoryHierarchy`; on a
+    hierarchy, ``tier`` names the placement runs and merge output spill to.
+    """
+    sched = TransferScheduler(remote, tier=tier)
     before = sched.snapshot()
     m_pages = max(1, int(plan.m))
 

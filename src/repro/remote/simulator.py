@@ -14,21 +14,30 @@ mirroring REMON's batched evict/fetch interface.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Sequence
+import itertools
+import math
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.cost_model import TierSpec, TransferLedger
+from repro.core.cost_model import (
+    HierarchySnapshot,
+    HierarchySpec,
+    TierSpec,
+    TransferLedger,
+)
 
 
 class RemoteMemory:
     """A remote tier holding pages, with round/volume accounting."""
 
-    def __init__(self, tier: TierSpec):
+    def __init__(self, tier: TierSpec, _alloc: Optional[Iterator[int]] = None):
         self.tier = tier
         self.ledger = TransferLedger()
         self._store: dict[int, np.ndarray] = {}
-        self._next_id = 0
+        # Page-id allocator; a MemoryHierarchy passes one shared counter so
+        # ids are unique hierarchy-wide and survive tier migration.
+        self._alloc = itertools.count() if _alloc is None else _alloc
 
     # -- allocation ---------------------------------------------------------
 
@@ -41,9 +50,9 @@ class RemoteMemory:
         """Seed the store without accounting (initial data placement)."""
         ids = []
         for p in pages:
-            self._store[self._next_id] = np.asarray(p)
-            ids.append(self._next_id)
-            self._next_id += 1
+            i = next(self._alloc)
+            self._store[i] = np.asarray(p)
+            ids.append(i)
         return ids
 
     def peek_batch(self, page_ids: Sequence[int]) -> List[np.ndarray]:
@@ -70,8 +79,20 @@ class RemoteMemory:
         return ids
 
     def free(self, page_ids: Iterable[int]) -> None:
-        for i in page_ids:
-            self._store.pop(i, None)
+        """Drop pages from the store; unknown ids raise ``KeyError``.
+
+        Silently ignoring unknown ids would hide double-free bugs in
+        operators, so misuse fails loudly instead.
+        """
+        ids = list(page_ids)
+        missing = [i for i in ids if i not in self._store]
+        if missing:
+            raise KeyError(
+                f"cannot free page ids not resident on {self.tier.name!r}: "
+                f"{missing} (double free or wrong tier?)"
+            )
+        for i in ids:
+            del self._store[i]
 
     # -- reporting ------------------------------------------------------------
 
@@ -83,6 +104,279 @@ class RemoteMemory:
 
     def reset_accounting(self) -> None:
         self.ledger.reset()
+
+
+class MemoryHierarchy:
+    """An ordered stack of remote tiers with capacities and per-tier ledgers.
+
+    The runtime counterpart of :class:`repro.core.cost_model.HierarchySpec`
+    (paper Table I read as a DRAM -> RDMA -> SSD waterfall): each level owns a
+    :class:`RemoteMemory` store and its :class:`TransferLedger`; page ids are
+    allocated from one shared counter, so a page keeps its id as it migrates
+    between tiers and a hierarchy-wide placement map resolves reads.
+
+    Transfer semantics:
+
+      * ``write_batch(pages, tier=t)`` routes the batch to tier ``t``,
+        waterfalling overflow to lower tiers when ``t`` is at capacity — each
+        tier that receives pages accounts exactly one write round.
+      * ``read_batch(ids)`` resolves each page's tier from placement; each
+        tier touched accounts exactly one read round.
+      * ``migrate(ids, dst)`` moves a batch between tiers in *migration
+        rounds*: every adjacent-tier hop is one read round on the ledger it
+        leaves and one write round on the ledger it enters (one round on each
+        ledger it crosses).
+
+    A single-tier hierarchy therefore reproduces a bare :class:`RemoteMemory`
+    ledger exactly: every batch lands on the only tier in one round.
+    """
+
+    is_hierarchy = True  # structural marker (avoids import cycles in engine)
+
+    def __init__(self, spec: HierarchySpec):
+        self.spec = spec
+        self._alloc = itertools.count()
+        self.tiers: List[RemoteMemory] = [
+            RemoteMemory(lv.tier, _alloc=self._alloc) for lv in spec.levels
+        ]
+        self._placement: Dict[int, int] = {}
+
+    # -- resolution ----------------------------------------------------------
+
+    def tier_index(self, tier: Union[int, str, None]) -> int:
+        return 0 if tier is None else self.spec.index(tier)
+
+    def tier(self, tier: Union[int, str]) -> RemoteMemory:
+        return self.tiers[self.spec.index(tier)]
+
+    def tier_of(self, page_id: int) -> str:
+        """The tier name currently holding ``page_id``."""
+        try:
+            return self.spec.names[self._placement[page_id]]
+        except KeyError:
+            raise KeyError(f"page {page_id} is not resident in the hierarchy") from None
+
+    @property
+    def pages_resident(self) -> int:
+        return sum(rm.pages_resident for rm in self.tiers)
+
+    def tier_resident(self, tier: Union[int, str]) -> int:
+        return self.tier(tier).pages_resident
+
+    def capacity_left(self, tier: Union[int, str]) -> float:
+        idx = self.spec.index(tier)
+        return self.spec.levels[idx].capacity_pages - self.tiers[idx].pages_resident
+
+    # -- allocation (no accounting) ------------------------------------------
+
+    def put_local(
+        self, pages: Sequence[np.ndarray], tier: Union[int, str, None] = None
+    ) -> List[int]:
+        """Seed pages on a tier without accounting; default: the bottom tier.
+
+        Seeding models data already resident before the operator runs (input
+        relations), so it defaults to the capacity-rich backstop tier and
+        leaves upper tiers free for spill placement.  Capacities hold here
+        too: overflow waterfalls to lower tiers (no transfer rounds — the
+        data never moved), so occupancy can never exceed what the closed
+        forms (``tiered_split``/``waterfall_io``) assume.
+        """
+        idx = len(self.tiers) - 1 if tier is None else self.spec.index(tier)
+        ids: List[int] = []
+        remaining = list(pages)
+        while remaining:
+            if idx >= len(self.tiers):
+                raise RuntimeError(
+                    f"hierarchy full: {len(remaining)} seeded pages overflow "
+                    f"the bottom tier {self.spec.names[-1]!r}"
+                )
+            free = self.spec.levels[idx].capacity_pages - self.tiers[idx].pages_resident
+            take = len(remaining) if math.isinf(free) else min(len(remaining), max(int(free), 0))
+            if take > 0:
+                chunk_ids = self.tiers[idx].put_local(remaining[:take])
+                for i in chunk_ids:
+                    self._placement[i] = idx
+                ids.extend(chunk_ids)
+                remaining = remaining[take:]
+            idx += 1
+        return ids
+
+    def peek_batch(self, page_ids: Sequence[int]) -> List[np.ndarray]:
+        """Oracle-side reads without accounting (no transfer round)."""
+        return [
+            self.tiers[self._placement[i]]._store[i] for i in page_ids
+        ]
+
+    def free(self, page_ids: Iterable[int]) -> None:
+        """Drop pages wherever they reside; unknown ids raise ``KeyError``."""
+        ids = list(page_ids)
+        missing = [i for i in ids if i not in self._placement]
+        if missing:
+            raise KeyError(
+                f"cannot free page ids not resident in the hierarchy: {missing}"
+            )
+        for i in ids:
+            self.tiers[self._placement.pop(i)].free([i])
+
+    # -- batched transfer rounds ---------------------------------------------
+
+    def read_batch(
+        self, page_ids: Sequence[int], prefetched: bool = False
+    ) -> List[np.ndarray]:
+        """One swap-in round per tier the batch touches, placement-resolved."""
+        if not len(page_ids):
+            return []
+        by_tier: Dict[int, List[int]] = {}
+        for i in page_ids:
+            if i not in self._placement:
+                raise KeyError(f"page {i} is not resident in the hierarchy")
+            by_tier.setdefault(self._placement[i], []).append(i)
+        fetched: Dict[int, np.ndarray] = {}
+        for idx in sorted(by_tier):
+            ids = by_tier[idx]
+            for i, page in zip(ids, self.tiers[idx].read_batch(ids, prefetched)):
+                fetched[i] = page
+        return [fetched[i] for i in page_ids]
+
+    def write_batch(
+        self, pages: Sequence[np.ndarray], tier: Union[int, str, None] = None
+    ) -> List[int]:
+        """One flush-out round per tier receiving pages, waterfalling overflow.
+
+        The batch targets ``tier`` (default: the top tier); pages beyond the
+        target's remaining capacity cascade to the next tier down, each
+        receiving tier accounting exactly one write round for its share.
+        """
+        if not len(pages):
+            return []
+        idx = self.tier_index(tier)
+        ids: List[int] = []
+        remaining = list(pages)
+        while remaining:
+            if idx >= len(self.tiers):
+                raise RuntimeError(
+                    f"hierarchy full: {len(remaining)} pages overflow the "
+                    f"bottom tier {self.spec.names[-1]!r}"
+                )
+            free = self.spec.levels[idx].capacity_pages - self.tiers[idx].pages_resident
+            take = len(remaining) if math.isinf(free) else min(len(remaining), max(int(free), 0))
+            if take > 0:
+                chunk_ids = self.tiers[idx].write_batch(remaining[:take])
+                for i in chunk_ids:
+                    self._placement[i] = idx
+                ids.extend(chunk_ids)
+                remaining = remaining[take:]
+            idx += 1
+        return ids
+
+    # -- migration rounds ----------------------------------------------------
+
+    def migrate(self, page_ids: Sequence[int], dst: Union[int, str]) -> None:
+        """Move a batch to ``dst`` in adjacent-tier migration rounds.
+
+        Pages keep their ids.  Every adjacent hop is one read round on the
+        ledger it leaves and one write round on the ledger it enters, so a
+        two-level demotion crosses three ledgers with the middle one charged
+        on both sides.  The destination must have room for the whole batch
+        (pass-through tiers need none); short batches raise ``ValueError``.
+        """
+        if not len(page_ids):
+            return
+        dst_idx = self.spec.index(dst)
+        by_tier: Dict[int, List[int]] = {}
+        for i in page_ids:
+            if i not in self._placement:
+                raise KeyError(f"page {i} is not resident in the hierarchy")
+            by_tier.setdefault(self._placement[i], []).append(i)
+        incoming = sum(len(v) for t, v in by_tier.items() if t != dst_idx)
+        free = self.capacity_left(dst_idx)
+        if not math.isinf(free) and incoming > free:
+            raise ValueError(
+                f"tier {self.spec.names[dst_idx]!r} cannot hold {incoming} "
+                f"migrated pages (capacity left: {free})"
+            )
+        for src_idx in sorted(by_tier):
+            if src_idx == dst_idx:
+                continue
+            ids = by_tier[src_idx]
+            step = 1 if dst_idx > src_idx else -1
+            cur = src_idx
+            while cur != dst_idx:
+                nxt = cur + step
+                src_rm, dst_rm = self.tiers[cur], self.tiers[nxt]
+                pages = [src_rm._store[i] for i in ids]
+                src_rm.ledger.read(float(len(ids)))  # one round leaving `cur`
+                dst_rm.ledger.write(float(len(ids)))  # one round entering `nxt`
+                for i, page in zip(ids, pages):
+                    del src_rm._store[i]
+                    dst_rm._store[i] = page
+                    self._placement[i] = nxt
+                cur = nxt
+
+    def demote(self, page_ids: Sequence[int]) -> None:
+        """Migrate a batch one tier down (all pages must share a tier)."""
+        self._hop(page_ids, +1)
+
+    def promote(self, page_ids: Sequence[int]) -> None:
+        """Migrate a batch one tier up (all pages must share a tier)."""
+        self._hop(page_ids, -1)
+
+    def _hop(self, page_ids: Sequence[int], step: int) -> None:
+        if not len(page_ids):
+            return
+        tiers = {self._placement.get(i) for i in page_ids}
+        if None in tiers or len(tiers) != 1:
+            raise ValueError(
+                "demote/promote needs a batch resident on one tier; got "
+                f"placements {sorted('?' if t is None else self.spec.names[t] for t in tiers)}"
+            )
+        (src_idx,) = tiers
+        dst_idx = src_idx + step
+        if not 0 <= dst_idx < len(self.tiers):
+            raise ValueError(
+                f"cannot move {'down' if step > 0 else 'up'} from "
+                f"{'bottom' if step > 0 else 'top'} tier {self.spec.names[src_idx]!r}"
+            )
+        self.migrate(page_ids, dst_idx)
+
+    # -- reporting ------------------------------------------------------------
+
+    def snapshot(self) -> HierarchySnapshot:
+        return HierarchySnapshot(tiers=tuple(
+            (name, rm.ledger.snapshot())
+            for name, rm in zip(self.spec.names, self.tiers)
+        ))
+
+    def delta(self, since: HierarchySnapshot) -> HierarchySnapshot:
+        return HierarchySnapshot(tiers=tuple(
+            (name, rm.ledger.delta(since.tier(name)))
+            for name, rm in zip(self.spec.names, self.tiers)
+        ))
+
+    def latency_seconds(self, prefetch: bool = False) -> float:
+        """Eq. (1) summed over tiers, each with its own (BW, RTT)."""
+        return sum(rm.latency_seconds(prefetch) for rm in self.tiers)
+
+    def latency_cost(self) -> float:
+        """Hierarchy-wide L: per-tier D + tau_t * C summed over tiers."""
+        return sum(rm.latency_cost() for rm in self.tiers)
+
+    def reset_accounting(self) -> None:
+        for rm in self.tiers:
+            rm.reset_accounting()
+
+
+def make_hierarchy(
+    *levels: Union[TierSpec, str, Tuple[Union[TierSpec, str], float]],
+) -> MemoryHierarchy:
+    """Build a :class:`MemoryHierarchy` from tier / ``(tier, cap)`` levels.
+
+    Tiers are ``TierSpec``\\ s or names from Table I / TESTBED / TPU tiers,
+    e.g. ``make_hierarchy(("dram", 64), ("rdma", 1024), "ssd")``.
+    """
+    from repro.core.cost_model import hierarchy_spec
+
+    return MemoryHierarchy(hierarchy_spec(*levels))
 
 
 @dataclasses.dataclass

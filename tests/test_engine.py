@@ -224,6 +224,26 @@ def test_read_coalesced_merges_adjacent_rounds():
     )
 
 
+@pytest.mark.parametrize("max_pages", [0, -1, -7])
+def test_read_coalesced_rejects_nonpositive_max_pages(max_pages):
+    """Regression: max_pages <= 0 used to loop forever instead of raising."""
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 4, ROWS, seed=11)
+    with pytest.raises(ValueError, match="max_pages >= 1"):
+        sched.read_coalesced([ids], max_pages=max_pages)
+    assert remote.ledger.c_read == 0  # nothing was issued before the check
+
+
+def test_free_unknown_page_raises_keyerror():
+    """Regression: silently ignoring unknown ids hid double-free bugs."""
+    remote, sched = _mk()
+    ids = make_key_pages(remote, 3, ROWS, seed=12)
+    remote.free(ids)
+    with pytest.raises(KeyError, match="double free"):
+        remote.free(ids[:1])
+    assert remote.pages_resident == 0
+
+
 # ---------------------------------------------------------------------------
 # Registry / plan_operator
 # ---------------------------------------------------------------------------

@@ -1,0 +1,463 @@
+"""Multi-tier memory hierarchy: routing, migration, placement, arbitration.
+
+Acceptance (ISSUE 3):
+
+  * a 1-tier ``MemoryHierarchy`` reproduces today's D/C ledgers exactly for
+    all four operators (bnlj/ems/ehj/eagg);
+  * on a 3-tier DRAM -> RDMA -> SSD hierarchy the tiered closed-form policy
+    costs match the simulated per-tier ledgers (waterfall overflow included);
+  * the hierarchy-aware arbiter is never worse than the best feasible
+    single-tier placement.
+
+Plus the transfer-fabric semantics: writes name a tier and waterfall on
+overflow (one round per tier receiving pages), reads resolve placement (one
+round per tier touched), migration rounds charge one round on each ledger
+they cross, and per-tier ledgers always sum to the hierarchy-wide totals.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    TABLE_I,
+    TESTBED,
+    HierarchySpec,
+    TierLevel,
+    hierarchy_spec,
+)
+from repro.core.arbiter import HierarchyItem, arbitrate_hierarchy
+from repro.core.policies import (
+    eagg_costs_exact,
+    tiered_latency_cost,
+    tiered_split,
+    waterfall_io,
+)
+from repro.engine import (
+    BufferPool,
+    TransferScheduler,
+    WorkloadStats,
+    plan_operator,
+    plan_pipeline,
+    registry,
+    run_pipeline,
+)
+from repro.remote import MemoryHierarchy, RemoteMemory, make_hierarchy, make_relation
+from repro.remote.simulator import make_key_pages
+
+TIER = TESTBED["remon_tcp"]
+ROWS = 8
+
+STATS = WorkloadStats(size_r=40, size_s=80, out=24, selectivity=1 / 128,
+                      partitions=8, sigma=0.5, k_cap=8)
+
+
+def _run_operator(remote, op, tier_for_plan, m=14, seed=5, **run_kwargs):
+    """Seed a workload and run one operator; returns its result object."""
+    plan = plan_operator(op, STATS, tier_for_plan, m)
+    if op in ("bnlj", "ehj"):
+        r = make_relation(remote, 40 * ROWS, ROWS, 128, seed=seed)
+        s = make_relation(remote, 80 * ROWS, ROWS, 128, seed=seed + 1)
+        return registry.get(op).run(remote, r, s, plan, **run_kwargs)
+    if op == "ems":
+        ids = make_key_pages(remote, 40, ROWS, seed=seed)
+        return registry.get(op).run(remote, ids, plan, rows_per_page=ROWS,
+                                    **run_kwargs)
+    rel = make_relation(remote, 40 * ROWS, ROWS, 64, seed=seed)
+    return registry.get(op).run(remote, rel, plan, **run_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# HierarchySpec validation
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchy_spec_validates():
+    with pytest.raises(ValueError, match="at least one tier"):
+        HierarchySpec(())
+    with pytest.raises(ValueError, match="duplicate tier names"):
+        hierarchy_spec(TIER, TIER)
+    with pytest.raises(ValueError, match="capacity_pages > 0"):
+        TierLevel(TIER, 0.0)
+    spec = hierarchy_spec((TABLE_I["dram"], 64), TABLE_I["ssd"])
+    assert spec.names == ("dram", "ssd")
+    assert spec.capacities == (64.0, math.inf)
+    assert spec.index("ssd") == 1 and spec.index(-1) == 1
+    with pytest.raises(KeyError, match="no tier"):
+        spec.index("tape")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 1-tier hierarchy == bare RemoteMemory, all four operators
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["bnlj", "ems", "ehj", "eagg"])
+def test_single_tier_hierarchy_reproduces_ledgers_exactly(op):
+    bare = _run_operator(RemoteMemory(TIER), op, TIER)
+    hier = _run_operator(make_hierarchy(TIER), op, TIER)
+    assert (hier.d_read, hier.d_write, hier.c_read, hier.c_write) == \
+        (bare.d_read, bare.d_write, bare.c_read, bare.c_write)
+
+
+def test_single_tier_hierarchy_matches_oracle_output():
+    h = make_hierarchy(TIER)
+    outer = make_relation(h, 20 * ROWS, ROWS, 128, seed=21)
+    inner = make_relation(h, 40 * ROWS, ROWS, 128, seed=22)
+    plan = plan_operator("bnlj", WorkloadStats(selectivity=1 / 128), TIER, 11)
+    res = registry.get("bnlj").run(h, outer, inner, plan)
+    assert res.output_rows == len(registry.get("bnlj").oracle(h, outer, inner))
+
+
+# ---------------------------------------------------------------------------
+# Tier-routed transfer fabric
+# ---------------------------------------------------------------------------
+
+
+def _three_tier(dram_cap=64, rdma_cap=256):
+    return make_hierarchy((TABLE_I["dram"], dram_cap), (TABLE_I["rdma"], rdma_cap),
+                          TABLE_I["ssd"])
+
+
+def test_writes_name_a_tier_and_reads_resolve_placement():
+    h = _three_tier()
+    sched = TransferScheduler(h, tier="rdma")
+    page = np.arange(ROWS, dtype=np.int64)
+    ids_rdma = sched.write([page] * 3)  # default placement: rdma
+    ids_dram = sched.write([page] * 2, tier="dram")  # explicit override
+    assert {h.tier_of(i) for i in ids_rdma} == {"rdma"}
+    assert {h.tier_of(i) for i in ids_dram} == {"dram"}
+    assert h.tier("rdma").ledger.c_write == 1
+    assert h.tier("dram").ledger.c_write == 1
+    # One mixed read: one round per tier touched, pages in request order.
+    got = sched.read(ids_rdma + ids_dram)
+    assert len(got) == 5
+    assert h.tier("rdma").ledger.c_read == 1
+    assert h.tier("dram").ledger.c_read == 1
+    assert h.tier("ssd").ledger.c_total == 0
+
+
+def test_write_waterfalls_overflow_with_one_round_per_tier():
+    h = make_hierarchy((TABLE_I["dram"], 4), (TABLE_I["rdma"], 6), TABLE_I["ssd"])
+    sched = TransferScheduler(h, tier="dram")
+    page = np.arange(ROWS, dtype=np.int64)
+    sched.write([page] * 12)  # 4 to dram, 6 to rdma, 2 to ssd
+    assert [rm.ledger.d_write for rm in h.tiers] == [4.0, 6.0, 2.0]
+    assert [rm.ledger.c_write for rm in h.tiers] == [1, 1, 1]
+    assert h.tier_resident("dram") == 4 and h.capacity_left("dram") == 0
+
+
+def test_hierarchy_full_raises():
+    h = make_hierarchy((TABLE_I["dram"], 2), (TABLE_I["ssd"], 2))
+    page = np.arange(ROWS, dtype=np.int64)
+    with pytest.raises(RuntimeError, match="hierarchy full"):
+        h.write_batch([page] * 5, tier="dram")
+    with pytest.raises(RuntimeError, match="hierarchy full"):
+        h.put_local([page] * 5, tier="dram")
+
+
+def test_put_local_respects_capacities_without_accounting():
+    """Seeding waterfalls overflow like writes but charges no rounds."""
+    h = make_hierarchy((TABLE_I["dram"], 3), (TABLE_I["rdma"], 4), TABLE_I["ssd"])
+    ids = h.put_local([np.arange(ROWS, dtype=np.int64)] * 9, tier="dram")
+    assert [h.tier_resident(t) for t in ("dram", "rdma", "ssd")] == [3, 4, 2]
+    assert h.capacity_left("dram") == 0
+    assert all(rm.ledger.c_total == 0 for rm in h.tiers)  # no transfer rounds
+    assert len(ids) == 9 and h.pages_resident == 9
+
+
+def test_migration_rounds_charge_each_ledger_crossed():
+    h = _three_tier(dram_cap=10, rdma_cap=10)
+    ids = h.put_local([np.arange(ROWS, dtype=np.int64)] * 4, tier="dram")
+    h.demote(ids[:3])  # dram -> rdma: read round on dram, write round on rdma
+    assert (h.tier("dram").ledger.d_read, h.tier("dram").ledger.c_read) == (3.0, 1)
+    assert (h.tier("rdma").ledger.d_write, h.tier("rdma").ledger.c_write) == (3.0, 1)
+    h.migrate(ids[:3], "ssd")  # one more hop: rdma read, ssd write
+    assert (h.tier("rdma").ledger.d_read, h.tier("rdma").ledger.c_read) == (3.0, 1)
+    assert (h.tier("ssd").ledger.d_write, h.tier("ssd").ledger.c_write) == (3.0, 1)
+    h.promote(ids[:3])  # ssd -> rdma
+    assert {h.tier_of(i) for i in ids[:3]} == {"rdma"}
+    # Ids are stable across migration; data still readable in place.
+    np.testing.assert_array_equal(h.peek_batch(ids[:1])[0], np.arange(ROWS))
+    # A 2-level migration crosses the middle ledger on both sides.
+    h2 = _three_tier()
+    ids2 = h2.put_local([np.arange(ROWS, dtype=np.int64)] * 2, tier="dram")
+    h2.migrate(ids2, "ssd")
+    mid = h2.tier("rdma").ledger
+    assert (mid.c_write, mid.c_read) == (1, 1)
+    assert (mid.d_write, mid.d_read) == (2.0, 2.0)
+
+
+def test_migrate_validates_capacity_and_membership():
+    h = _three_tier(dram_cap=2)
+    ids = h.put_local([np.arange(ROWS, dtype=np.int64)] * 4, tier="ssd")
+    with pytest.raises(ValueError, match="cannot hold"):
+        h.migrate(ids, "dram")
+    with pytest.raises(KeyError, match="not resident"):
+        h.migrate([12345], "dram")
+    with pytest.raises(ValueError, match="one tier"):
+        h.demote([ids[0], h.put_local([np.zeros(ROWS)], tier="dram")[0]])
+    with pytest.raises(ValueError, match="bottom tier"):
+        h.demote(ids[:1])
+
+
+def test_free_raises_on_unknown_ids_everywhere():
+    """Satellite: silent double-free hiding is gone on both store types."""
+    remote = RemoteMemory(TIER)
+    ids = make_key_pages(remote, 3, ROWS, seed=1)
+    remote.free(ids[:1])
+    with pytest.raises(KeyError, match="double free"):
+        remote.free(ids[:1])
+    h = _three_tier()
+    hids = h.put_local([np.arange(ROWS)] * 2, tier="dram")
+    h.free(hids)
+    with pytest.raises(KeyError, match="not resident"):
+        h.free(hids)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: tiered closed forms match simulated per-tier ledgers
+# ---------------------------------------------------------------------------
+
+
+def test_waterfall_io_matches_simulated_per_tier_ledgers():
+    """A uniform-round spill stream: closed form == router, tier by tier."""
+    h = make_hierarchy((TABLE_I["dram"], 7), (TABLE_I["rdma"], 13), TABLE_I["ssd"])
+    sched = TransferScheduler(h, tier="dram")
+    pool = BufferPool(sched, 4, ROWS)
+    rng = np.random.default_rng(0)
+    pool.add(rng.integers(0, 100, size=(31 * ROWS, 2), dtype=np.int64))
+    pool.flush_all()
+    closed = waterfall_io(31, 4, h.spec.capacities)
+    for (d, c), rm in zip(closed, h.tiers):
+        assert rm.ledger.d_write == d
+        assert rm.ledger.c_write == c
+    # The hierarchy-wide L prices each tier's rounds with its own tau.
+    assert tiered_latency_cost(closed, h.spec.taus) == pytest.approx(
+        h.latency_cost()
+    )
+
+
+def test_tiered_split_waterfall():
+    assert tiered_split(10, [4, 4, math.inf]) == [4, 4, 2]
+    assert tiered_split(3, [4, 4, math.inf], occupied=[2, 0, 0]) == [2, 1, 0]
+    assert tiered_split(5, [8, math.inf], start=1) == [0, 5]
+    with pytest.raises(ValueError, match="overflow"):
+        tiered_split(10, [4, 4])
+
+
+@pytest.mark.parametrize("op", ["bnlj", "ems", "ehj", "eagg"])
+def test_operator_on_assigned_tier_matches_single_tier_ledger(op):
+    """An op placed on one hierarchy tier == the same op on that bare tier.
+
+    Inputs are seeded on the placement tier, so the whole run lands on one
+    per-tier ledger — which must equal the standalone single-tier ledger
+    (and hence the closed forms the single-tier tests pin down), while the
+    other tiers stay silent.
+    """
+    rdma = TABLE_I["rdma"]
+    h = make_hierarchy((TABLE_I["dram"], 512), (rdma, 2048), TABLE_I["ssd"])
+    hier = _run_operator(_SeededHierarchy(h, "rdma"), op, rdma, tier="rdma")
+    bare = _run_operator(RemoteMemory(rdma), op, rdma)
+    delta = h.tier("rdma").ledger
+    assert (hier.d_read, hier.d_write, hier.c_read, hier.c_write) == \
+        (bare.d_read, bare.d_write, bare.c_read, bare.c_write)
+    assert (delta.d_read, delta.d_write, delta.c_read, delta.c_write) == \
+        (bare.d_read, bare.d_write, bare.c_read, bare.c_write)
+    assert h.tier("dram").ledger.c_total == 0
+    assert h.tier("ssd").ledger.c_total == 0
+
+
+class _SeededHierarchy:
+    """A MemoryHierarchy proxy that seeds oracle data on a fixed tier."""
+
+    def __init__(self, h: MemoryHierarchy, seed_tier: str):
+        self._h = h
+        self._seed_tier = seed_tier
+
+    def put_local(self, pages):
+        return self._h.put_local(pages, tier=self._seed_tier)
+
+    def __getattr__(self, name):
+        return getattr(self._h, name)
+
+
+def test_eagg_closed_form_matches_hierarchy_tier_ledger():
+    """The ceil-exact eagg cost formula holds on a hierarchy tier's ledger."""
+    rdma = TABLE_I["rdma"]
+    h = make_hierarchy((TABLE_I["dram"], 512), (rdma, 4096), TABLE_I["ssd"])
+    seeded = _SeededHierarchy(h, "rdma")
+    rel = make_relation(seeded, 40 * ROWS, ROWS, 64, seed=5)
+    plan = plan_operator("eagg", STATS, rdma, 14)
+    res = registry.get("eagg").run(seeded, rel, plan, tier="rdma")
+
+    # Reconstruct the skew-aware closed-form inputs from the oracle.
+    rows = np.concatenate(h.peek_batch(rel.page_ids), axis=0)
+    p = plan.partitions
+    keys = rows[:, 0].astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    parts = ((keys >> np.uint64(33)) % np.uint64(p)).astype(np.int64)
+    n_spilled = int(round(plan.sigma * p))
+    spilled = set(range(p - n_spilled, p))
+    spilled_rows = [int((parts == q).sum()) for q in sorted(spilled)]
+    res_groups = len(np.unique(rows[~np.isin(parts, list(spilled))][:, 0]))
+    sp_groups = len(np.unique(rows[np.isin(parts, list(spilled))][:, 0]))
+    d, c = eagg_costs_exact(len(rel.page_ids), ROWS, spilled_rows,
+                            res_groups, sp_groups, plan)
+    led = h.tier("rdma").ledger
+    assert led.d_total == d
+    assert led.c_total == c
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy-wide snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchy_snapshot_tiers_sum_to_total():
+    h = _three_tier(dram_cap=8, rdma_cap=16)
+    sched = TransferScheduler(h, tier="dram")
+    page = np.arange(ROWS, dtype=np.int64)
+    before = sched.snapshot()
+    ids = sched.write([page] * 30)  # spreads over all three tiers
+    sched.read(ids[:10], prefetch=True)
+    h.migrate([i for i in ids if h.tier_of(i) == "dram"][:2], "ssd")
+    delta = sched.delta(before)
+    total = delta.total
+    assert total.d_read == sum(s.d_read for _, s in delta.tiers)
+    assert total.c_total == sum(s.c_total for _, s in delta.tiers)
+    assert delta.d_total == total.d_total and delta.c_total == total.c_total
+    # Spec-priced L decomposes per tier as well.
+    assert delta.latency_cost(h.spec) == pytest.approx(sum(
+        delta.tier(name).latency_cost(tau)
+        for name, tau in zip(h.spec.names, h.spec.taus)
+    ))
+    with pytest.raises(KeyError, match="no tier"):
+        delta.tier("tape")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: hierarchy-aware arbiter vs single-tier placements
+# ---------------------------------------------------------------------------
+
+PIPE_OPS = ["ehj", "ems", "eagg"]
+PIPE_STATS = [
+    WorkloadStats(size_r=48, size_s=96, out=36, partitions=8, sigma=0.5),
+    WorkloadStats(size_r=120, k_cap=8),
+    WorkloadStats(size_r=64, out=12, partitions=8, sigma=0.5),
+]
+
+
+def test_plan_pipeline_hierarchy_assigns_pages_and_tiers():
+    spec = hierarchy_spec((TABLE_I["dram"], 64), (TABLE_I["rdma"], 256),
+                          TABLE_I["ssd"])
+    pplan = plan_pipeline(PIPE_OPS, PIPE_STATS, spec, 56.0)
+    assert pplan.hierarchy == spec
+    assert sum(pplan.budgets) == pytest.approx(56.0)
+    assert all(p in spec.names for p in pplan.placements)
+    assert all(b >= registry.get(ob.op).min_pages
+               for b, ob in zip(pplan.budgets, pplan.ops))
+    # Modeled latency is priced with the placement tier's tau.
+    for ob in pplan.ops:
+        tau = spec.levels[spec.index(ob.placement)].tier.tau_pages
+        assert ob.modeled_latency == pytest.approx(
+            registry.get(ob.op).model(ob.stats, tau, ob.m_pages, "remop")
+        )
+    # Footprints (at each placement tier's tau) respect tier capacities.
+    used = {name: 0.0 for name in spec.names}
+    for ob in pplan.ops:
+        tau = spec.levels[spec.index(ob.placement)].tier.tau_pages
+        used[ob.placement] += registry.get(ob.op).footprint(
+            ob.stats, tau, ob.m_pages
+        )
+    for name, cap in zip(spec.names, spec.capacities):
+        assert used[name] <= cap + 1e-9
+
+
+def test_hierarchy_arbiter_never_worse_than_best_single_tier():
+    spec = hierarchy_spec((TABLE_I["dram"], 64), (TABLE_I["rdma"], 256),
+                          TABLE_I["ssd"])
+    m_total = 56.0
+    pplan = plan_pipeline(PIPE_OPS, PIPE_STATS, spec, m_total)
+    feasible = []
+    for level in spec.levels:
+        single = plan_pipeline(PIPE_OPS, PIPE_STATS, level.tier, m_total)
+        footprint = sum(
+            registry.get(ob.op).footprint(ob.stats, level.tier.tau_pages,
+                                          ob.m_pages)
+            for ob in single.ops
+        )
+        if footprint <= level.capacity_pages + 1e-9:
+            feasible.append(single.total_modeled_latency)
+    assert feasible, "the unbounded bottom tier must always be feasible"
+    assert pplan.total_modeled_latency <= min(feasible) + 1e-9
+
+
+def test_arbitrate_hierarchy_core_algorithm():
+    # Two items, two tiers: a fast tier that only fits one footprint.
+    items = [
+        HierarchyItem("a", 2.0, lambda m, t: (100.0 if t else 10.0) / m,
+                      footprint_of=lambda m, t: 6.0),
+        HierarchyItem("b", 2.0, lambda m, t: (100.0 if t else 10.0) / m,
+                      footprint_of=lambda m, t: 6.0),
+    ]
+    alloc, placement, total = arbitrate_hierarchy(items, 10.0, [8.0, math.inf])
+    assert sum(alloc) == pytest.approx(10.0)
+    assert sorted(placement) == [0, 1]  # capacity forces one item down
+    with pytest.raises(ValueError, match="below the pipeline floor"):
+        arbitrate_hierarchy(items, 3.0, [8.0, math.inf])
+    with pytest.raises(ValueError, match="empty hierarchy"):
+        arbitrate_hierarchy(items, 10.0, [])
+    with pytest.raises(ValueError, match="empty pipeline"):
+        arbitrate_hierarchy([], 10.0, [8.0])
+    # All tiers finite and too small for the footprints: explicit error
+    # instead of an assignment the runtime hierarchy could not honor.
+    with pytest.raises(ValueError, match="no capacity-feasible"):
+        arbitrate_hierarchy(items, 10.0, [8.0, 4.0])
+
+
+def test_run_pipeline_routes_spill_to_placements():
+    # rdma is roomy enough that no op's spill overflows its placement tier
+    # (the ehj join output is ~8x the planner's `out` estimate; with tighter
+    # capacities the waterfall would legitimately cascade the excess down).
+    h = _three_tier(dram_cap=64, rdma_cap=1024)
+    pplan = plan_pipeline(PIPE_OPS, PIPE_STATS, h, 56.0)
+    build = make_relation(h, 48 * ROWS, ROWS, 128, seed=31)
+    probe = make_relation(h, 96 * ROWS, ROWS, 128, seed=32)
+    sort_ids = make_key_pages(h, 120, ROWS, seed=33)
+    agg_rel = make_relation(h, 64 * ROWS, ROWS, 96, seed=34)
+    res = run_pipeline(h, pplan, [
+        ((build, probe), {}),
+        ((sort_ids,), {"rows_per_page": ROWS}),
+        ((agg_rel,), {}),
+    ])
+    # Inputs were seeded on the bottom tier; each op's spill writes land on
+    # its placement tier (capacities here are generous: no overflow).
+    for (op, _, delta), ob in zip(res.per_op, pplan.ops):
+        writes_elsewhere = sum(
+            s.d_write for name, s in delta.tiers if name != ob.placement
+        )
+        assert writes_elsewhere == 0.0, (op, ob.placement)
+        assert delta.tier(ob.placement).d_write > 0.0
+    # Per-op deltas compose to the measured hierarchy-wide totals.
+    assert sum(d.d_total for _, _, d in res.per_op) == res.total.d_total
+    assert sum(d.c_total for _, _, d in res.per_op) == res.total.c_total
+    assert res.latency_cost(h.spec) == pytest.approx(h.latency_cost())
+
+    # Wall latency must be priced per tier: TierSpec on a hierarchy run is
+    # a type error, HierarchySpec prices each tier's rounds with its own
+    # constants and matches the live hierarchy's reading.
+    with pytest.raises(TypeError, match="pass the HierarchySpec"):
+        res.latency_seconds(pplan.tier)
+    assert res.latency_seconds(pplan.hierarchy) == pytest.approx(
+        h.latency_seconds()
+    )
+
+    # Operators stay oracle-correct mid-pipeline on the hierarchy.
+    ehj_res, ems_res, eagg_res = (r for _, r, _ in res.per_op)
+    assert ehj_res.output_rows == registry.get("ehj").oracle(h, build, probe)
+    got = np.concatenate(
+        [h.peek_batch([i])[0].ravel() for i in ems_res.run_page_ids]
+    )
+    np.testing.assert_array_equal(got, registry.get("ems").oracle(h, sort_ids))
+    assert eagg_res.group_rows == len(registry.get("eagg").oracle(h, agg_rel))

@@ -1,0 +1,128 @@
+"""Property tests for TransferLedger / hierarchy ledger invariants (ISSUE 3).
+
+Uses ``hypothesis`` when installed (requirements-dev.txt); otherwise the
+deterministic fallback in ``tests/conftest.py`` runs the same properties over
+a fixed pseudo-random sample.  Invariants:
+
+  * ``snapshot``/``delta`` round-trip: mid-run snapshot plus the delta since
+    it reconstructs the live ledger exactly;
+  * ``merge`` additivity: merging ledgers sums every counter;
+  * ``latency_seconds(prefetch=True)`` never exceeds the unhidden latency;
+  * per-tier hierarchy ledgers always sum to the hierarchy-wide totals.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import TABLE_I, TESTBED
+from repro.core.cost_model import TransferLedger
+from repro.remote import make_hierarchy
+
+TIER = TESTBED["remon_tcp"]
+
+# An op stream: positive n = one write round of n pages, negative n = one
+# read round of |n| pages (marked prefetch-hidden when |n| is even and a
+# read already happened — keeps c_prefetch_hidden <= c_read by construction).
+op_streams = st.lists(st.integers(min_value=-8, max_value=8), min_size=0,
+                      max_size=30)
+
+
+def _apply(ledger: TransferLedger, ops) -> None:
+    for n in ops:
+        if n > 0:
+            ledger.write(float(n))
+        elif n < 0:
+            ledger.read(float(-n))
+            if n % 2 == 0 and ledger.c_read > 1:
+                ledger.c_prefetch_hidden += 1
+
+
+def _fields(snap):
+    return (snap.d_read, snap.d_write, snap.c_read, snap.c_write,
+            snap.c_prefetch_hidden)
+
+
+@settings(max_examples=60, deadline=None)
+@given(before=op_streams, after=op_streams)
+def test_snapshot_delta_roundtrip(before, after):
+    ledger = TransferLedger()
+    _apply(ledger, before)
+    s0 = ledger.snapshot()
+    _apply(ledger, after)
+    delta = ledger.delta(s0)
+    # s0 + delta reconstructs the live ledger, field by field.
+    recon = tuple(a + b for a, b in zip(_fields(s0), _fields(delta)))
+    assert recon == _fields(ledger.snapshot())
+    # Self-delta is zero; delta totals are consistent.
+    assert _fields(ledger.delta(ledger.snapshot())) == (0.0, 0.0, 0, 0, 0)
+    assert delta.d_total == delta.d_read + delta.d_write
+    assert delta.c_total == delta.c_read + delta.c_write
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops_a=op_streams, ops_b=op_streams)
+def test_merge_additivity(ops_a, ops_b):
+    a, b = TransferLedger(), TransferLedger()
+    _apply(a, ops_a)
+    _apply(b, ops_b)
+    expected = tuple(
+        x + y for x, y in zip(_fields(a.snapshot()), _fields(b.snapshot()))
+    )
+    a.merge(b)
+    assert _fields(a.snapshot()) == expected
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_streams)
+def test_prefetch_latency_never_exceeds_unhidden(ops):
+    ledger = TransferLedger()
+    _apply(ledger, ops)
+    assert ledger.c_prefetch_hidden <= ledger.c_total
+    hidden = ledger.latency_seconds(TIER, prefetch=True)
+    unhidden = ledger.latency_seconds(TIER, prefetch=False)
+    assert hidden <= unhidden + 1e-12
+    assert unhidden - hidden == pytest.approx(
+        ledger.c_prefetch_hidden * TIER.rtt
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dram_cap=st.integers(min_value=1, max_value=8),
+    rdma_cap=st.integers(min_value=1, max_value=8),
+    writes=st.lists(st.integers(min_value=1, max_value=6), min_size=0,
+                    max_size=12),
+    read_upto=st.integers(min_value=0, max_value=40),
+)
+def test_per_tier_ledgers_sum_to_hierarchy_total(dram_cap, rdma_cap, writes,
+                                                 read_upto):
+    h = make_hierarchy((TABLE_I["dram"], dram_cap), (TABLE_I["rdma"], rdma_cap),
+                       TABLE_I["ssd"])
+    page = np.arange(4, dtype=np.int64)
+    ids = []
+    for n in writes:
+        ids.extend(h.write_batch([page] * n, tier="dram"))
+    migrated = 0
+    if ids:
+        h.read_batch(ids[: min(read_upto, len(ids))])
+        bottom = [i for i in ids if h.tier_of(i) == "ssd"]
+        if bottom and h.capacity_left("rdma") >= len(bottom[:2]):
+            migrated = len(bottom[:2])
+            h.migrate(bottom[:2], "rdma")
+    snap = h.snapshot()
+    total = snap.total
+    per_tier = [s for _, s in snap.tiers]
+    assert total.d_read == sum(s.d_read for s in per_tier)
+    assert total.d_write == sum(s.d_write for s in per_tier)
+    assert total.c_read == sum(s.c_read for s in per_tier)
+    assert total.c_write == sum(s.c_write for s in per_tier)
+    assert snap.d_total == total.d_total and snap.c_total == total.c_total
+    # No pages lost or duplicated by routing: every page written lands once;
+    # each migration hop re-enters exactly one tier's write ledger.
+    assert total.d_write == float(sum(writes) + migrated)
+    # Spec-priced cost decomposes per tier.
+    assert snap.latency_cost(h.spec) == pytest.approx(sum(
+        s.latency_cost(tau) for s, tau in zip(per_tier, h.spec.taus)
+    ))
