@@ -1,9 +1,11 @@
 """Query pipelines under one budget: memory arbiter vs even split.
 
-Composes multi-operator pipelines (the TPC-style spilling-query stand-in) and
-compares the arbiter's budget split against the naive even split, on both the
-modeled latency cost (the quantity the arbiter minimizes) and the *simulated*
-wall latency of running every operator against one shared RemoteMemory.
+Composes multi-operator pipelines (the TPC-style spilling-query stand-in)
+through the session API — typed ``session.task`` inputs, ``session.plan``
+arbitration, ``session.run`` execution — and compares the arbiter's budget
+split against the naive even split, on both the modeled latency cost (the
+quantity the arbiter minimizes) and the *simulated* wall latency of running
+every operator against one shared ledger.
 
 Besides the usual CSV rows, writes ``BENCH_pipeline.json`` at the repo root —
 the machine-readable perf trajectory artifact CI uploads on every push.
@@ -15,13 +17,8 @@ import json
 import os
 
 from repro.core import TABLE_I
-from repro.engine import (
-    WorkloadStats,
-    model_latency,
-    plan_pipeline,
-    run_pipeline,
-)
-from repro.remote import RemoteMemory, make_relation
+from repro.engine import Session, WorkloadStats, model_latency
+from repro.remote import make_relation
 from repro.remote.simulator import make_key_pages
 from benchmarks.common import Row, timed
 
@@ -31,7 +28,7 @@ ROWS = 8
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                          "BENCH_pipeline.json")
 
-# (name, ops, per-op stats, global budget M, workload builder).
+# (name, ops, per-op stats, global budget M).
 PIPELINES = [
     (
         "join_sort", ["ehj", "ems"],
@@ -49,36 +46,49 @@ PIPELINES = [
 ]
 
 
-def _workloads(remote, ops, stats, seed=0):
+def _tasks(sess: Session, ops, stats, seed=0, with_data: bool = True):
+    """The pipeline's typed tasks; data-free tasks are enough for planning."""
     built = []
     for i, (op, st) in enumerate(zip(ops, stats)):
         s = seed + 10 * i
         if op in ("bnlj", "ehj"):
-            r = make_relation(remote, int(st.size_r) * ROWS, ROWS, 2048 if op == "bnlj" else 96,
-                              seed=s)
-            q = make_relation(remote, int(st.size_s) * ROWS, ROWS, 2048 if op == "bnlj" else 96,
-                              seed=s + 1)
-            built.append(((r, q), {}))
+            names = ("outer", "inner") if op == "bnlj" else ("build", "probe")
+            inputs = None
+            if with_data:
+                domain = 2048 if op == "bnlj" else 96
+                r = make_relation(sess.remote, int(st.size_r) * ROWS, ROWS,
+                                  domain, seed=s)
+                q = make_relation(sess.remote, int(st.size_s) * ROWS, ROWS,
+                                  domain, seed=s + 1)
+                inputs = dict(zip(names, (r, q)))
+            built.append(sess.task(op, st, inputs=inputs))
         elif op == "ems":
-            built.append(((make_key_pages(remote, int(st.size_r), ROWS, seed=s),),
-                          {"rows_per_page": ROWS}))
+            ids = (make_key_pages(sess.remote, int(st.size_r), ROWS, seed=s)
+                   if with_data else None)
+            built.append(sess.task(
+                op, st, inputs={"page_ids": ids} if with_data else None,
+                rows_per_page=ROWS))
         else:  # eagg
-            built.append(((make_relation(remote, int(st.size_r) * ROWS, ROWS, 128,
-                                         seed=s),), {}))
+            rel = (make_relation(sess.remote, int(st.size_r) * ROWS, ROWS, 128,
+                                 seed=s) if with_data else None)
+            built.append(sess.task(
+                op, st, inputs={"rel": rel} if with_data else None))
     return built
 
 
-def _simulate(pplan, ops, stats) -> float:
-    remote = RemoteMemory(TIER)
-    run_pipeline(remote, pplan, _workloads(remote, ops, stats))
-    return remote.latency_seconds()
+def _simulate(ops, stats, m_total, plan=None) -> float:
+    sess = Session(TIER, budget=m_total)
+    tasks = _tasks(sess, ops, stats)
+    sess.run(tasks, plan=plan if plan is not None else sess.plan(tasks))
+    return sess.remote.latency_seconds()
 
 
 def run() -> list[Row]:
     rows_out: list[Row] = []
     report = {"schema": 1, "tier": TIER_NAME, "pipelines": []}
     for name, ops, stats, m_total in PIPELINES:
-        arb = plan_pipeline(ops, stats, TIER, m_total)
+        planner = Session(TIER, budget=m_total)
+        arb = planner.plan(_tasks(planner, ops, stats, with_data=False))
         even = [m_total / len(ops)] * len(ops)
         even_modeled = sum(
             model_latency(op, st, TIER, m) for op, st, m in zip(ops, stats, even)
@@ -86,7 +96,8 @@ def run() -> list[Row]:
         even_plan = _even_pipeline(ops, stats, m_total)
 
         def simulate_pair():
-            return _simulate(arb, ops, stats), _simulate(even_plan, ops, stats)
+            return (_simulate(ops, stats, m_total, plan=arb),
+                    _simulate(ops, stats, m_total, plan=even_plan))
 
         us, (lat_arb, lat_even) = timed(simulate_pair, repeats=1)
         modeled_red = 1 - arb.total_modeled_latency / even_modeled

@@ -1,0 +1,121 @@
+"""Mid-pipeline adaptive re-planning: ``replan="measured"`` vs a static plan.
+
+The ROADMAP's known misestimation case: the EHJ output estimate can be ~8x
+off at high selectivity.  This benchmark builds a pipeline whose sort
+consumes the join's output — EHJ (out underestimated 8x) -> EMS over
+``join.output`` -> an independent EAGG — and runs it twice through the
+session API:
+
+  * **static**: the arbitrated plan computed from the (wrong) estimates is
+    executed as-is;
+  * **replan**: ``session.run(tasks, replan="measured")`` feeds the join's
+    *measured* output cardinality back after it finishes and re-arbitrates
+    the remaining operators' budgets (and, on the hierarchy scenario, their
+    tier placements against the measured residual capacity).
+
+Reported per scenario: simulated wall latency of both runs and the replan's
+latency reduction.  Writes ``BENCH_session.json`` at the repo root — gated by
+``scripts/check_regression.py`` in CI like the other BENCH artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+from repro.core import TABLE_I
+from repro.engine import Session, WorkloadStats
+from repro.engine.registry import hierarchy_spec
+from repro.remote import make_relation
+from benchmarks.common import Row
+
+ROWS = 8
+M_TOTAL = 64.0
+EST_OUT = 97.0  # the EHJ out estimate; measured output is ~8x larger
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_session.json")
+
+SCENARIOS = [
+    ("tcp", lambda: TABLE_I["tcp"]),
+    ("dram_rdma_ssd", lambda: hierarchy_spec(
+        (TABLE_I["dram"], 64), (TABLE_I["rdma"], 512), TABLE_I["ssd"])),
+]
+
+
+def _tasks(sess: Session, with_data: bool = True):
+    """EHJ (out ~8x underestimated) -> EMS over its output, plus an EAGG."""
+    if with_data:
+        build = make_relation(sess.remote, 48 * ROWS, ROWS, 48, seed=31)
+        probe = make_relation(sess.remote, 96 * ROWS, ROWS, 48, seed=32)
+        agg = make_relation(sess.remote, 96 * ROWS, ROWS, 128, seed=34)
+        join_inputs = {"build": build, "probe": probe}
+        agg_inputs = {"rel": agg}
+    else:  # data-free tasks: enough for plan()/explain()
+        join_inputs = agg_inputs = None
+    join = sess.task("ehj", WorkloadStats(size_r=48, size_s=96, out=EST_OUT,
+                                          partitions=8, sigma=0.5),
+                     inputs=join_inputs)
+    sort = sess.task("ems", WorkloadStats(size_r=EST_OUT, k_cap=8),
+                     inputs={"page_ids": join.output}, rows_per_page=ROWS)
+    aggt = sess.task("eagg", WorkloadStats(size_r=96, out=16, partitions=8,
+                                           sigma=0.5), inputs=agg_inputs)
+    return [join, sort, aggt]
+
+
+def _run(target, replan):
+    sess = Session(target, budget=M_TOTAL)
+    tasks = _tasks(sess)
+    res = sess.run(tasks, replan=replan)
+    return sess, res
+
+
+def run() -> List[Row]:
+    rows_out: List[Row] = []
+    report = {"schema": 1, "m_total": M_TOTAL, "est_out": EST_OUT,
+              "scenarios": []}
+    for name, target_fn in SCENARIOS:
+        t0 = time.perf_counter()
+        _, res_static = _run(target_fn(), replan=None)
+        sess, res_replan = _run(target_fn(), replan="measured")
+        us = (time.perf_counter() - t0) * 1e6
+
+        lat_static = res_static.latency_seconds()
+        lat_replan = res_replan.latency_seconds()
+        reduction = 1 - lat_replan / lat_static
+        measured_out = res_replan.per_task[0].measured.out
+        events = [
+            {
+                "after": ev.after_label,
+                "measured_out": ev.measured_out,
+                "budgets_before": list(ev.budgets_before),
+                "budgets_after": list(ev.budgets_after),
+                "placements_before": list(ev.placements_before),
+                "placements_after": list(ev.placements_after),
+            }
+            for ev in res_replan.replan_events
+        ]
+        planner = Session(target_fn(), budget=M_TOTAL)
+        rows_out.append((f"session_{name}_replan_sim_latency_reduction_vs_static",
+                         us, round(reduction, 4)))
+        report["scenarios"].append({
+            "name": name,
+            "measured_out": measured_out,
+            "estimate_error": measured_out / EST_OUT,
+            "static_budgets": list(res_static.plan.budgets),
+            "replan_events": events,
+            "simulated_seconds": {"static": lat_static, "replan": lat_replan},
+            "explain": planner.explain(
+                _tasks(planner, with_data=False)).to_dict(),
+        })
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows_out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,7 +1,8 @@
 """Memory-hierarchy sweeps: placement-aware arbiter vs single-tier spilling.
 
 Sweeps DRAM -> RDMA -> SSD capacity splits (Table I constants) for a fixed
-multi-operator pipeline and compares three ways of placing spill:
+multi-operator pipeline — planned and executed through the session API — and
+compares three ways of placing spill:
 
   * the hierarchy-aware arbiter (joint pages + tier assignment),
   * the best *feasible* single-tier placement (all operators' spill on one
@@ -27,10 +28,10 @@ from typing import List, Optional
 
 from repro.core import TABLE_I
 from repro.core.cost_model import HierarchySpec
-from repro.engine import WorkloadStats, plan_pipeline, registry, run_pipeline
+from repro.engine import Session, WorkloadStats, registry
 from repro.engine.pipeline import OperatorBudget, PipelinePlan
 from repro.engine.registry import hierarchy_spec, model_latency, plan_operator
-from repro.remote import MemoryHierarchy, make_relation
+from repro.remote import make_relation
 from repro.remote.simulator import make_key_pages
 from benchmarks.common import Row
 
@@ -54,10 +55,32 @@ def _spec(dram_cap: float, rdma_cap: float) -> HierarchySpec:
                           TABLE_I["ssd"])
 
 
+def _tasks(sess: Session, with_data: bool = True):
+    """The pipeline's typed tasks; data-free tasks are enough for planning."""
+    if with_data:
+        build = make_relation(sess.remote, 48 * ROWS, ROWS, 96, seed=31)
+        probe = make_relation(sess.remote, 96 * ROWS, ROWS, 96, seed=32)
+        sort_ids = make_key_pages(sess.remote, 120, ROWS, seed=33)
+        agg_rel = make_relation(sess.remote, 64 * ROWS, ROWS, 128, seed=34)
+        inputs = [
+            {"build": build, "probe": probe},
+            {"page_ids": sort_ids},
+            {"rel": agg_rel},
+        ]
+    else:
+        inputs = [None, None, None]
+    options = [{}, {"rows_per_page": ROWS}, {}]
+    return [
+        sess.task(op, st, inputs=inp, **opt)
+        for op, st, inp, opt in zip(OPS, STATS, inputs, options)
+    ]
+
+
 def _single_tier_plan(spec: HierarchySpec, t: int) -> Optional[PipelinePlan]:
     """All ops placed on tier ``t`` (pages via the 1-D arbiter), if it fits."""
     level = spec.levels[t]
-    single = plan_pipeline(OPS, STATS, level.tier, M_TOTAL)
+    planner = Session(level.tier, budget=M_TOTAL)
+    single = planner.plan(_tasks(planner, with_data=False))
     footprint = sum(
         registry.get(ob.op).footprint(ob.stats, level.tier.tau_pages, ob.m_pages)
         for ob in single.ops
@@ -77,22 +100,10 @@ def _single_tier_plan(spec: HierarchySpec, t: int) -> Optional[PipelinePlan]:
                         policy="remop", ops=budgets, hierarchy=spec)
 
 
-def _workloads(h: MemoryHierarchy):
-    build = make_relation(h, 48 * ROWS, ROWS, 96, seed=31)
-    probe = make_relation(h, 96 * ROWS, ROWS, 96, seed=32)
-    sort_ids = make_key_pages(h, 120, ROWS, seed=33)
-    agg_rel = make_relation(h, 64 * ROWS, ROWS, 128, seed=34)
-    return [
-        ((build, probe), {}),
-        ((sort_ids,), {"rows_per_page": ROWS}),
-        ((agg_rel,), {}),
-    ]
-
-
 def _simulate(spec: HierarchySpec, pplan: PipelinePlan) -> float:
-    h = MemoryHierarchy(spec)
-    run_pipeline(h, pplan, _workloads(h))
-    return h.latency_seconds()
+    sess = Session(spec, budget=M_TOTAL)
+    sess.run(_tasks(sess), plan=pplan)
+    return sess.remote.latency_seconds()
 
 
 def run() -> list[Row]:
@@ -101,7 +112,8 @@ def run() -> list[Row]:
               "ops": OPS, "sweeps": []}
     for dram_cap, rdma_cap in SWEEPS:
         spec = _spec(dram_cap, rdma_cap)
-        arb = plan_pipeline(OPS, STATS, spec, M_TOTAL)
+        planner = Session(spec, budget=M_TOTAL)
+        arb = planner.plan(_tasks(planner, with_data=False))
 
         singles = []
         for t in range(len(spec)):

@@ -1,7 +1,8 @@
 """Quickstart: REMOP in 60 seconds.
 
 1. The paper's cost model + policies (exact Table III / IV / VI math).
-2. The simulated remote-memory substrate running a real BNLJ.
+2. A session running a real spilling pipeline over simulated remote memory:
+   typed tasks, ``explain()``, one shared ledger.
 3. The TPU planner sizing Pallas matmul tiles with the same algebra.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -10,8 +11,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 from repro.core import TABLE_I, latency_cost
 from repro.core.policies import bnlj_costs_exact, ems_kopt
 from repro.core.planner import conventional_matmul_tiles, plan_matmul_tiles
-from repro.engine import WorkloadStats, plan_operator, registry
-from repro.remote import RemoteMemory, make_relation
+from repro.engine import Session, WorkloadStats
+from repro.remote import make_relation
 
 # --- 1. the cost model -------------------------------------------------------
 tcp = TABLE_I["tcp"]
@@ -25,19 +26,22 @@ print(f"equal-split BNLJ:  D={d:.0f} pages, C={c:.0f} rounds, "
       f"L={latency_cost(d, c, tcp.tau_pages):.0f}   <- REMOP's trade")
 print(f"EMS optimal fan-in at alpha=16: k* = {ems_kopt(16)} (paper Table IV: 17)")
 
-# --- 2. a real operator over simulated remote memory -------------------------
-remote = RemoteMemory(tcp)
-outer = make_relation(remote, 60 * 8, 8, key_domain=256, seed=0)
-inner = make_relation(remote, 120 * 8, 8, key_domain=256, seed=1)
+# --- 2. a session running a real operator over simulated remote memory -------
 stats = WorkloadStats(size_r=60, size_s=120, selectivity=1 / 256)
-for name in ("conventional", "remop"):
-    plan = plan_operator("bnlj", stats, tcp, 13, policy=name)
-    remote.reset_accounting()
-    res = registry.get("bnlj").run(remote, outer, inner, plan)
-    print(f"BNLJ[{name:12s}] rounds={res.c_read + res.c_write:5d} "
-          f"pages={res.d_read + res.d_write:7.0f} "
-          f"sim latency={remote.latency_seconds()*1e3:8.1f} ms "
-          f"(output rows={res.output_rows})")
+for policy in ("conventional", "remop"):
+    session = Session(tcp, budget=13, policy=policy)
+    outer = make_relation(session.remote, 60 * 8, 8, key_domain=256, seed=0)
+    inner = make_relation(session.remote, 120 * 8, 8, key_domain=256, seed=1)
+    join = session.task("bnlj", stats, inputs={"outer": outer, "inner": inner})
+    res = session.run([join])
+    d = res.total
+    print(f"BNLJ[{policy:12s}] rounds={d.c_total:5d} pages={d.d_total:7.0f} "
+          f"sim latency={res.latency_seconds()*1e3:8.1f} ms "
+          f"(output rows={res.per_task[0].result.output_rows})")
+
+# The plan, inspectable before a single page moves:
+session = Session(tcp, budget=13)
+print(session.explain([session.task("bnlj", stats)]))
 
 # --- 3. the same algebra sizing TPU matmul tiles ------------------------------
 m, k, n = 4096, 3072, 24576  # gemma-7b FFN

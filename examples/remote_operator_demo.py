@@ -2,74 +2,66 @@
 
 Reproduces the shape of the paper's evaluation story in one script:
 conventional vs DuckDB-like vs REMOP vs REMOP+prefetch, across SSD / TCP /
-RDMA tiers, reporting D, C, and Eq.-(1) latency.
+RDMA tiers, reporting D, C, and Eq.-(1) latency.  Every run goes through the
+session API: one :class:`repro.engine.Session` per (tier, policy) owning the
+simulated tier, the scheduler, and the budget, with typed task inputs.
 
 Run:  PYTHONPATH=src python examples/remote_operator_demo.py
 """
 
 from repro.core import TABLE_I
-from repro.engine import WorkloadStats, plan_operator, registry
-from repro.remote import RemoteMemory, make_relation
+from repro.engine import Session, WorkloadStats
+from repro.remote import make_relation
 from repro.remote.simulator import make_key_pages
 
 M, M_B = 13.0, 24.0
 
 
-def run_bnlj(remote, plan, prefetch=False):
-    outer = make_relation(remote, 60 * 8, 8, 512, seed=0)
-    inner = make_relation(remote, 120 * 8, 8, 512, seed=1)
-    remote.reset_accounting()
-    registry.get("bnlj").run(remote, outer, inner, plan, prefetch=prefetch)
+def bnlj_task(session, prefetch):
+    outer = make_relation(session.remote, 60 * 8, 8, 512, seed=0)
+    inner = make_relation(session.remote, 120 * 8, 8, 512, seed=1)
+    return session.task(
+        "bnlj", WorkloadStats(size_r=60, size_s=120, selectivity=1 / 512),
+        inputs={"outer": outer, "inner": inner}, prefetch=prefetch)
 
 
-def run_ems(remote, plan, prefetch=False):
-    ids = make_key_pages(remote, 128, 8, seed=2)
-    remote.reset_accounting()
-    registry.get("ems").run(remote, ids, plan, rows_per_page=8,
-                            prefetch=prefetch, count_run_formation=False)
+def ems_task(session, prefetch):
+    ids = make_key_pages(session.remote, 128, 8, seed=2)
+    return session.task(
+        "ems", WorkloadStats(size_r=128, k_cap=8), inputs={"page_ids": ids},
+        rows_per_page=8, prefetch=prefetch, count_run_formation=False)
 
 
-def run_ehj(remote, plan, prefetch=False):
-    build = make_relation(remote, 48 * 8, 8, 64, seed=3)
-    probe = make_relation(remote, 96 * 8, 8, 64, seed=4)
-    remote.reset_accounting()
-    registry.get("ehj").run(remote, build, probe, plan, prefetch=prefetch)
+def ehj_task(session, prefetch):
+    build = make_relation(session.remote, 48 * 8, 8, 64, seed=3)
+    probe = make_relation(session.remote, 96 * 8, 8, 64, seed=4)
+    return session.task(
+        "ehj", WorkloadStats(size_r=48, size_s=96, out=36, partitions=16,
+                             sigma=0.5),
+        inputs={"build": build, "probe": probe}, prefetch=prefetch)
+
+
+# (operator, budget, task builder, policies: display tag -> registry policy).
+OPS = [
+    ("bnlj", M, bnlj_task, {"conventional": "conventional", "remop": "remop"}),
+    ("ems", M, ems_task, {"duckdb-2way": "duckdb", "remop": "remop"}),
+    ("ehj", M_B, ehj_task, {"starved-pools": "conventional", "remop": "remop"}),
+]
 
 
 def main():
     for tier_name in ("ssd", "tcp", "rdma"):
         tier = TABLE_I[tier_name]
-        tau = tier.tau_pages
-        print(f"\n=== tier {tier_name}: tau = {tau:.3f} pages ===")
-        bnlj_stats = WorkloadStats(size_r=60, size_s=120, selectivity=1 / 512)
-        ems_stats = WorkloadStats(size_r=128, k_cap=8)
-        ehj_stats = WorkloadStats(size_r=48, size_s=96, out=36,
-                                  partitions=16, sigma=0.5)
-        ops = {
-            "bnlj": (run_bnlj, {
-                "conventional": plan_operator("bnlj", bnlj_stats, tier, M,
-                                              policy="conventional"),
-                "remop": plan_operator("bnlj", bnlj_stats, tier, M),
-            }),
-            "ems": (run_ems, {
-                "duckdb-2way": plan_operator("ems", ems_stats, tier, M,
-                                             policy="duckdb"),
-                "remop": plan_operator("ems", ems_stats, tier, M),
-            }),
-            "ehj": (run_ehj, {
-                "starved-pools": plan_operator("ehj", ehj_stats, tier, M_B,
-                                               policy="conventional"),
-                "remop": plan_operator("ehj", ehj_stats, tier, M_B),
-            }),
-        }
-        for op_name, (runner, plans) in ops.items():
-            for plan_name, plan in plans.items():
-                for prefetch in ((False, True) if plan_name == "remop" else (False,)):
-                    remote = RemoteMemory(tier)
-                    runner(remote, plan, prefetch=prefetch)
-                    led = remote.ledger
-                    tag = plan_name + ("+prefetch" if prefetch else "")
-                    print(f"  {op_name:5s} {tag:22s} D={led.d_total:7.0f} "
+        print(f"\n=== tier {tier_name}: tau = {tier.tau_pages:.3f} pages ===")
+        for op_name, budget, builder, plans in OPS:
+            for tag, policy in plans.items():
+                for prefetch in ((False, True) if tag == "remop" else (False,)):
+                    session = Session(tier, budget=budget, policy=policy)
+                    task = builder(session, prefetch)
+                    session.run([task])
+                    led = session.remote.ledger
+                    shown = tag + ("+prefetch" if prefetch else "")
+                    print(f"  {op_name:5s} {shown:22s} D={led.d_total:7.0f} "
                           f"C={led.c_total:6d} "
                           f"latency={led.latency_seconds(tier, prefetch=prefetch)*1e3:9.2f} ms")
 

@@ -23,6 +23,7 @@ engine-facing wrapper is :func:`repro.engine.pipeline.plan_pipeline`.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, List, Sequence, Tuple
 
 
@@ -146,6 +147,7 @@ def arbitrate_hierarchy(
     budget: float,
     capacities: Sequence[float],
     step: float = 1.0,
+    occupied: Sequence[float] | None = None,
 ) -> Tuple[List[float], List[int], float]:
     """Split one page budget AND place each item on a hierarchy tier.
 
@@ -155,11 +157,17 @@ def arbitrate_hierarchy(
     split by :func:`arbitrate`) is also evaluated, so the result is never
     worse than the best single-tier placement.
 
+    ``occupied`` gives per-tier pages already consumed — the *measured*
+    residency of a partially-executed pipeline — so a mid-query
+    re-arbitration places the remaining items into the capacity that is
+    actually left, not the capacity the original plan assumed.
+
     Returns ``(allocations, tier indices, total modeled latency)``;
     allocations sum to ``budget`` and respect every item's floor, and the
-    placement fits every tier's capacity.  When no candidate satisfies both
-    (every tier finite and footprint-full), raises ``ValueError`` instead of
-    returning an assignment the runtime hierarchy could not honor.
+    placement fits every tier's remaining capacity.  When no candidate
+    satisfies both (every tier finite and footprint-full), raises
+    ``ValueError`` instead of returning an assignment the runtime hierarchy
+    could not honor.
     """
     if not items:
         raise ValueError("empty pipeline: nothing to arbitrate")
@@ -172,6 +180,15 @@ def arbitrate_hierarchy(
     n_tiers = len(capacities)
     if n_tiers == 0:
         raise ValueError("empty hierarchy: nothing to place on")
+    if occupied is not None:
+        if len(occupied) != n_tiers:
+            raise ValueError(
+                f"occupied has {len(occupied)} tiers, capacities {n_tiers}"
+            )
+        capacities = [
+            c if math.isinf(c) else max(c - o, 0.0)
+            for c, o in zip(capacities, occupied)
+        ]
 
     candidates: List[Tuple[List[float], List[int]]] = [
         _greedy_joint(items, budget, capacities, step)

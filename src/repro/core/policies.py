@@ -259,6 +259,33 @@ def ems_latency(n: float, m: float, plan: EMSPlan, tau: float) -> float:
     return d + tau * c
 
 
+def ems_run_formation_costs(n: float, m: float) -> Tuple[float, float]:
+    """(D, C) of run formation (§III-B a): one read + one write round per
+    M-page chunk, each chunk moving its pages twice (in to sort, out as a run).
+
+    This is the single closed form shared by the registry's EMS latency model,
+    the session ``explain()`` report, and the benchmarks; it matches the
+    simulated ledger of :func:`repro.remote.ems.ems_sort` with
+    ``count_run_formation=True`` exactly (one ``read``/``write`` scheduler
+    round per chunk, D = 2N).
+    """
+    chunks = math.ceil(n / max(m, 1.0))
+    return 2.0 * n, 2.0 * chunks
+
+
+def ems_total_costs(n: float, m: float, plan: EMSPlan) -> Tuple[float, float]:
+    """(D, C) of the whole sort: run formation plus all merge passes."""
+    d_merge, c_merge, _ = ems_costs(n, m, plan)
+    d_rf, c_rf = ems_run_formation_costs(n, m)
+    return d_merge + d_rf, c_merge + c_rf
+
+
+def ems_total_latency(n: float, m: float, plan: EMSPlan, tau: float) -> float:
+    """L = D + tau*C of the whole sort including run formation."""
+    d, c = ems_total_costs(n, m, plan)
+    return d + tau * c
+
+
 def ems_h(k: float, a: float) -> float:
     """h(k) = [2 + (sqrt(k)+1)^2 / alpha] / log2(k) (§III-B d)."""
     if k <= 1.0:

@@ -22,11 +22,14 @@ move data across the remote tier exclusively through this layer:
     (plan type, buffer policies, runner, oracle, latency model, min_pages);
     :func:`plan_operator` is the single planning entry point used by the
     benchmark harness.
-  * ``engine.pipeline`` plans whole queries: :func:`plan_pipeline` hands a
-    global budget to the :mod:`repro.core.arbiter` (minimizing total modeled
-    latency across the registered operators' cost models) and
-    :func:`run_pipeline` executes the result against one shared
-    ``RemoteMemory`` ledger.
+  * ``engine.session`` is the query-facing surface: a :class:`Session` owns
+    the remote target, the scheduler, the policy, and the global budget, and
+    exposes typed ``session.task(op, stats, inputs=...)`` construction,
+    ``session.plan``/``session.explain`` (structured plan reports), and
+    ``session.run`` with optional measured-feedback re-planning
+    (``replan="measured"``).
+  * ``engine.pipeline`` holds the shared plan dataclasses and the deprecated
+    ``plan_pipeline``/``run_pipeline`` shims (ledger-exact over the session).
 
 The accounting contract (paper §II, Definitions 1–3)
 ----------------------------------------------------
@@ -64,6 +67,7 @@ from repro.engine.registry import (
     OperatorPlan,
     OperatorSpec,
     WorkloadStats,
+    model_costs,
     model_latency,
     plan_operator,
     resolve_hierarchy,
@@ -76,14 +80,33 @@ from repro.engine.pipeline import (
     plan_pipeline,
     run_pipeline,
 )
+from repro.engine.session import (
+    OperatorTask,
+    PlanReport,
+    ReplanEvent,
+    Session,
+    SessionRunResult,
+    TaskExplain,
+    TaskOutput,
+    TaskRun,
+)
 
 __all__ = [
+    "Session",
+    "OperatorTask",
+    "TaskOutput",
+    "TaskRun",
+    "TaskExplain",
+    "PlanReport",
+    "ReplanEvent",
+    "SessionRunResult",
     "BufferPool",
     "PageCursor",
     "TransferScheduler",
     "OperatorPlan",
     "OperatorSpec",
     "WorkloadStats",
+    "model_costs",
     "model_latency",
     "plan_operator",
     "resolve_hierarchy",

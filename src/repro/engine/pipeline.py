@@ -20,11 +20,19 @@ target: all operators account on the same ledger stack, and per-operator D/C
 come back as snapshot deltas (engine contract rule 4), so pipeline totals are
 measured, not summed estimates.  On a hierarchy each operator's spill writes
 are routed to its planned placement tier.
+
+.. deprecated::
+    ``plan_pipeline`` and ``run_pipeline`` are thin shims over the
+    session-centric API (:class:`repro.engine.session.Session`): build typed
+    tasks with ``session.task(op, stats, inputs=...)`` and use
+    ``session.plan`` / ``session.run`` / ``session.explain`` instead.  The
+    shims stay ledger-exact with ``Session.run`` (tests/test_session.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.arbiter import ArbiterItem, HierarchyItem, arbitrate, arbitrate_hierarchy
@@ -37,7 +45,6 @@ from repro.engine.registry import (
     resolve_hierarchy,
     resolve_tier,
 )
-from repro.engine.scheduler import TransferScheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +112,15 @@ def _is_hierarchy(tier: Any) -> bool:
     )
 
 
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use the session API instead "
+        f"(repro.engine.Session: {new})",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def plan_pipeline(
     ops: Sequence[str],
     stats: Union[WorkloadStats, Sequence[WorkloadStats]],
@@ -113,7 +129,7 @@ def plan_pipeline(
     policy: str = "remop",
     step: float = 1.0,
 ) -> PipelinePlan:
-    """Split ``m_pages`` across ``ops`` minimizing total modeled latency.
+    """Deprecated shim over ``Session.plan``: split ``m_pages`` across ``ops``.
 
     ``stats`` is one :class:`WorkloadStats` per operator (or a single one
     broadcast to all).  ``tier`` is a single tier (TierSpec or name) or a
@@ -122,6 +138,24 @@ def plan_pipeline(
     Budgets sum to exactly ``m_pages`` and each respects the operator's
     ``min_pages``; infeasible budgets raise ``ValueError``.
     """
+    _warn_deprecated("plan_pipeline", "session.plan(tasks)")
+    return _plan_pipeline(ops, stats, tier, m_pages, policy, step)
+
+
+def _plan_pipeline(
+    ops: Sequence[str],
+    stats: Union[WorkloadStats, Sequence[WorkloadStats]],
+    tier: Any,
+    m_pages: float,
+    policy: str = "remop",
+    step: float = 1.0,
+) -> PipelinePlan:
+    """The shared planning core behind ``Session.plan`` and the legacy shim."""
+    if not list(ops):
+        raise ValueError(
+            "empty pipeline: plan_pipeline needs at least one operator "
+            "(got ops=[])"
+        )
     if _is_hierarchy(tier):
         return _plan_pipeline_hierarchy(
             ops, stats, resolve_hierarchy(tier), m_pages, policy, step
@@ -242,28 +276,37 @@ def run_pipeline(
     pplan: PipelinePlan,
     workloads: Sequence[Tuple[Sequence[Any], Optional[Dict[str, Any]]]],
 ) -> PipelineRunResult:
-    """Run every operator of ``pplan`` in order against one remote target.
+    """Deprecated shim over ``Session.run``: execute ``pplan`` on ``remote``.
 
-    ``workloads[i]`` is ``(args, kwargs)`` for operator ``i``'s data plane:
-    ``spec.run(remote, *args, plan, **kwargs)`` — e.g. ``((outer, inner), {})``
-    for BNLJ or ``((page_ids,), {"rows_per_page": 8})`` for EMS.  All
-    operators share ``remote``'s ledger stack; per-operator D/C are snapshot
-    deltas.  When ``remote`` is a :class:`MemoryHierarchy` and the plan
-    carries placements, each operator's spill writes target its planned tier.
+    ``workloads[i]`` is the legacy positional ``(args, kwargs)`` tuple for
+    operator ``i``'s data plane — the args are bound to the operator's typed
+    input signature in declaration order and handed to a one-shot
+    :class:`repro.engine.session.Session`, so the shim is ledger-exact with
+    ``session.run(tasks)``.  All operators share ``remote``'s ledger stack;
+    per-operator D/C are snapshot deltas.  When ``remote`` is a
+    :class:`MemoryHierarchy` and the plan carries placements, each operator's
+    spill writes target its planned tier.
     """
+    _warn_deprecated("run_pipeline", "session.run(tasks)")
+    from repro.engine.session import Session
+
     if len(workloads) != len(pplan.ops):
         raise ValueError(
             f"got {len(workloads)} workloads for {len(pplan.ops)} operators"
         )
-    sched = TransferScheduler(remote)
-    route_tiers = bool(getattr(remote, "is_hierarchy", False))
-    before = sched.snapshot()
-    per_op: List[Tuple[str, Any, Any]] = []
+    session = Session(remote, budget=pplan.m_total, policy=pplan.policy)
+    tasks = []
     for ob, (args, kwargs) in zip(pplan.ops, workloads):
-        t0 = sched.snapshot()
-        call_kwargs = dict(kwargs or {})
-        if route_tiers and ob.placement is not None:
-            call_kwargs.setdefault("tier", ob.placement)
-        result = get(ob.op).run(remote, *args, ob.plan, **call_kwargs)
-        per_op.append((ob.op, result, sched.delta(t0)))
-    return PipelineRunResult(per_op=per_op, total=sched.delta(before))
+        spec = get(ob.op)
+        if len(args) != len(spec.inputs):
+            raise ValueError(
+                f"operator {ob.op!r} takes {len(spec.inputs)} data-plane "
+                f"inputs {list(spec.inputs)}; got {len(args)} positional "
+                f"values"
+            )
+        tasks.append(session.task(
+            ob.op, ob.stats, inputs=dict(zip(spec.inputs, args)),
+            **(kwargs or {}),
+        ))
+    res = session.run(tasks, plan=pplan)
+    return PipelineRunResult(per_op=res.per_op, total=res.total)

@@ -14,9 +14,17 @@ stack) is one ``register()`` call.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Protocol, Tuple, Union, runtime_checkable
-
-import math
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Mapping,
+    Optional,
+    Protocol,
+    Tuple,
+    Union,
+    runtime_checkable,
+)
 
 from repro.core.cost_model import (
     HierarchySpec,
@@ -30,19 +38,21 @@ from repro.core.policies import (
     EHJPlan,
     EMSPlan,
     bnlj_conventional,
-    bnlj_latency,
+    bnlj_costs,
     bnlj_plan,
-    eagg_latency,
+    eagg_data_costs,
     eagg_plan,
+    eagg_round_costs,
     eagg_starved,
-    ehj_latency,
+    ehj_data_costs,
     ehj_plan,
+    ehj_round_costs,
     ehj_starved,
     ems_conventional,
-    ems_costs,
     ems_duckdb,
     ems_passes,
     ems_plan,
+    ems_total_costs,
 )
 
 
@@ -77,11 +87,17 @@ Planner = Callable[[WorkloadStats, float, float, str], OperatorPlan]
 # Modeled latency cost L(stats, tau, m_pages, policy) — the arbiter's
 # marginal-cost hook (repro.core.arbiter consumes L as a function of m).
 LatencyModel = Callable[[WorkloadStats, float, float, str], float]
+# Modeled (D, C) of the policy's plan at budget m — the structured form the
+# session ``explain()`` report decomposes L = D + tau*C from.
+CostModel = Callable[[WorkloadStats, float, float, str], Tuple[float, float]]
 # Estimated remote spill footprint F(stats, tau, m_pages) in pages — what a
 # tier's capacity constrains when the hierarchy arbiter places an operator.
 # tau matters because the plan itself is tau-dependent (e.g. the EMS merge
 # fan-in, hence pass count, changes with the placement tier).
 Footprint = Callable[[WorkloadStats, float, float], float]
+# Measured-feedback hook: (estimated stats, run result) -> stats with the
+# *measured* output cardinality, for mid-pipeline re-planning.
+MeasuredStats = Callable[[WorkloadStats, Any], WorkloadStats]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +113,35 @@ class OperatorSpec:
     model: Optional[LatencyModel] = None  # modeled L for pipeline arbitration
     min_pages: float = 3.0  # smallest plannable budget (pages)
     footprint: Optional[Footprint] = None  # spill pages parked on the tier
+    costs: Optional[CostModel] = None  # modeled (D, C) behind ``model``
+    # Typed input signature (session API): ordered names of the data-plane
+    # inputs ``run`` takes positionally, and the WorkloadStats field each one
+    # sizes (so a re-planner can refresh an estimate from a measured input).
+    inputs: Tuple[str, ...] = ()
+    input_stats: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    measured_stats: Optional[MeasuredStats] = None  # replan feedback hook
+    output_of: Optional[Callable[[Any], Any]] = None  # run result -> output pages
+
+    def bind_inputs(self, inputs: Mapping[str, Any]) -> Tuple[Any, ...]:
+        """Resolve named inputs to ``run``'s positional argument order.
+
+        Raises ``ValueError`` naming the expected signature when an input is
+        missing or unknown — the typed replacement for the legacy positional
+        ``(args, kwargs)`` workload tuples.
+        """
+        unknown = sorted(set(inputs) - set(self.inputs))
+        missing = [name for name in self.inputs if name not in inputs]
+        if unknown or missing:
+            problems = []
+            if missing:
+                problems.append(f"missing {missing}")
+            if unknown:
+                problems.append(f"unknown {unknown}")
+            raise ValueError(
+                f"operator {self.name!r} takes inputs {list(self.inputs)}: "
+                + ", ".join(problems)
+            )
+        return tuple(inputs[name] for name in self.inputs)
 
 
 _REGISTRY: Dict[str, OperatorSpec] = {}
@@ -189,6 +234,24 @@ def model_latency(
     return spec.model(stats, resolve_tier(tier).tau_pages, float(m_pages), policy)
 
 
+def model_costs(
+    op: str,
+    stats: WorkloadStats,
+    tier: Union[TierSpec, str],
+    m_pages: float,
+    policy: str = "remop",
+) -> Tuple[float, float]:
+    """Modeled (D, C) for ``op`` planned with ``m_pages`` on ``tier``.
+
+    The structured decomposition behind :func:`model_latency`
+    (L = D + tau*C) — what ``Session.explain`` reports per operator.
+    """
+    spec = get(op)
+    if spec.costs is None:
+        raise ValueError(f"operator {op!r} has no cost model")
+    return spec.costs(stats, resolve_tier(tier).tau_pages, float(m_pages), policy)
+
+
 # --------------------------------------------------------------------------
 # Built-in operators
 # --------------------------------------------------------------------------
@@ -222,32 +285,57 @@ def _plan_eagg(stats: WorkloadStats, tau: float, m: float, policy: str) -> EAggP
     return eagg_plan(stats.size_r, stats.out, m, stats.partitions, stats.sigma)
 
 
-# Latency models: closed-form L = D + tau*C of the policy's plan at budget m.
-# Each is (weakly) decreasing in m, which is what the arbiter's greedy
-# marginal-cost descent assumes.
+# Cost models: closed-form (D, C) of the policy's plan at budget m; the
+# latency models below collapse them to L = D + tau*C.  Each L is (weakly)
+# decreasing in m, which is what the arbiter's greedy marginal-cost descent
+# assumes; the (D, C) split is what ``Session.explain`` reports per operator.
 
 
-def _model_bnlj(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+def _costs_bnlj(
+    stats: WorkloadStats, tau: float, m: float, policy: str
+) -> Tuple[float, float]:
     plan = _plan_bnlj(stats, tau, m, policy)
-    return bnlj_latency(stats.size_r, stats.size_s, stats.out, plan, tau)
+    return bnlj_costs(stats.size_r, stats.size_s, stats.out, plan)
 
 
-def _model_ems(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+def _costs_ems(
+    stats: WorkloadStats, tau: float, m: float, policy: str
+) -> Tuple[float, float]:
+    # Run formation + merge passes, one shared closed form (core.policies).
     plan = _plan_ems(stats, tau, m, policy)
-    d, c, _ = ems_costs(stats.size_r, m, plan)
-    # Run formation (§III-B a): one read + one write round per M-page chunk.
-    chunks = math.ceil(stats.size_r / max(m, 1.0))
-    return (d + 2.0 * stats.size_r) + tau * (c + 2.0 * chunks)
+    return ems_total_costs(stats.size_r, m, plan)
 
 
-def _model_ehj(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+def _costs_ehj(
+    stats: WorkloadStats, tau: float, m: float, policy: str
+) -> Tuple[float, float]:
     plan = _plan_ehj(stats, tau, m, policy)
-    return ehj_latency(stats.size_r, stats.size_s, stats.out, plan, tau)
+    d = sum(ehj_data_costs(stats.size_r, stats.size_s, stats.out, plan.sigma))
+    c = sum(ehj_round_costs(stats.size_r, stats.size_s, stats.out, plan))
+    return d, c
 
 
-def _model_eagg(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+def _costs_eagg(
+    stats: WorkloadStats, tau: float, m: float, policy: str
+) -> Tuple[float, float]:
     plan = _plan_eagg(stats, tau, m, policy)
-    return eagg_latency(stats.size_r, stats.out, plan, tau)
+    d = sum(eagg_data_costs(stats.size_r, stats.out, plan.sigma))
+    c = sum(eagg_round_costs(stats.size_r, stats.out, plan))
+    return d, c
+
+
+def _model_from(costs: CostModel) -> LatencyModel:
+    def model(stats: WorkloadStats, tau: float, m: float, policy: str) -> float:
+        d, c = costs(stats, tau, m, policy)
+        return d + tau * c
+
+    return model
+
+
+_model_bnlj = _model_from(_costs_bnlj)
+_model_ems = _model_from(_costs_ems)
+_model_ehj = _model_from(_costs_ehj)
+_model_eagg = _model_from(_costs_eagg)
 
 
 # Spill footprints: pages an operator parks on its placement tier over a run
@@ -293,33 +381,46 @@ def _ensure_builtin() -> None:
     # The flag is only set once registration succeeds, so a failed deferred
     # import resurfaces as the real ImportError on the next lookup instead of
     # a misleading "unknown operator" KeyError.
-    from repro.remote.bnlj import bnlj, bnlj_oracle
-    from repro.remote.eagg import eagg, eagg_oracle
-    from repro.remote.ehj import ehj, ehj_oracle
-    from repro.remote.ems import ems_oracle, ems_sort
+    # importlib lookups: the ``repro.remote`` package re-exports the runner
+    # *functions* under the same names as the submodules, so plain
+    # ``import repro.remote.bnlj as m`` would bind the function instead.
+    import importlib
+
+    bnlj_mod = importlib.import_module("repro.remote.bnlj")
+    eagg_mod = importlib.import_module("repro.remote.eagg")
+    ehj_mod = importlib.import_module("repro.remote.ehj")
+    ems_mod = importlib.import_module("repro.remote.ems")
 
     register(OperatorSpec(
         name="bnlj", plan_type=BNLJPlan,
         policies=("remop", "conventional"),
-        planner=_plan_bnlj, run=bnlj, oracle=bnlj_oracle,
-        model=_model_bnlj, footprint=_fp_bnlj,
+        planner=_plan_bnlj, run=bnlj_mod.bnlj, oracle=bnlj_mod.bnlj_oracle,
+        model=_model_bnlj, footprint=_fp_bnlj, costs=_costs_bnlj,
+        inputs=bnlj_mod.INPUTS, input_stats=bnlj_mod.INPUT_STATS,
+        measured_stats=bnlj_mod.bnlj_measured, output_of=bnlj_mod.bnlj_output,
     ))
     register(OperatorSpec(
         name="ems", plan_type=EMSPlan,
         policies=("remop", "conventional", "duckdb"),
-        planner=_plan_ems, run=ems_sort, oracle=ems_oracle,
-        model=_model_ems, footprint=_fp_ems,
+        planner=_plan_ems, run=ems_mod.ems_sort, oracle=ems_mod.ems_oracle,
+        model=_model_ems, footprint=_fp_ems, costs=_costs_ems,
+        inputs=ems_mod.INPUTS, input_stats=ems_mod.INPUT_STATS,
+        measured_stats=ems_mod.ems_measured, output_of=ems_mod.ems_output,
     ))
     register(OperatorSpec(
         name="ehj", plan_type=EHJPlan,
         policies=("remop", "conventional"),
-        planner=_plan_ehj, run=ehj, oracle=ehj_oracle,
-        model=_model_ehj, footprint=_fp_ehj,
+        planner=_plan_ehj, run=ehj_mod.ehj, oracle=ehj_mod.ehj_oracle,
+        model=_model_ehj, footprint=_fp_ehj, costs=_costs_ehj,
+        inputs=ehj_mod.INPUTS, input_stats=ehj_mod.INPUT_STATS,
+        measured_stats=ehj_mod.ehj_measured, output_of=ehj_mod.ehj_output,
     ))
     register(OperatorSpec(
         name="eagg", plan_type=EAggPlan,
         policies=("remop", "conventional"),
-        planner=_plan_eagg, run=eagg, oracle=eagg_oracle,
-        model=_model_eagg, footprint=_fp_eagg,
+        planner=_plan_eagg, run=eagg_mod.eagg, oracle=eagg_mod.eagg_oracle,
+        model=_model_eagg, footprint=_fp_eagg, costs=_costs_eagg,
+        inputs=eagg_mod.INPUTS, input_stats=eagg_mod.INPUT_STATS,
+        measured_stats=eagg_mod.eagg_measured, output_of=eagg_mod.eagg_output,
     ))
     _builtin_registered = True

@@ -25,7 +25,7 @@ Every batched read/write an operator issues flows through one
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -47,6 +47,7 @@ class TransferScheduler:
         self.remote = target
         self.is_hierarchy: bool = bool(getattr(target, "is_hierarchy", False))
         self.default_tier: Union[int, str, None] = tier
+        self._checkpoints: Dict[str, Snapshot] = {}
         if self.is_hierarchy:
             # Resolve early so a bad placement fails at construction.
             self.default_tier = target.tier_index(tier)
@@ -69,6 +70,36 @@ class TransferScheduler:
         if self.is_hierarchy:
             return self.remote.delta(since)
         return self.remote.ledger.delta(since)
+
+    # -- named checkpoints ---------------------------------------------------
+    #
+    # Per-task bookkeeping for the session executor: a checkpoint freezes the
+    # ledger state under a label so the per-task delta (and a mid-pipeline
+    # re-planner's "what has this task cost so far") can be read back without
+    # the caller threading snapshot objects through its control flow.
+
+    def checkpoint(self, label: str) -> Snapshot:
+        """Freeze the current ledger state under ``label`` (overwriting)."""
+        snap = self.snapshot()
+        self._checkpoints[label] = snap
+        return snap
+
+    def restore(self, label: str) -> Snapshot:
+        """Return the snapshot frozen under ``label``."""
+        try:
+            return self._checkpoints[label]
+        except KeyError:
+            raise ValueError(
+                f"no checkpoint {label!r}; have {sorted(self._checkpoints)}"
+            ) from None
+
+    def since(self, label: str) -> Snapshot:
+        """Ledger delta accumulated since ``checkpoint(label)``."""
+        return self.delta(self.restore(label))
+
+    def drop_checkpoint(self, label: str) -> None:
+        """Forget ``label`` (missing labels are ignored)."""
+        self._checkpoints.pop(label, None)
 
     # -- transfer rounds -----------------------------------------------------
 

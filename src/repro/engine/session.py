@@ -1,0 +1,657 @@
+"""Session-centric execution API: typed tasks, ``explain()``, adaptive replan.
+
+A :class:`Session` owns everything one spilling query needs — the remote
+target (a single :class:`repro.remote.simulator.RemoteMemory` tier or a whole
+:class:`repro.remote.simulator.MemoryHierarchy`), the
+:class:`repro.engine.scheduler.TransferScheduler` routing every transfer
+round, the buffer policy, and the global page budget — and exposes the
+planning loop as one object:
+
+  * ``session.task(op, stats, inputs=...)`` builds a typed
+    :class:`OperatorTask`: named data-plane inputs validated against the
+    operator's declared signature (``OperatorSpec.inputs``) instead of the
+    legacy positional ``(args, kwargs)`` tuples, with ``task.output`` usable
+    as a downstream task's input so pipelines chain by reference.
+  * ``session.plan(tasks)`` arbitrates the global budget (and, on a
+    hierarchy, the tier placements) across the tasks — the same arbitration
+    the legacy ``plan_pipeline`` performed.
+  * ``session.explain(tasks)`` returns a structured :class:`PlanReport`:
+    per-operator budget, placement, modeled D/C/L, and spill footprint
+    against tier capacity — the plan, inspectable before a single page moves.
+  * ``session.run(tasks)`` executes against the session's one shared ledger
+    stack; ``session.run(tasks, replan="measured")`` additionally feeds each
+    finished operator's *measured* output cardinality (via the operator's
+    ``measured_stats`` hook) and the live hierarchy's consumed capacity back
+    into the arbiter, re-planning the remaining operators' budgets and tier
+    placements mid-pipeline — the capacity-aware re-planning loop the
+    ROADMAP calls for (the EHJ output estimate can be ~8x off; see
+    ``benchmarks/bench_session.py``).
+
+The legacy ``plan_pipeline``/``run_pipeline`` entry points remain as thin
+deprecated shims over this module with exact-ledger parity
+(``tests/test_session.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.arbiter import (
+    ArbiterItem,
+    HierarchyItem,
+    arbitrate,
+    arbitrate_hierarchy,
+)
+from repro.core.cost_model import HierarchySpec, TierSpec
+from repro.engine.registry import (
+    WorkloadStats,
+    get,
+    plan_operator,
+    resolve_hierarchy,
+    resolve_tier,
+)
+from repro.engine.scheduler import TransferScheduler
+
+# --------------------------------------------------------------------------
+# Typed tasks
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class OperatorTask:
+    """One typed pipeline member: an operator, its stats, and named inputs.
+
+    ``inputs`` maps the operator's declared input names (see
+    ``OperatorSpec.inputs``) to data-plane values — a ``Relation``, a page-id
+    list, or another task's :class:`TaskOutput` (``task.output``), resolved
+    when the producing task has run.  ``options`` carries the remaining run
+    keywords (``rows_per_page``, ``prefetch``, ...).  Tasks compare by
+    identity so the same task object can be referenced from several places.
+    """
+
+    op: str
+    stats: WorkloadStats
+    inputs: Mapping[str, Any]
+    options: Mapping[str, Any]
+    label: str
+
+    @property
+    def output(self) -> "TaskOutput":
+        """A reference to this task's output pages, bindable downstream."""
+        return TaskOutput(self)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TaskOutput:
+    """Marker binding a downstream input to an earlier task's output pages."""
+
+    task: OperatorTask
+
+
+# --------------------------------------------------------------------------
+# explain(): the structured plan report
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskExplain:
+    """One operator's row of the plan report."""
+
+    op: str
+    label: str
+    m_pages: float
+    placement: str  # tier name the spill is routed to
+    tau: float
+    modeled_d: float
+    modeled_c: float
+    modeled_latency: float  # L = D + tau*C
+    footprint: float  # estimated spill pages parked on the placement tier
+    capacity: float  # the placement tier's total capacity (inf = unbounded)
+    min_pages: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["capacity"] = None if math.isinf(self.capacity) else self.capacity
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    """``session.explain(tasks)``: the arbitrated plan, decomposed.
+
+    ``tasks`` holds one :class:`TaskExplain` per operator;
+    ``tier_footprints`` aggregates the estimated spill residency per tier
+    against its capacity.  ``str(report)`` renders an aligned table.
+    """
+
+    policy: str
+    m_total: float
+    target: str  # tier name, or "dram->rdma->ssd" for a hierarchy
+    tasks: Tuple[TaskExplain, ...]
+    tier_footprints: Tuple[Tuple[str, float, float], ...]  # (tier, fp, cap)
+
+    @property
+    def total_modeled_latency(self) -> float:
+        return sum(t.modeled_latency for t in self.tasks)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "policy": self.policy,
+            "m_total": self.m_total,
+            "target": self.target,
+            "total_modeled_latency": self.total_modeled_latency,
+            "tasks": [t.to_dict() for t in self.tasks],
+            "tier_footprints": [
+                {"tier": name, "footprint": fp,
+                 "capacity": None if math.isinf(cap) else cap}
+                for name, fp, cap in self.tier_footprints
+            ],
+        }
+
+    def __str__(self) -> str:
+        header = (f"plan: policy={self.policy} M={self.m_total:g} "
+                  f"target={self.target}")
+        cols = ("op", "label", "M_i", "tier", "D", "C", "L", "footprint/cap")
+        rows = [cols]
+        for t in self.tasks:
+            cap = "inf" if math.isinf(t.capacity) else f"{t.capacity:g}"
+            rows.append((
+                t.op, t.label, f"{t.m_pages:g}", t.placement,
+                f"{t.modeled_d:.1f}", f"{t.modeled_c:.1f}",
+                f"{t.modeled_latency:.1f}", f"{t.footprint:g}/{cap}",
+            ))
+        widths = [max(len(r[i]) for r in rows) for i in range(len(cols))]
+        lines = [header] + [
+            "  ".join(cell.ljust(w) for cell, w in zip(row, widths)).rstrip()
+            for row in rows
+        ]
+        lines.append(f"total modeled latency L = {self.total_modeled_latency:.1f}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# run(): results and replan events
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TaskRun:
+    """One executed task: the plan it ran under and its measured ledger."""
+
+    task: OperatorTask
+    op: str
+    label: str
+    m_pages: float
+    placement: Optional[str]
+    stats: WorkloadStats  # stats the executed plan was built from
+    measured: WorkloadStats  # stats with the measured output fed back
+    result: Any  # the operator's run result
+    delta: Any  # LedgerSnapshot / HierarchySnapshot for this task
+    replanned: bool = False  # True when a mid-run replan changed this task
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One mid-pipeline re-arbitration, after ``after_label`` finished."""
+
+    after_index: int
+    after_label: str
+    measured_out: float  # the finished operator's measured output pages
+    budgets_before: Tuple[float, ...]  # remaining tasks, pipeline order
+    budgets_after: Tuple[float, ...]
+    placements_before: Tuple[Optional[str], ...]
+    placements_after: Tuple[Optional[str], ...]
+    modeled_before: float  # remaining tasks' modeled L under the old split
+    modeled_after: float
+
+
+@dataclasses.dataclass
+class SessionRunResult:
+    """Measured per-task and total D/C of one session execution."""
+
+    per_task: List[TaskRun]
+    total: Any  # LedgerSnapshot / HierarchySnapshot
+    plan: Any  # the initial PipelinePlan the run started from
+    replan_events: List[ReplanEvent]
+    tier: TierSpec
+    hierarchy: Optional[HierarchySpec]
+
+    @property
+    def per_op(self) -> List[Tuple[str, Any, Any]]:
+        """Legacy ``(op, result, delta)`` triples, pipeline order."""
+        return [(tr.op, tr.result, tr.delta) for tr in self.per_task]
+
+    def latency_seconds(self) -> float:
+        """Eq.-(1) wall latency of the whole run on the session's target."""
+        if self.hierarchy is not None:
+            return self.total.latency_seconds(self.hierarchy)
+        return self.tier.latency_seconds(self.total.d_total, self.total.c_total)
+
+    def latency_cost(self) -> float:
+        """L of the whole run against the session's tau(s)."""
+        if self.hierarchy is not None:
+            return self.total.latency_cost(self.hierarchy)
+        return self.total.latency_cost(self.tier.tau_pages)
+
+
+# --------------------------------------------------------------------------
+# The session
+# --------------------------------------------------------------------------
+
+
+class Session:
+    """One spilling query's execution context: target + budget + policy.
+
+    ``target`` is a live ``RemoteMemory``/``MemoryHierarchy`` or anything
+    that resolves to one — a tier name/``TierSpec`` (a fresh simulated tier
+    is created), a ``HierarchySpec``, or a level list such as
+    ``[("dram", 64), ("rdma", 256), "ssd"]``.  ``budget`` is the global page
+    budget M split across every task of a pipeline.
+    """
+
+    def __init__(self, target: Any, budget: float, policy: str = "remop",
+                 step: float = 1.0):
+        if budget <= 0:
+            raise ValueError(f"session budget must be > 0 pages, got {budget}")
+        self.budget = float(budget)
+        self.policy = policy
+        self.step = step
+        self.remote = self._materialize(target)
+        self.scheduler = TransferScheduler(self.remote)
+        self.is_hierarchy = bool(getattr(self.remote, "is_hierarchy", False))
+        self.hierarchy: Optional[HierarchySpec] = (
+            self.remote.spec if self.is_hierarchy else None
+        )
+        self.tier: TierSpec = (
+            self.hierarchy.levels[0].tier if self.is_hierarchy
+            else self.remote.tier
+        )
+        self._task_seq = 0
+        self._run_seq = 0
+
+    @staticmethod
+    def _materialize(target: Any):
+        """Resolve ``target`` to a live store, creating one from a spec."""
+        from repro.remote.simulator import MemoryHierarchy, RemoteMemory
+
+        if isinstance(target, (RemoteMemory, MemoryHierarchy)):
+            return target
+        if getattr(target, "is_hierarchy", False):  # duck-typed live hierarchy
+            return target
+        if isinstance(target, (HierarchySpec, list, tuple)):
+            return MemoryHierarchy(resolve_hierarchy(target))
+        return RemoteMemory(resolve_tier(target))
+
+    @property
+    def target_name(self) -> str:
+        if self.hierarchy is not None:
+            return "->".join(self.hierarchy.names)
+        return self.tier.name
+
+    def _placement_tau(self, placement: Optional[str]) -> float:
+        """tau of a plan's placement tier (the session tier when single)."""
+        if self.hierarchy is not None and placement is not None:
+            return self.hierarchy.level(placement).tier.tau_pages
+        return self.tier.tau_pages
+
+    # -- task construction ---------------------------------------------------
+
+    def task(
+        self,
+        op: str,
+        stats: WorkloadStats,
+        *,
+        inputs: Optional[Mapping[str, Any]] = None,
+        label: Optional[str] = None,
+        **options: Any,
+    ) -> OperatorTask:
+        """Build a typed task; input names are validated against the operator.
+
+        ``inputs`` values may be live data (relations, page-id lists) or an
+        earlier task's ``.output`` reference; ``options`` are passed through
+        to the operator's data plane (``rows_per_page``, ``prefetch``, ...).
+        """
+        spec = get(op)  # raises ValueError for unknown operators
+        if self.policy not in spec.policies:
+            raise ValueError(
+                f"operator {op!r} has no policy {self.policy!r}; "
+                f"available: {spec.policies}"
+            )
+        # Unknown names fail fast here; *missing* inputs only fail at run
+        # time (bind_inputs), so plan()/explain() work on data-free tasks.
+        unknown = sorted(set(inputs or {}) - set(spec.inputs))
+        if unknown:
+            raise ValueError(
+                f"operator {op!r} takes inputs {list(spec.inputs)}: "
+                f"unknown {unknown}"
+            )
+        self._task_seq += 1
+        return OperatorTask(
+            op=op,
+            stats=stats,
+            inputs=dict(inputs or {}),
+            options=dict(options),
+            label=label or f"{op}#{self._task_seq}",
+        )
+
+    def _check_tasks(self, tasks: Sequence[OperatorTask]) -> List[OperatorTask]:
+        tasks = list(tasks)
+        if not tasks:
+            raise ValueError(
+                "empty pipeline: session.plan/run/explain need at least one "
+                "task (build them with session.task(op, stats, inputs=...))"
+            )
+        for i, task in enumerate(tasks):
+            if not isinstance(task, OperatorTask):
+                raise TypeError(
+                    f"tasks[{i}] is {type(task).__name__}, expected an "
+                    f"OperatorTask from session.task(...)"
+                )
+            for name, value in task.inputs.items():
+                if isinstance(value, TaskOutput):
+                    if not any(value.task is t for t in tasks[:i]):
+                        raise ValueError(
+                            f"task {task.label!r} input {name!r} references a "
+                            f"task output that does not run earlier in this "
+                            f"pipeline"
+                        )
+        return tasks
+
+    # -- planning ------------------------------------------------------------
+
+    def plan(self, tasks: Sequence[OperatorTask]):
+        """Arbitrate the session budget (and placements) across ``tasks``."""
+        from repro.engine.pipeline import _plan_pipeline
+
+        tasks = self._check_tasks(tasks)
+        target = self.hierarchy if self.hierarchy is not None else self.tier
+        return _plan_pipeline(
+            [t.op for t in tasks], [t.stats for t in tasks],
+            target, self.budget, self.policy, self.step,
+        )
+
+    @staticmethod
+    def _check_plan_matches(pplan, tasks: Sequence[OperatorTask]) -> None:
+        if len(pplan.ops) != len(tasks):
+            raise ValueError(
+                f"plan has {len(pplan.ops)} operators for {len(tasks)} tasks"
+            )
+        for ob, task in zip(pplan.ops, tasks):
+            if ob.op != task.op:
+                raise ValueError(
+                    f"plan/task mismatch: plan expects {ob.op!r}, task is "
+                    f"{task.op!r} ({task.label})"
+                )
+
+    def explain(self, tasks: Sequence[OperatorTask], plan=None) -> PlanReport:
+        """The structured plan report: budgets, placements, D/C/L, footprints."""
+        tasks = self._check_tasks(tasks)
+        pplan = plan if plan is not None else self.plan(tasks)
+        self._check_plan_matches(pplan, tasks)
+        rows: List[TaskExplain] = []
+        usage: Dict[str, float] = {}
+        for task, ob in zip(tasks, pplan.ops):
+            spec = get(ob.op)
+            if self.hierarchy is not None and ob.placement is not None:
+                level = self.hierarchy.level(ob.placement)
+                tier_name, tau = level.tier.name, level.tier.tau_pages
+                capacity = level.capacity_pages
+            else:
+                tier_name, tau = self.tier.name, self.tier.tau_pages
+                capacity = math.inf
+            d, c = (spec.costs(ob.stats, tau, ob.m_pages, self.policy)
+                    if spec.costs else (math.nan, math.nan))
+            fp = (spec.footprint(ob.stats, tau, ob.m_pages)
+                  if spec.footprint else 0.0)
+            usage[tier_name] = usage.get(tier_name, 0.0) + fp
+            rows.append(TaskExplain(
+                op=ob.op, label=task.label, m_pages=ob.m_pages,
+                placement=tier_name, tau=tau, modeled_d=d, modeled_c=c,
+                modeled_latency=ob.modeled_latency, footprint=fp,
+                capacity=capacity, min_pages=spec.min_pages,
+            ))
+        if self.hierarchy is not None:
+            footprints = tuple(
+                (name, usage.get(name, 0.0), level.capacity_pages)
+                for name, level in zip(self.hierarchy.names,
+                                       self.hierarchy.levels)
+            )
+        else:
+            footprints = ((self.tier.name, usage.get(self.tier.name, 0.0),
+                           math.inf),)
+        return PlanReport(
+            policy=self.policy, m_total=self.budget, target=self.target_name,
+            tasks=tuple(rows), tier_footprints=footprints,
+        )
+
+    # -- execution -----------------------------------------------------------
+
+    def run(
+        self,
+        tasks: Sequence[OperatorTask],
+        replan: Optional[str] = None,
+        plan=None,
+    ) -> SessionRunResult:
+        """Execute ``tasks`` in order against the session's shared ledger.
+
+        ``replan=None`` executes the arbitrated plan as-is (ledger-exact with
+        the legacy ``run_pipeline``).  ``replan="measured"`` re-arbitrates
+        after each operator finishes: its measured output cardinality updates
+        the downstream stats (both the finished operator's ``out`` and any
+        task input bound to its ``.output``), and the remaining operators'
+        budgets and tier placements are re-planned against the measured
+        remaining capacity.  ``plan`` optionally supplies a precomputed
+        :class:`~repro.engine.pipeline.PipelinePlan`.
+        """
+        if replan not in (None, "measured"):
+            raise ValueError(
+                f"replan must be None or 'measured', got {replan!r}"
+            )
+        tasks = self._check_tasks(tasks)
+        pplan = plan if plan is not None else self.plan(tasks)
+        self._check_plan_matches(pplan, tasks)
+        budgets = list(pplan.ops)  # OperatorBudget per task; replan swaps tails
+        cur_stats = [ob.stats for ob in budgets]
+        replanned = [False] * len(tasks)
+        outputs: Dict[int, Any] = {}  # id(task) -> resolved output pages
+        events: List[ReplanEvent] = []
+        per_task: List[TaskRun] = []
+
+        self._run_seq += 1
+        run_label = f"session-run{self._run_seq}"
+        sched = self.scheduler
+        sched.checkpoint(run_label)
+        try:
+            for i, task in enumerate(tasks):
+                ob = budgets[i]
+                spec = get(task.op)
+                resolved = {
+                    name: outputs[id(value.task)]
+                    if isinstance(value, TaskOutput) else value
+                    for name, value in task.inputs.items()
+                }
+                args = spec.bind_inputs(resolved)
+                kwargs = dict(task.options)
+                if self.is_hierarchy and ob.placement is not None:
+                    kwargs.setdefault("tier", ob.placement)
+                task_label = f"{run_label}/{i}"
+                sched.checkpoint(task_label)
+                try:
+                    result = spec.run(self.remote, *args, ob.plan, **kwargs)
+                    delta = sched.since(task_label)
+                finally:
+                    sched.drop_checkpoint(task_label)
+                if spec.output_of is not None:
+                    outputs[id(task)] = spec.output_of(result)
+                measured = (spec.measured_stats(cur_stats[i], result)
+                            if spec.measured_stats else cur_stats[i])
+                cur_stats[i] = measured
+                per_task.append(TaskRun(
+                    task=task, op=task.op, label=task.label,
+                    m_pages=ob.m_pages, placement=ob.placement,
+                    stats=ob.stats, measured=measured, result=result,
+                    delta=delta, replanned=replanned[i],
+                ))
+                if replan == "measured" and i + 1 < len(tasks):
+                    event = self._replan_remaining(
+                        tasks, budgets, cur_stats, outputs, i, measured
+                    )
+                    if event is not None:
+                        events.append(event)
+                        for j in range(i + 1, len(tasks)):
+                            replanned[j] = True
+            total = sched.since(run_label)
+        finally:
+            sched.drop_checkpoint(run_label)
+        return SessionRunResult(
+            per_task=per_task, total=total, plan=pplan, replan_events=events,
+            tier=self.tier, hierarchy=self.hierarchy,
+        )
+
+    # -- mid-pipeline re-arbitration ------------------------------------------
+
+    def _replan_remaining(
+        self,
+        tasks: Sequence[OperatorTask],
+        budgets: List[Any],
+        cur_stats: List[WorkloadStats],
+        outputs: Mapping[int, Any],
+        done: int,
+        measured: WorkloadStats,
+    ) -> Optional[ReplanEvent]:
+        """Feed task ``done``'s measured output back and re-split the rest.
+
+        Updates ``cur_stats`` for every remaining task whose input binds to a
+        finished task's output (the operator's ``input_stats`` mapping names
+        the stats field the input sizes), then re-arbitrates the remaining
+        budget — on a hierarchy, against the *measured* per-tier residency
+        (``occupied``), so placements react to capacity actually consumed.
+        Returns a :class:`ReplanEvent` when the split changed, ``None`` when
+        the re-arbitration confirmed the current plan (or was infeasible, in
+        which case the current plan is kept).
+        """
+        finished_task = tasks[done]
+        for j in range(done + 1, len(tasks)):
+            spec_j = get(tasks[j].op)
+            for name, value in tasks[j].inputs.items():
+                if not (isinstance(value, TaskOutput)
+                        and value.task is finished_task):
+                    continue
+                field = spec_j.input_stats.get(name)
+                resolved = outputs.get(id(finished_task))
+                if field is None or resolved is None:
+                    continue
+                cur_stats[j] = dataclasses.replace(
+                    cur_stats[j], **{field: float(len(resolved))}
+                )
+
+        remaining = list(range(done + 1, len(tasks)))
+        budget_rem = self.budget - sum(budgets[k].m_pages
+                                       for k in range(done + 1))
+        before_m = tuple(budgets[j].m_pages for j in remaining)
+        before_p = tuple(budgets[j].placement for j in remaining)
+        # Price the *old* split at the *updated* stats, so before/after in the
+        # event measure what the re-split itself bought.
+        before_l = sum(
+            get(tasks[j].op).model(
+                cur_stats[j], self._placement_tau(budgets[j].placement),
+                budgets[j].m_pages, self.policy,
+            )
+            for j in remaining
+        )
+        try:
+            new_budgets = self._arbitrate_tail(
+                [tasks[j] for j in remaining],
+                [cur_stats[j] for j in remaining],
+                budget_rem,
+            )
+        except ValueError:
+            # No feasible re-split (e.g. measured residency ate the capacity
+            # the estimate assumed): keep the current plan rather than fail a
+            # query the static path would have completed.
+            return None
+        changed = any(
+            abs(nb.m_pages - budgets[j].m_pages) > 1e-9
+            or nb.placement != budgets[j].placement
+            or nb.plan != budgets[j].plan
+            for j, nb in zip(remaining, new_budgets)
+        )
+        if not changed:
+            return None
+        for j, nb in zip(remaining, new_budgets):
+            budgets[j] = nb
+        return ReplanEvent(
+            after_index=done,
+            after_label=finished_task.label,
+            measured_out=measured.out,
+            budgets_before=before_m,
+            budgets_after=tuple(nb.m_pages for nb in new_budgets),
+            placements_before=before_p,
+            placements_after=tuple(nb.placement for nb in new_budgets),
+            modeled_before=before_l,
+            modeled_after=sum(nb.modeled_latency for nb in new_budgets),
+        )
+
+    def _arbitrate_tail(
+        self,
+        tasks: Sequence[OperatorTask],
+        stats: Sequence[WorkloadStats],
+        budget: float,
+    ) -> List[Any]:
+        """Arbitrate ``budget`` over the remaining tasks with updated stats."""
+        from repro.engine.pipeline import OperatorBudget
+
+        policy = self.policy
+        if self.hierarchy is None:
+            tau = self.tier.tau_pages
+            items = [
+                ArbiterItem(
+                    name=t.op, min_pages=get(t.op).min_pages,
+                    latency_of=lambda m, s=get(t.op), st=st: s.model(
+                        st, tau, m, policy
+                    ),
+                )
+                for t, st in zip(tasks, stats)
+            ]
+            alloc, _ = arbitrate(items, budget, step=self.step)
+            return [
+                OperatorBudget(
+                    op=t.op, stats=st, m_pages=m,
+                    plan=plan_operator(t.op, st, self.tier, m, policy=policy),
+                    modeled_latency=get(t.op).model(st, tau, m, policy),
+                )
+                for t, st, m in zip(tasks, stats, alloc)
+            ]
+        hspec = self.hierarchy
+        taus = hspec.taus
+        occupied = [
+            float(self.remote.tier_resident(t)) for t in range(len(hspec))
+        ]
+        items = []
+        for t, st in zip(tasks, stats):
+            spec = get(t.op)
+            footprint = spec.footprint or (lambda st_, tau_, m_: 0.0)
+            items.append(HierarchyItem(
+                name=t.op, min_pages=spec.min_pages,
+                latency_of=lambda m, ti, s=spec, st=st: s.model(
+                    st, taus[ti], m, policy
+                ),
+                footprint_of=lambda m, ti, fp=footprint, st=st: fp(
+                    st, taus[ti], m
+                ),
+            ))
+        alloc, placement, _ = arbitrate_hierarchy(
+            items, budget, hspec.capacities, step=self.step, occupied=occupied
+        )
+        return [
+            OperatorBudget(
+                op=t.op, stats=st, m_pages=m,
+                plan=plan_operator(t.op, st, hspec.levels[ti].tier, m,
+                                   policy=policy),
+                modeled_latency=get(t.op).model(st, taus[ti], m, policy),
+                placement=hspec.names[ti],
+            )
+            for t, st, m, ti in zip(tasks, stats, alloc, placement)
+        ]

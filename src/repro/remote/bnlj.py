@@ -20,6 +20,13 @@ from repro.engine.scheduler import TransferScheduler
 from repro.remote.simulator import Relation, RemoteMemory
 
 
+# Typed input signature for the session API: ``engine.registry`` binds named
+# task inputs to ``bnlj``'s positional data-plane arguments through this, and
+# maps each input to the WorkloadStats field that estimates its size.
+INPUTS = ("outer", "inner")
+INPUT_STATS = {"outer": "size_r", "inner": "size_s"}
+
+
 @dataclasses.dataclass
 class JoinResult:
     output_page_ids: List[int]
@@ -28,6 +35,16 @@ class JoinResult:
     d_write: float
     c_read: int
     c_write: int
+
+
+def bnlj_output(result: JoinResult) -> List[int]:
+    """The operator's output pages — what a downstream task's input binds to."""
+    return result.output_page_ids
+
+
+def bnlj_measured(stats, result: JoinResult):
+    """Feed the measured output cardinality back into the workload stats."""
+    return dataclasses.replace(stats, out=float(len(result.output_page_ids)))
 
 
 def _block_join(r_rows: np.ndarray, s_rows: np.ndarray) -> np.ndarray:

@@ -27,6 +27,13 @@ from repro.engine.scheduler import TransferScheduler
 from repro.remote.simulator import Relation, RemoteMemory, relation_rows
 
 
+# Typed input signature for the session API: ``engine.registry`` binds named
+# task inputs to ``eagg``'s positional data-plane arguments through this, and
+# maps each input to the WorkloadStats field that estimates its size.
+INPUTS = ("rel",)
+INPUT_STATS = {"rel": "size_r"}
+
+
 @dataclasses.dataclass
 class AggResult:
     output_page_ids: List[int]
@@ -37,6 +44,16 @@ class AggResult:
     c_read: int
     c_write: int
     per_phase_rounds: Dict[str, int]
+
+
+def eagg_output(result: AggResult) -> List[int]:
+    """The operator's output pages — what a downstream task's input binds to."""
+    return result.output_page_ids
+
+
+def eagg_measured(stats, result: AggResult):
+    """Feed the measured output cardinality back into the workload stats."""
+    return dataclasses.replace(stats, out=float(len(result.output_page_ids)))
 
 
 def _hash_part(keys: np.ndarray, p: int) -> np.ndarray:

@@ -25,6 +25,13 @@ from repro.remote.bnlj import _block_join
 from repro.remote.simulator import Relation, RemoteMemory, relation_rows
 
 
+# Typed input signature for the session API: ``engine.registry`` binds named
+# task inputs to ``ehj``'s positional data-plane arguments through this, and
+# maps each input to the WorkloadStats field that estimates its size.
+INPUTS = ("build", "probe")
+INPUT_STATS = {"build": "size_r", "probe": "size_s"}
+
+
 @dataclasses.dataclass
 class HashJoinResult:
     output_rows: int
@@ -34,6 +41,22 @@ class HashJoinResult:
     c_read: int
     c_write: int
     per_phase_rounds: Dict[str, int]
+    output_page_ids: List[int] = dataclasses.field(default_factory=list)
+
+
+def ehj_output(result: HashJoinResult) -> List[int]:
+    """The operator's output pages — what a downstream task's input binds to."""
+    return result.output_page_ids
+
+
+def ehj_measured(stats, result: HashJoinResult):
+    """Feed the measured output cardinality back into the workload stats.
+
+    This is the ROADMAP's known misestimation case: the planner's ``out``
+    estimate can be ~8x off at high selectivity, and the measured page count
+    is what ``Session.run(replan="measured")`` re-arbitrates with.
+    """
+    return dataclasses.replace(stats, out=float(len(result.output_page_ids)))
 
 
 def ehj(
@@ -129,6 +152,9 @@ def ehj(
     phase_rounds["P3"] = sched.delta(t0).c_total
 
     d = sched.delta(before)
+    output_ids = list(out_pool.pages())
+    for q in sorted(spilled):
+        output_ids.extend(ext_out_pool.pages(q))
     return HashJoinResult(
         output_rows=output_rows,
         sigma=plan.sigma,
@@ -137,6 +163,7 @@ def ehj(
         c_read=d.c_read,
         c_write=d.c_write,
         per_phase_rounds=phase_rounds,
+        output_page_ids=output_ids,
     )
 
 

@@ -22,6 +22,13 @@ from repro.engine.scheduler import TransferScheduler
 from repro.remote.simulator import RemoteMemory
 
 
+# Typed input signature for the session API: ``engine.registry`` binds named
+# task inputs to ``ems_sort``'s positional data-plane arguments through this,
+# and maps each input to the WorkloadStats field that estimates its size.
+INPUTS = ("page_ids",)
+INPUT_STATS = {"page_ids": "size_r"}
+
+
 @dataclasses.dataclass
 class SortResult:
     run_page_ids: List[int]  # final single sorted run
@@ -30,6 +37,16 @@ class SortResult:
     d_write: float
     c_read: int
     c_write: int
+
+
+def ems_output(result: SortResult) -> List[int]:
+    """The operator's output pages — what a downstream task's input binds to."""
+    return result.run_page_ids
+
+
+def ems_measured(stats, result: SortResult):
+    """Feed the measured output cardinality back into the workload stats."""
+    return dataclasses.replace(stats, out=float(len(result.run_page_ids)))
 
 
 def _merge_group(

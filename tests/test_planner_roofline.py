@@ -132,8 +132,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.roofline import parse_hlo_collectives
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 def f(a, b):
     return jnp.sum(a @ b)
 a = jax.ShapeDtypeStruct((256, 256), jnp.float32)

@@ -1,0 +1,392 @@
+"""Session-centric execution API (ISSUE 4).
+
+Covers: typed ``session.task`` construction and input validation, ledger
+parity of ``Session.run`` with the legacy ``plan_pipeline``/``run_pipeline``
+shims on a single tier and a 3-tier hierarchy, ``explain()`` report totals,
+empty-pipeline validation, scheduler checkpoints, the ``occupied`` parameter
+of the hierarchy arbiter, and the measured-feedback re-planning loop
+(``replan="measured"``) recovering latency on a pipeline whose EHJ output
+estimate is ~8x off.
+"""
+
+import math
+import warnings
+
+import pytest
+
+from repro.core import TABLE_I
+from repro.core.arbiter import HierarchyItem, arbitrate_hierarchy
+from repro.core.policies import ems_run_formation_costs, ems_total_latency
+from repro.engine import Session, WorkloadStats
+from repro.engine.pipeline import plan_pipeline, run_pipeline
+from repro.engine.registry import get, hierarchy_spec, model_latency
+from repro.engine.scheduler import TransferScheduler
+from repro.remote import RemoteMemory, make_relation
+from repro.remote.simulator import make_key_pages
+
+TIER = TABLE_I["tcp"]
+ROWS = 8
+HSPEC = hierarchy_spec((TABLE_I["dram"], 48), (TABLE_I["rdma"], 512),
+                       TABLE_I["ssd"])
+
+FOUR_OPS = ["bnlj", "ems", "ehj", "eagg"]
+FOUR_STATS = [
+    WorkloadStats(size_r=24, size_s=48, out=12, selectivity=1 / 2048),
+    WorkloadStats(size_r=96, k_cap=8),
+    WorkloadStats(size_r=48, size_s=96, out=36, partitions=8, sigma=0.5),
+    WorkloadStats(size_r=64, out=12, partitions=8, sigma=0.5),
+]
+
+
+def _four_op_data(remote):
+    """The same deterministic workload data for any target store."""
+    r = make_relation(remote, 24 * ROWS, ROWS, 2048, seed=1)
+    s = make_relation(remote, 48 * ROWS, ROWS, 2048, seed=2)
+    ids = make_key_pages(remote, 96, ROWS, seed=3)
+    build = make_relation(remote, 48 * ROWS, ROWS, 96, seed=4)
+    probe = make_relation(remote, 96 * ROWS, ROWS, 96, seed=5)
+    agg = make_relation(remote, 64 * ROWS, ROWS, 128, seed=6)
+    return r, s, ids, build, probe, agg
+
+
+def _four_op_tasks(sess):
+    r, s, ids, build, probe, agg = _four_op_data(sess.remote)
+    return [
+        sess.task("bnlj", FOUR_STATS[0], inputs={"outer": r, "inner": s}),
+        sess.task("ems", FOUR_STATS[1], inputs={"page_ids": ids},
+                  rows_per_page=ROWS),
+        sess.task("ehj", FOUR_STATS[2], inputs={"build": build,
+                                                "probe": probe}),
+        sess.task("eagg", FOUR_STATS[3], inputs={"rel": agg}),
+    ]
+
+
+def _legacy_run(target_ctor, tier, m_total):
+    remote = target_ctor()
+    r, s, ids, build, probe, agg = _four_op_data(remote)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        pplan = plan_pipeline(FOUR_OPS, FOUR_STATS, tier, m_total)
+        res = run_pipeline(remote, pplan, [
+            ((r, s), {}),
+            ((ids,), {"rows_per_page": ROWS}),
+            ((build, probe), {}),
+            ((agg,), {}),
+        ])
+    return pplan, res
+
+
+# ---------------------------------------------------------------------------
+# Ledger parity: Session.run vs the legacy plan_pipeline + run_pipeline path
+# ---------------------------------------------------------------------------
+
+
+def test_session_single_tier_ledger_parity_all_four_ops():
+    pplan, legacy = _legacy_run(lambda: RemoteMemory(TIER), TIER, 96.0)
+    sess = Session(TIER, budget=96.0)
+    res = sess.run(_four_op_tasks(sess))
+    assert res.plan.budgets == pplan.budgets
+    for (op_a, _, da), (op_b, _, db) in zip(legacy.per_op, res.per_op):
+        assert op_a == op_b
+        assert (da.d_read, da.d_write, da.c_read, da.c_write) == \
+            (db.d_read, db.d_write, db.c_read, db.c_write)
+    assert legacy.total.d_total == res.total.d_total
+    assert legacy.total.c_total == res.total.c_total
+    # The result's no-argument latency helpers price the session's own tier.
+    assert res.latency_seconds() == pytest.approx(
+        TIER.latency_seconds(res.total.d_total, res.total.c_total))
+    assert res.latency_cost() == pytest.approx(
+        res.total.latency_cost(TIER.tau_pages))
+
+
+def test_session_hierarchy_ledger_parity_all_four_ops():
+    from repro.remote import MemoryHierarchy
+
+    pplan, legacy = _legacy_run(lambda: MemoryHierarchy(HSPEC), HSPEC, 96.0)
+    sess = Session(HSPEC, budget=96.0)
+    res = sess.run(_four_op_tasks(sess))
+    assert res.plan.budgets == pplan.budgets
+    assert res.plan.placements == pplan.placements
+    for (op_a, _, da), (op_b, _, db) in zip(legacy.per_op, res.per_op):
+        assert op_a == op_b
+        for name in HSPEC.names:
+            assert da.tier(name) == db.tier(name)
+    assert legacy.total.d_total == res.total.d_total
+    assert legacy.total.c_total == res.total.c_total
+    assert res.latency_seconds() == pytest.approx(
+        legacy.total.latency_seconds(HSPEC))
+
+
+def test_shims_emit_deprecation_warnings():
+    with pytest.warns(DeprecationWarning, match="plan_pipeline is deprecated"):
+        pplan = plan_pipeline(["ems"], WorkloadStats(size_r=40), TIER, 10.0)
+    remote = RemoteMemory(TIER)
+    ids = make_key_pages(remote, 40, ROWS, seed=0)
+    with pytest.warns(DeprecationWarning, match="run_pipeline is deprecated"):
+        run_pipeline(remote, pplan, [((ids,), {"rows_per_page": ROWS})])
+
+
+# ---------------------------------------------------------------------------
+# explain(): the structured plan report
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("target", [TIER, HSPEC], ids=["tier", "hierarchy"])
+def test_explain_totals_match_plan(target):
+    sess = Session(target, budget=96.0)
+    tasks = _four_op_tasks(sess)
+    pplan = sess.plan(tasks)
+    report = sess.explain(tasks, plan=pplan)
+    assert report.total_modeled_latency == pytest.approx(
+        pplan.total_modeled_latency)
+    assert [t.op for t in report.tasks] == FOUR_OPS
+    for row, ob in zip(report.tasks, pplan.ops):
+        assert row.m_pages == ob.m_pages
+        assert row.modeled_latency == pytest.approx(ob.modeled_latency)
+        # L decomposes as D + tau*C of the same modeled plan.
+        assert row.modeled_d + row.tau * row.modeled_c == pytest.approx(
+            row.modeled_latency)
+        assert row.footprint >= 0.0
+    # Per-tier footprints aggregate the task rows exactly.
+    for name, fp, cap in report.tier_footprints:
+        assert fp == pytest.approx(sum(
+            t.footprint for t in report.tasks if t.placement == name))
+        assert fp <= cap + 1e-9 or math.isinf(cap)
+    rendered = str(report)
+    for op in FOUR_OPS:
+        assert op in rendered
+    as_dict = report.to_dict()
+    assert as_dict["total_modeled_latency"] == pytest.approx(
+        report.total_modeled_latency)
+    assert len(as_dict["tasks"]) == len(FOUR_OPS)
+
+
+# ---------------------------------------------------------------------------
+# Validation: empty pipelines, typed inputs, output references
+# ---------------------------------------------------------------------------
+
+
+def test_empty_pipeline_raises_everywhere():
+    with pytest.raises(ValueError, match="empty pipeline"):
+        plan_pipeline([], [], TIER, 40.0)
+    with pytest.raises(ValueError, match="empty pipeline"):
+        plan_pipeline([], [], HSPEC, 40.0)
+    sess = Session(TIER, budget=40.0)
+    for method in (sess.plan, sess.run, sess.explain):
+        with pytest.raises(ValueError, match="empty pipeline"):
+            method([])
+
+
+def test_task_input_names_validated_against_operator_signature():
+    sess = Session(TIER, budget=40.0)
+    ids = make_key_pages(sess.remote, 16, ROWS, seed=0)
+    with pytest.raises(ValueError, match=r"unknown \['pages'\]"):
+        sess.task("ems", WorkloadStats(size_r=16), inputs={"pages": ids})
+    with pytest.raises(ValueError, match="unknown"):
+        sess.task("ems", WorkloadStats(size_r=16),
+                  inputs={"page_ids": ids, "bogus": 1})
+    with pytest.raises(ValueError, match="unknown operator"):
+        sess.task("quicksort", WorkloadStats(size_r=16))
+    with pytest.raises(ValueError, match="has no policy"):
+        Session(TIER, budget=40.0, policy="duckdb").task(
+            "bnlj", WorkloadStats(size_r=16))
+    # A data-free task can still be planned and explained; running it
+    # surfaces the missing inputs.
+    bare = sess.task("ems", WorkloadStats(size_r=16), rows_per_page=ROWS)
+    assert sess.plan([bare]).budgets == (40.0,)
+    assert sess.explain([bare]).tasks[0].op == "ems"
+    with pytest.raises(ValueError, match=r"missing \['page_ids'\]"):
+        sess.run([bare])
+
+
+def test_task_output_must_reference_an_earlier_task():
+    sess = Session(TIER, budget=40.0)
+    rel = make_relation(sess.remote, 16 * ROWS, ROWS, 64, seed=0)
+    agg = sess.task("eagg", WorkloadStats(size_r=16, out=4, partitions=4,
+                                          sigma=0.5), inputs={"rel": rel})
+    sort = sess.task("ems", WorkloadStats(size_r=4),
+                     inputs={"page_ids": agg.output}, rows_per_page=ROWS)
+    # Consumer before producer: rejected.
+    with pytest.raises(ValueError, match="does not run earlier"):
+        sess.plan([sort, agg])
+    # Producer before consumer: planning and running both work.
+    res = sess.run([agg, sort])
+    assert len(res.per_task) == 2
+    assert res.per_task[1].result.run_page_ids  # sorted the agg output
+
+
+def test_run_rejects_bad_replan_mode_and_non_tasks():
+    sess = Session(TIER, budget=40.0)
+    ids = make_key_pages(sess.remote, 16, ROWS, seed=0)
+    task = sess.task("ems", WorkloadStats(size_r=16),
+                     inputs={"page_ids": ids}, rows_per_page=ROWS)
+    with pytest.raises(ValueError, match="replan"):
+        sess.run([task], replan="always")
+    with pytest.raises(TypeError, match="OperatorTask"):
+        sess.run([("ems", ids)])
+
+
+def test_run_and_explain_reject_mismatched_plan():
+    sess = Session(TIER, budget=40.0)
+    ids = make_key_pages(sess.remote, 16, ROWS, seed=0)
+    rel = make_relation(sess.remote, 16 * ROWS, ROWS, 64, seed=1)
+    sort = sess.task("ems", WorkloadStats(size_r=16),
+                     inputs={"page_ids": ids}, rows_per_page=ROWS)
+    agg = sess.task("eagg", WorkloadStats(size_r=16, out=4, partitions=4,
+                                          sigma=0.5), inputs={"rel": rel})
+    sort_plan = sess.plan([sort])
+    for method, kwargs in ((sess.run, {}), (sess.explain, {})):
+        with pytest.raises(ValueError, match="plan has 1 operators"):
+            method([sort, agg], plan=sort_plan, **kwargs)
+        with pytest.raises(ValueError, match="plan/task mismatch"):
+            method([agg], plan=sort_plan, **kwargs)
+
+
+def test_session_budget_must_be_positive():
+    with pytest.raises(ValueError, match="budget"):
+        Session(TIER, budget=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_named_checkpoints():
+    remote = RemoteMemory(TIER)
+    sched = TransferScheduler(remote)
+    sched.checkpoint("t0")
+    ids = sched.write([__import__("numpy").zeros(4) for _ in range(3)])
+    assert sched.since("t0").d_write == 3
+    assert sched.since("t0").c_write == 1
+    sched.read(ids)
+    assert sched.since("t0").d_read == 3
+    assert sched.restore("t0").d_total == 0
+    sched.drop_checkpoint("t0")
+    with pytest.raises(ValueError, match="no checkpoint"):
+        sched.since("t0")
+    sched.drop_checkpoint("never-created")  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy arbiter: re-arbitration over already-consumed capacity
+# ---------------------------------------------------------------------------
+
+
+def test_arbitrate_hierarchy_occupied_shifts_placement():
+    # One item whose footprint (10 pages) fits tier 0 (cap 16) when empty but
+    # not once 8 pages are consumed; tier 1 is slower but roomy.
+    item = HierarchyItem(
+        name="op", min_pages=2.0,
+        latency_of=lambda m, t: (100.0 if t else 10.0) / m,
+        footprint_of=lambda m, t: 10.0,
+    )
+    alloc, placement, _ = arbitrate_hierarchy([item], 8.0, [16.0, math.inf])
+    assert placement == [0]
+    alloc, placement, _ = arbitrate_hierarchy(
+        [item], 8.0, [16.0, math.inf], occupied=[8.0, 0.0])
+    assert placement == [1]
+    with pytest.raises(ValueError, match="occupied"):
+        arbitrate_hierarchy([item], 8.0, [16.0, math.inf], occupied=[8.0])
+
+
+# ---------------------------------------------------------------------------
+# EMS run-formation closed form (shared by model, explain, benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def test_ems_run_formation_costs_match_simulated_ledger():
+    n, m = 120, 12
+    stats = WorkloadStats(size_r=float(n), k_cap=8)
+    plan = get("ems").planner(stats, TIER.tau_pages, float(m), "remop")
+
+    def run(count_run_formation):
+        remote = RemoteMemory(TIER)
+        ids = make_key_pages(remote, n, ROWS, seed=7)
+        get("ems").run(remote, ids, plan, rows_per_page=ROWS,
+                       count_run_formation=count_run_formation)
+        return remote.ledger.d_total, remote.ledger.c_total
+
+    d_with, c_with = run(True)
+    d_without, c_without = run(False)
+    d_rf, c_rf = ems_run_formation_costs(n, m)
+    assert d_with - d_without == pytest.approx(d_rf)
+    assert c_with - c_without == pytest.approx(c_rf)
+    # The registry's EMS latency model is exactly the shared closed form.
+    assert model_latency("ems", stats, TIER, float(m)) == pytest.approx(
+        ems_total_latency(n, m, plan, TIER.tau_pages))
+
+
+# ---------------------------------------------------------------------------
+# Measured-feedback re-planning
+# ---------------------------------------------------------------------------
+
+EST_OUT = 97.0  # the EHJ out estimate; the measured output is ~8x larger
+
+
+def _misestimated_tasks(sess):
+    """EHJ (out ~8x underestimated) -> EMS over its output, plus an EAGG."""
+    build = make_relation(sess.remote, 48 * ROWS, ROWS, 48, seed=31)
+    probe = make_relation(sess.remote, 96 * ROWS, ROWS, 48, seed=32)
+    agg = make_relation(sess.remote, 96 * ROWS, ROWS, 128, seed=34)
+    join = sess.task("ehj", WorkloadStats(size_r=48, size_s=96, out=EST_OUT,
+                                          partitions=8, sigma=0.5),
+                     inputs={"build": build, "probe": probe})
+    sort = sess.task("ems", WorkloadStats(size_r=EST_OUT, k_cap=8),
+                     inputs={"page_ids": join.output}, rows_per_page=ROWS)
+    aggt = sess.task("eagg", WorkloadStats(size_r=96, out=16, partitions=8,
+                                           sigma=0.5), inputs={"rel": agg})
+    return [join, sort, aggt]
+
+
+def test_replan_measured_recovers_latency_on_misestimated_ehj():
+    static = Session(TIER, budget=64.0)
+    res_static = static.run(_misestimated_tasks(static))
+    assert not res_static.replan_events
+
+    adaptive = Session(TIER, budget=64.0)
+    res_replan = adaptive.run(_misestimated_tasks(adaptive),
+                              replan="measured")
+    # The estimate really was ~8x off...
+    measured = res_replan.per_task[0].measured.out
+    assert measured >= 6 * EST_OUT
+    # ...one replan event fired after the join, growing the sort's budget...
+    assert len(res_replan.replan_events) >= 1
+    ev = res_replan.replan_events[0]
+    assert ev.after_index == 0
+    assert ev.measured_out == measured
+    assert ev.budgets_after[0] > ev.budgets_before[0]
+    assert ev.modeled_after <= ev.modeled_before + 1e-9
+    assert res_replan.per_task[1].replanned
+    # ...the total budget is conserved...
+    assert sum(tr.m_pages for tr in res_replan.per_task) == pytest.approx(64.0)
+    # ...and the measured latency strictly improves on the static plan.
+    assert res_replan.latency_seconds() < res_static.latency_seconds()
+
+
+def test_replan_measured_on_hierarchy_is_capacity_aware():
+    spec = hierarchy_spec((TABLE_I["dram"], 64), (TABLE_I["rdma"], 512),
+                          TABLE_I["ssd"])
+    static = Session(spec, budget=64.0)
+    res_static = static.run(_misestimated_tasks(static))
+
+    adaptive = Session(spec, budget=64.0)
+    res_replan = adaptive.run(_misestimated_tasks(adaptive),
+                              replan="measured")
+    assert res_replan.replan_events
+    ev = res_replan.replan_events[0]
+    # The re-arbitration saw the measured 8x spill and routed the sort off
+    # the tier the static plan chose for it.
+    assert ev.placements_after != ev.placements_before \
+        or ev.budgets_after != ev.budgets_before
+    assert sum(tr.m_pages for tr in res_replan.per_task) == pytest.approx(64.0)
+    assert res_replan.latency_seconds() < res_static.latency_seconds()
+
+
+def test_replan_none_is_ledger_identical_to_static_plan():
+    a = Session(TIER, budget=64.0)
+    res_a = a.run(_misestimated_tasks(a))
+    b = Session(TIER, budget=64.0)
+    res_b = b.run(_misestimated_tasks(b), replan=None)
+    assert res_a.total.d_total == res_b.total.d_total
+    assert res_a.total.c_total == res_b.total.c_total
