@@ -15,8 +15,15 @@ wall latency of running every operator against one shared
 never worse than the best single tier on the modeled objective by
 construction, and the sweep shows how the gap moves with tier capacities.
 
-Writes ``BENCH_tiering.json`` at the repo root — a machine-readable perf
-artifact CI uploads and gates with ``scripts/check_regression.py``.
+An **eviction sweep** (ISSUE 5) additionally runs a spill-heavy pipeline
+twice per capacity point — once with the PR 4 no-eviction waterfall, once
+with an LRU evictor demoting cold pages in background (overlapped) migration
+rounds — and requires LRU + overlap to *strictly beat* the waterfall
+baseline on the tightest (spill-heaviest) configuration.
+
+Writes ``BENCH_tiering.json`` and ``BENCH_eviction.json`` at the repo root —
+machine-readable perf artifacts CI uploads and gates with
+``scripts/check_regression.py``.
 """
 
 from __future__ import annotations
@@ -48,6 +55,20 @@ SWEEPS = [(16, 128), (48, 256), (96, 512), (256, 1024)]
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                          "BENCH_tiering.json")
+EVICTION_JSON_PATH = os.path.join(os.path.dirname(JSON_PATH),
+                                  "BENCH_eviction.json")
+
+# Eviction sweep: a spill-heavy pipeline (the cold spill of each finished
+# operator squats on the fast tier while the next operator's hot streams
+# arrive) over tightening DRAM/RDMA capacities; ssd is the backstop.  The
+# first point is the spill-heaviest — the one the strict-win gate holds on.
+EVICTION_OPS = ["eagg", "ems", "ehj"]
+EVICTION_STATS = [
+    WorkloadStats(size_r=64, out=12, partitions=8, sigma=0.5),
+    WorkloadStats(size_r=120, k_cap=8),
+    WorkloadStats(size_r=48, size_s=96, out=36, partitions=8, sigma=0.5),
+]
+EVICTION_SWEEPS = [(24, 96), (48, 192), (96, 384)]
 
 
 def _spec(dram_cap: float, rdma_cap: float) -> HierarchySpec:
@@ -104,6 +125,71 @@ def _simulate(spec: HierarchySpec, pplan: PipelinePlan) -> float:
     sess = Session(spec, budget=M_TOTAL)
     sess.run(_tasks(sess), plan=pplan)
     return sess.remote.latency_seconds()
+
+
+def _eviction_tasks(sess: Session):
+    """The spill-heavy pipeline: cold eagg spill, hot ems runs, wide ehj."""
+    agg_rel = make_relation(sess.remote, 64 * ROWS, ROWS, 128, seed=34)
+    sort_ids = make_key_pages(sess.remote, 120, ROWS, seed=33)
+    build = make_relation(sess.remote, 48 * ROWS, ROWS, 96, seed=31)
+    probe = make_relation(sess.remote, 96 * ROWS, ROWS, 96, seed=32)
+    inputs = [
+        {"rel": agg_rel},
+        {"page_ids": sort_ids},
+        {"build": build, "probe": probe},
+    ]
+    options = [{}, {"rows_per_page": ROWS}, {}]
+    return [
+        sess.task(op, st, inputs=inp, **opt)
+        for op, st, inp, opt in zip(EVICTION_OPS, EVICTION_STATS, inputs,
+                                    options)
+    ]
+
+
+def run_eviction() -> list[Row]:
+    """LRU + overlapped background demotion vs the no-eviction waterfall."""
+    rows_out: List[Row] = []
+    report = {"schema": 1, "tiers": ["dram", "rdma", "ssd"],
+              "m_total": M_TOTAL, "ops": EVICTION_OPS, "policy": "lru",
+              "overlap_migration": True, "sweeps": []}
+    for i, (dram_cap, rdma_cap) in enumerate(EVICTION_SWEEPS):
+        spec = [("dram", dram_cap), ("rdma", rdma_cap), "ssd"]
+        t0 = time.perf_counter()
+        base = Session(spec, budget=M_TOTAL)
+        base_res = base.run(_eviction_tasks(base))
+        sim_base = base.remote.latency_seconds()
+        ev = Session(spec, budget=M_TOTAL, eviction="lru")
+        ev_res = ev.run(_eviction_tasks(ev))
+        sim_ev = ev.remote.latency_seconds(overlap_migration=True)
+        us = (time.perf_counter() - t0) * 1e6
+        reduction = 1 - sim_ev / sim_base
+        if i == 0 and sim_ev >= sim_base:
+            raise RuntimeError(
+                f"eviction gate: LRU+overlap ({sim_ev:.6f}s) must strictly "
+                f"beat the no-eviction waterfall ({sim_base:.6f}s) on the "
+                f"spill-heavy configuration dram={dram_cap} rdma={rdma_cap}"
+            )
+        tag = f"dram{dram_cap}_rdma{rdma_cap}"
+        rows_out.append((f"eviction_{tag}_sim_latency_reduction_vs_waterfall",
+                         us, round(reduction, 4)))
+        report["sweeps"].append({
+            "caps": {"dram": dram_cap, "rdma": rdma_cap},
+            "baseline": {
+                "placements": list(base_res.plan.placements),
+                "simulated_seconds": sim_base,
+            },
+            "eviction": {
+                "placements": list(ev_res.plan.placements),
+                "simulated_seconds": sim_ev,
+                "pages_demoted": ev.evictor.pages_demoted,
+                "demote_batches": ev.evictor.demote_batches,
+            },
+            "reduction": reduction,
+        })
+    with open(EVICTION_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows_out
 
 
 def run() -> list[Row]:
@@ -163,6 +249,7 @@ def run() -> list[Row]:
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
+    rows_out.extend(run_eviction())
     return rows_out
 
 

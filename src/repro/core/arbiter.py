@@ -142,12 +142,82 @@ def _placement_feasible(
     return all(u <= c + 1e-9 for u, c in zip(used, capacities))
 
 
+def _soft_split(
+    pages: float, capacities: Sequence[float], start: int
+) -> List[float]:
+    """First-fit waterfall that dumps any residual on the bottom tier.
+
+    The eviction-aware planner's split: unlike
+    :func:`repro.core.policies.tiered_split` it never raises — an evictor
+    keeps the runtime write path unblocked, so planning prices impossible
+    residuals at the bottom tier instead of failing.
+    """
+    placed = [0.0] * len(capacities)
+    remaining = float(pages)
+    for t in range(start, len(capacities)):
+        free = capacities[t]
+        take = remaining if math.isinf(free) else min(remaining, max(free, 0.0))
+        placed[t] = take
+        remaining -= take
+        if remaining <= 0.0:
+            break
+    if remaining > 0.0:
+        placed[-1] += remaining
+    return placed
+
+
+def _evictable_items(
+    items: Sequence[HierarchyItem], capacities: Sequence[float]
+) -> List[HierarchyItem]:
+    """Wrap items with eviction-aware cost and footprint.
+
+    With an evictor attached, a tier's capacity is *soft*: spill beyond it
+    is demoted to lower tiers in background rounds rather than blocking, so
+
+      * the modeled latency of placing an item on tier ``t`` blends the
+        per-tier taus by the share of its footprint that actually stays on
+        each tier (``_soft_split`` over free capacity), and
+      * only the share resident on ``t`` counts against ``t``'s capacity.
+
+    Each item is split against the free capacities independently (ignoring
+    the other items' shares) — a deliberate planning approximation; the
+    runtime evictor resolves the true interleaving.
+    """
+    caps = list(capacities)
+
+    def wrap(it: HierarchyItem) -> HierarchyItem:
+        def latency_of(m: float, t: int, it=it) -> float:
+            fp = it.footprint_of(m, t)
+            if fp <= 0.0:
+                return it.latency_of(m, t)
+            placed = _soft_split(fp, caps, t)
+            return sum(
+                share / fp * it.latency_of(m, u)
+                for u, share in enumerate(placed)
+                if share > 0.0
+            )
+
+        def footprint_of(m: float, t: int, it=it) -> float:
+            fp = it.footprint_of(m, t)
+            if fp <= 0.0:
+                return fp
+            return _soft_split(fp, caps, t)[t]
+
+        return HierarchyItem(
+            name=it.name, min_pages=it.min_pages,
+            latency_of=latency_of, footprint_of=footprint_of,
+        )
+
+    return [wrap(it) for it in items]
+
+
 def arbitrate_hierarchy(
     items: Sequence[HierarchyItem],
     budget: float,
     capacities: Sequence[float],
     step: float = 1.0,
     occupied: Sequence[float] | None = None,
+    eviction: bool = False,
 ) -> Tuple[List[float], List[int], float]:
     """Split one page budget AND place each item on a hierarchy tier.
 
@@ -161,6 +231,14 @@ def arbitrate_hierarchy(
     residency of a partially-executed pipeline — so a mid-query
     re-arbitration places the remaining items into the capacity that is
     actually left, not the capacity the original plan assumed.
+
+    ``eviction=True`` plans for a hierarchy with a background evictor
+    attached: capacities become *soft* (an item may target a tier its
+    footprint overflows — the evictor demotes the overflow in hidden
+    migration rounds), the modeled cost of a placement blends per-tier taus
+    by where the footprint actually comes to rest, and non-bottom
+    ``occupied`` pages are treated as evictable cold data that sinks to the
+    bottom tier instead of blocking placements.
 
     Returns ``(allocations, tier indices, total modeled latency)``;
     allocations sum to ``budget`` and respect every item's floor, and the
@@ -185,10 +263,18 @@ def arbitrate_hierarchy(
             raise ValueError(
                 f"occupied has {len(occupied)} tiers, capacities {n_tiers}"
             )
+        if eviction and n_tiers > 1:
+            # Cold residency above the backstop is evictable: it sinks to
+            # the bottom tier rather than blocking fast-tier placements.
+            occupied = [0.0] * (n_tiers - 1) + [
+                occupied[-1] + sum(occupied[:-1])
+            ]
         capacities = [
             c if math.isinf(c) else max(c - o, 0.0)
             for c, o in zip(capacities, occupied)
         ]
+    if eviction:
+        items = _evictable_items(items, capacities)
 
     candidates: List[Tuple[List[float], List[int]]] = [
         _greedy_joint(items, budget, capacities, step)

@@ -160,6 +160,10 @@ class LedgerSnapshot:
     c_read: int = 0
     c_write: int = 0
     c_prefetch_hidden: int = 0
+    # Migration rounds overlapped with compute (§IV-E applied to background
+    # demotion): they still count in c_read/c_write but pay no RTT when the
+    # caller opts into ``overlap_migration``.
+    c_migration_hidden: int = 0
 
     @property
     def d_total(self) -> float:
@@ -189,6 +193,9 @@ class TransferLedger:
     c_write: int = 0
     # Rounds whose RTT was hidden by the prefetch double buffer (§IV-E).
     c_prefetch_hidden: int = 0
+    # Migration rounds overlapped with operator compute (background demotion
+    # modeled the way §IV-E models prefetch); disjoint from prefetch hiding.
+    c_migration_hidden: int = 0
 
     @property
     def d_total(self) -> float:
@@ -214,6 +221,7 @@ class TransferLedger:
             c_read=self.c_read,
             c_write=self.c_write,
             c_prefetch_hidden=self.c_prefetch_hidden,
+            c_migration_hidden=self.c_migration_hidden,
         )
 
     def delta(self, since: LedgerSnapshot) -> LedgerSnapshot:
@@ -224,6 +232,7 @@ class TransferLedger:
             c_read=self.c_read - since.c_read,
             c_write=self.c_write - since.c_write,
             c_prefetch_hidden=self.c_prefetch_hidden - since.c_prefetch_hidden,
+            c_migration_hidden=self.c_migration_hidden - since.c_migration_hidden,
         )
 
     def merge(self, other: "TransferLedger") -> None:
@@ -232,10 +241,27 @@ class TransferLedger:
         self.c_read += other.c_read
         self.c_write += other.c_write
         self.c_prefetch_hidden += other.c_prefetch_hidden
+        self.c_migration_hidden += other.c_migration_hidden
 
-    def latency_seconds(self, tier: TierSpec, prefetch: bool = False) -> float:
-        """Eq. (1) over the ledger; with prefetch, hidden rounds pay no RTT."""
-        c_paying = self.c_total - (self.c_prefetch_hidden if prefetch else 0)
+    def latency_seconds(
+        self,
+        tier: TierSpec,
+        prefetch: bool = False,
+        overlap_migration: bool = False,
+    ) -> float:
+        """Eq. (1) over the ledger; hidden rounds pay no RTT when opted in.
+
+        ``prefetch`` drops the double-buffered read rounds' RTT (§IV-E);
+        ``overlap_migration`` drops the RTT of migration rounds performed in
+        the background (demotions overlapped with operator compute).  The
+        bandwidth term always pays in full — overlap hides latency, not
+        volume.
+        """
+        c_paying = self.c_total
+        if prefetch:
+            c_paying -= self.c_prefetch_hidden
+        if overlap_migration:
+            c_paying -= self.c_migration_hidden
         return tier.latency_seconds(self.d_total, max(c_paying, 0))
 
     def latency_cost(self, tau: float) -> float:
@@ -245,6 +271,7 @@ class TransferLedger:
         self.d_read = self.d_write = 0.0
         self.c_read = self.c_write = 0
         self.c_prefetch_hidden = 0
+        self.c_migration_hidden = 0
 
 
 # --------------------------------------------------------------------------
@@ -350,6 +377,7 @@ def _sum_snapshots(snaps: "Tuple[LedgerSnapshot, ...]") -> LedgerSnapshot:
         c_read=sum(s.c_read for s in snaps),
         c_write=sum(s.c_write for s in snaps),
         c_prefetch_hidden=sum(s.c_prefetch_hidden for s in snaps),
+        c_migration_hidden=sum(s.c_migration_hidden for s in snaps),
     )
 
 
@@ -399,6 +427,10 @@ class HierarchySnapshot:
         return sum(s.c_prefetch_hidden for _, s in self.tiers)
 
     @property
+    def c_migration_hidden(self) -> int:
+        return sum(s.c_migration_hidden for _, s in self.tiers)
+
+    @property
     def d_total(self) -> float:
         return self.d_read + self.d_write
 
@@ -420,12 +452,26 @@ class HierarchySnapshot:
             )
         return self.total.latency_cost(tau)
 
-    def latency_seconds(self, spec: HierarchySpec, prefetch: bool = False) -> float:
-        """Eq. (1) summed per tier with each tier's (BW, RTT) constants."""
+    def latency_seconds(
+        self,
+        spec: HierarchySpec,
+        prefetch: bool = False,
+        overlap_migration: bool = False,
+    ) -> float:
+        """Eq. (1) summed per tier with each tier's (BW, RTT) constants.
+
+        ``overlap_migration`` drops the RTT of background migration rounds
+        (``c_migration_hidden``), mirroring how ``prefetch`` drops the
+        double-buffered read rounds' RTT.
+        """
         total = 0.0
         for name, snap in self.tiers:
             tier = spec.level(name).tier
-            c = snap.c_total - (snap.c_prefetch_hidden if prefetch else 0)
+            c = snap.c_total
+            if prefetch:
+                c -= snap.c_prefetch_hidden
+            if overlap_migration:
+                c -= snap.c_migration_hidden
             total += tier.latency_seconds(snap.d_total, max(c, 0))
         return total
 

@@ -645,7 +645,95 @@ def waterfall_io(
 
 
 def tiered_latency_cost(
-    per_tier_dc: Sequence[Tuple[float, float]], taus: Sequence[float]
+    per_tier_dc: Sequence[Tuple[float, ...]],
+    taus: Sequence[float],
+    overlap_migration: bool = False,
 ) -> float:
-    """Hierarchy-wide L = sum_t (D_t + tau_t * C_t) (Definition 3 per tier)."""
-    return sum(d + tau * c for (d, c), tau in zip(per_tier_dc, taus))
+    """Hierarchy-wide L = sum_t (D_t + tau_t * C_t) (Definition 3 per tier).
+
+    Entries are ``(D, C)`` pairs (:func:`waterfall_io`) or ``(D, C,
+    C_hidden)`` triples (:func:`eviction_waterfall_io`); with
+    ``overlap_migration=True`` the hidden background-migration rounds pay no
+    tau, mirroring ``latency_seconds(overlap_migration=True)``.
+    """
+    total = 0.0
+    for entry, tau in zip(per_tier_dc, taus):
+        d, c = entry[0], entry[1]
+        hidden = entry[2] if len(entry) > 2 else 0.0
+        paying = c - hidden if overlap_migration else c
+        total += d + tau * max(paying, 0.0)
+    return total
+
+
+def eviction_waterfall_io(
+    write_pages: float,
+    round_pages: int,
+    capacities: Sequence[float],
+    occupied: Sequence[float] | None = None,
+    start: int = 0,
+) -> List[Tuple[float, float, float]]:
+    """Exact per-tier (D, C, C_hidden) of a write stream under proactive eviction.
+
+    The eviction-aware counterpart of :func:`waterfall_io`: the stream's
+    ``write_pages`` arrive in rounds of ``round_pages`` targeting tier
+    ``start``, and instead of waterfalling overflow downward, an evictor
+    demotes the tier's coldest resident pages (pre-existing ``occupied``
+    pages or the stream's own oldest pages) one tier down in **one background
+    migration batch per overflowing round**, recursively making room below —
+    exactly :class:`repro.engine.eviction.Evictor` semantics.  Every write
+    round therefore lands whole on the target tier; each demotion batch is
+    one hidden read round on the ledger it leaves and one hidden write round
+    on the ledger it enters.
+
+    Returns one ``(D, C, C_hidden)`` triple per tier (D sums reads and
+    writes, matching ``ledger.d_total``/``c_total``/``c_migration_hidden``
+    for a hierarchy that runs only this stream).  Raises ``ValueError`` when
+    a tier lacks evictable residents to cover a deficit or the bottom tier
+    overflows — callers fall back to :func:`waterfall_io` semantics there.
+    """
+    if round_pages < 1:
+        raise ValueError(f"round_pages must be >= 1, got {round_pages}")
+    n = len(capacities)
+    occ = [0.0] * n if occupied is None else list(occupied)
+    if len(occ) != n:
+        raise ValueError("occupied and capacities must align")
+    res = list(occ)
+    d = [0.0] * n
+    c = [0.0] * n
+    hidden = [0.0] * n
+
+    def admit(t: int, amount: float) -> None:
+        """Make room for ``amount`` pages arriving on tier ``t``."""
+        free = capacities[t] - res[t]
+        if math.isinf(free) or free >= amount:
+            return
+        if t == n - 1:
+            raise ValueError(
+                f"{amount} pages overflow the bottom tier "
+                f"(capacities {list(capacities)}, resident {res})"
+            )
+        deficit = math.ceil(amount - free)
+        if deficit > res[t]:
+            raise ValueError(
+                f"tier {t} holds {res[t]} evictable pages but needs to "
+                f"demote {deficit}; not an eviction-covered stream"
+            )
+        admit(t + 1, deficit)
+        d[t] += deficit  # read round leaving t (background: RTT hidden)
+        c[t] += 1
+        hidden[t] += 1
+        d[t + 1] += deficit  # write round entering t+1 (hidden)
+        c[t + 1] += 1
+        hidden[t + 1] += 1
+        res[t] -= deficit
+        res[t + 1] += deficit
+
+    remaining = float(write_pages)
+    while remaining > 0:
+        s = min(float(round_pages), remaining)
+        admit(start, s)
+        d[start] += s
+        c[start] += 1
+        res[start] += s
+        remaining -= s
+    return list(zip(d, c, hidden))

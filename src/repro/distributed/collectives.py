@@ -69,7 +69,9 @@ def hierarchical_grad_reduce(tree, intra_axis: str, inter_axis: str | None):
     def one(g):
         g = g.astype(jnp.float32)
         flat = g.reshape(-1)
-        n = jax.lax.axis_size(intra_axis)
+        # psum of a literal 1 is the canonical static axis-size idiom (the
+        # pinned jax has no lax.axis_size).
+        n = jax.lax.psum(1, intra_axis)
         pad = (-flat.size) % n
         if pad:
             flat = jnp.pad(flat, (0, pad))

@@ -61,6 +61,14 @@ The engine guarantees, for any operator built on it:
 """
 
 from repro.engine.buffers import BufferPool, PageCursor
+from repro.engine.eviction import (
+    ClockPolicy,
+    DeadAfterFlushPolicy,
+    EvictionPolicy,
+    Evictor,
+    LRUPolicy,
+    make_policy,
+)
 from repro.engine.scheduler import TransferScheduler
 from repro.engine import registry
 from repro.engine.registry import (
@@ -103,6 +111,12 @@ __all__ = [
     "BufferPool",
     "PageCursor",
     "TransferScheduler",
+    "EvictionPolicy",
+    "Evictor",
+    "LRUPolicy",
+    "ClockPolicy",
+    "DeadAfterFlushPolicy",
+    "make_policy",
     "OperatorPlan",
     "OperatorSpec",
     "WorkloadStats",

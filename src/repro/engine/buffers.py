@@ -80,10 +80,18 @@ class BufferPool:
         self.rows_flushed += len(chunk)
 
     def flush_all(self) -> None:
-        """Force-flush every stream's remainder: one write round per stream."""
+        """Force-flush every stream's remainder: one write round per stream.
+
+        A force-flush means the stream is complete, so each stream's pages
+        are reported to the scheduler as a fully-flushed spill stream — the
+        "dead after flush" hint eviction policies use to pick first-choice
+        demotion victims.
+        """
         for stream in list(self._bufs):
             if self._counts.get(stream, 0):
                 self._drain(stream, force=True)
+        for stream, page_ids in self._pages.items():
+            self.sched.stream_flushed(page_ids)
 
     def buffered_rows(self, stream: Hashable = 0) -> int:
         return self._counts.get(stream, 0)

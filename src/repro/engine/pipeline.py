@@ -149,8 +149,15 @@ def _plan_pipeline(
     m_pages: float,
     policy: str = "remop",
     step: float = 1.0,
+    eviction: bool = False,
 ) -> PipelinePlan:
-    """The shared planning core behind ``Session.plan`` and the legacy shim."""
+    """The shared planning core behind ``Session.plan`` and the legacy shim.
+
+    ``eviction=True`` plans for a hierarchy with a background evictor:
+    tier capacities are soft and placement costs blend per-tier taus by
+    where each footprint comes to rest (see
+    :func:`repro.core.arbiter.arbitrate_hierarchy`).
+    """
     if not list(ops):
         raise ValueError(
             "empty pipeline: plan_pipeline needs at least one operator "
@@ -158,7 +165,8 @@ def _plan_pipeline(
         )
     if _is_hierarchy(tier):
         return _plan_pipeline_hierarchy(
-            ops, stats, resolve_hierarchy(tier), m_pages, policy, step
+            ops, stats, resolve_hierarchy(tier), m_pages, policy, step,
+            eviction=eviction,
         )
     tier_spec = resolve_tier(tier)
     tau = tier_spec.tau_pages
@@ -195,6 +203,7 @@ def _plan_pipeline_hierarchy(
     m_pages: float,
     policy: str,
     step: float,
+    eviction: bool = False,
 ) -> PipelinePlan:
     """Joint (pages, tier) assignment over a hierarchy's taus and capacities."""
     taus = hspec.taus
@@ -214,7 +223,7 @@ def _plan_pipeline_hierarchy(
             footprint_of=lambda m, t, fp=footprint, st=st: fp(st, taus[t], m),
         ))
     alloc, placement, _ = arbitrate_hierarchy(
-        items, float(m_pages), hspec.capacities, step=step
+        items, float(m_pages), hspec.capacities, step=step, eviction=eviction
     )
     budgets = tuple(
         OperatorBudget(

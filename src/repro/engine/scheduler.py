@@ -159,6 +159,18 @@ class TransferScheduler:
             flush(pending)
         return pages
 
+    def stream_flushed(self, page_ids: Sequence[int]) -> None:
+        """Hint: a spill stream owning ``page_ids`` is fully flushed.
+
+        Forwarded to the hierarchy's attached evictor (if any) so
+        spill-stream-aware eviction policies (``dead``) can mark the pages
+        as first-choice demotion victims.  A no-op on bare tiers and on
+        hierarchies without an evictor.
+        """
+        evictor = getattr(self.remote, "evictor", None)
+        if evictor is not None and len(page_ids):
+            evictor.stream_flushed(list(page_ids))
+
     def write(
         self,
         pages: Sequence[np.ndarray],

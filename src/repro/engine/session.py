@@ -76,6 +76,10 @@ class OperatorTask:
     inputs: Mapping[str, Any]
     options: Mapping[str, Any]
     label: str
+    # Per-task eviction policy override: a resolved EvictionPolicy instance
+    # (session.task() resolves names once, so stateful policies keep their
+    # hints across runs); None uses the session's policy.
+    eviction: Any = None
 
     @property
     def output(self) -> "TaskOutput":
@@ -110,6 +114,13 @@ class TaskExplain:
     footprint: float  # estimated spill pages parked on the placement tier
     capacity: float  # the placement tier's total capacity (inf = unbounded)
     min_pages: float
+    # Eviction plan (None when the session has no evictor): the effective
+    # policy, the estimated pages the evictor must demote off the placement
+    # tier to fit the footprint, and the coarse background-round estimate
+    # (one demotion batch per overflowing write round of ~M_i pages).
+    eviction: Optional[str] = None
+    eviction_pages: float = 0.0
+    eviction_rounds: float = 0.0
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -131,17 +142,26 @@ class PlanReport:
     target: str  # tier name, or "dram->rdma->ssd" for a hierarchy
     tasks: Tuple[TaskExplain, ...]
     tier_footprints: Tuple[Tuple[str, float, float], ...]  # (tier, fp, cap)
+    # Session eviction setup, e.g. "lru+overlap"; None when disabled.
+    eviction: Optional[str] = None
 
     @property
     def total_modeled_latency(self) -> float:
         return sum(t.modeled_latency for t in self.tasks)
+
+    @property
+    def total_eviction_rounds(self) -> float:
+        """Estimated background demotion batches across the whole plan."""
+        return sum(t.eviction_rounds for t in self.tasks)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
             "policy": self.policy,
             "m_total": self.m_total,
             "target": self.target,
+            "eviction": self.eviction,
             "total_modeled_latency": self.total_modeled_latency,
+            "total_eviction_rounds": self.total_eviction_rounds,
             "tasks": [t.to_dict() for t in self.tasks],
             "tier_footprints": [
                 {"tier": name, "footprint": fp,
@@ -153,15 +173,24 @@ class PlanReport:
     def __str__(self) -> str:
         header = (f"plan: policy={self.policy} M={self.m_total:g} "
                   f"target={self.target}")
+        if self.eviction is not None:
+            header += f" eviction={self.eviction}"
         cols = ("op", "label", "M_i", "tier", "D", "C", "L", "footprint/cap")
+        if self.eviction is not None:
+            cols = cols + ("evict",)
         rows = [cols]
         for t in self.tasks:
             cap = "inf" if math.isinf(t.capacity) else f"{t.capacity:g}"
-            rows.append((
+            row = (
                 t.op, t.label, f"{t.m_pages:g}", t.placement,
                 f"{t.modeled_d:.1f}", f"{t.modeled_c:.1f}",
                 f"{t.modeled_latency:.1f}", f"{t.footprint:g}/{cap}",
-            ))
+            )
+            if self.eviction is not None:
+                row = row + (
+                    f"{t.eviction_pages:g}p/{t.eviction_rounds:g}r",
+                )
+            rows.append(row)
         widths = [max(len(r[i]) for r in rows) for i in range(len(cols))]
         lines = [header] + [
             "  ".join(cell.ljust(w) for cell, w in zip(row, widths)).rstrip()
@@ -190,6 +219,9 @@ class TaskRun:
     result: Any  # the operator's run result
     delta: Any  # LedgerSnapshot / HierarchySnapshot for this task
     replanned: bool = False  # True when a mid-run replan changed this task
+    # Measured eviction effort during this task (0 without an evictor).
+    eviction_pages: int = 0
+    eviction_rounds: int = 0  # background demotion batches
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +237,11 @@ class ReplanEvent:
     placements_after: Tuple[Optional[str], ...]
     modeled_before: float  # remaining tasks' modeled L under the old split
     modeled_after: float
+    # Measured eviction effort up to this replan boundary (cumulative over
+    # the run so far, 0 without an evictor): background demotion batches and
+    # the pages they moved.
+    eviction_rounds: int = 0
+    eviction_pages: int = 0
 
 
 @dataclasses.dataclass
@@ -217,6 +254,9 @@ class SessionRunResult:
     replan_events: List[ReplanEvent]
     tier: TierSpec
     hierarchy: Optional[HierarchySpec]
+    # True when the session ran background demotions overlapped with compute
+    # (hidden migration rounds then pay no RTT in latency_seconds()).
+    overlap_migration: bool = False
 
     @property
     def per_op(self) -> List[Tuple[str, Any, Any]]:
@@ -226,7 +266,9 @@ class SessionRunResult:
     def latency_seconds(self) -> float:
         """Eq.-(1) wall latency of the whole run on the session's target."""
         if self.hierarchy is not None:
-            return self.total.latency_seconds(self.hierarchy)
+            return self.total.latency_seconds(
+                self.hierarchy, overlap_migration=self.overlap_migration
+            )
         return self.tier.latency_seconds(self.total.d_total, self.total.c_total)
 
     def latency_cost(self) -> float:
@@ -249,10 +291,22 @@ class Session:
     is created), a ``HierarchySpec``, or a level list such as
     ``[("dram", 64), ("rdma", 256), "ssd"]``.  ``budget`` is the global page
     budget M split across every task of a pipeline.
+
+    ``eviction`` enables proactive background demotion on a hierarchy
+    target: a policy name (``"lru"``/``"clock"``/``"dead"``) or an
+    :class:`repro.engine.eviction.EvictionPolicy` instance attaches an
+    :class:`repro.engine.eviction.Evictor` to the hierarchy, so cold pages
+    are demoted out of hot spill streams' way instead of the streams
+    waterfalling downward.  ``overlap_migration`` (default ``True``) issues
+    those demotions overlapped with operator compute — their rounds pay no
+    RTT in the session's measured latency.  ``headroom`` keeps that many
+    pages free on every non-bottom tier after each write.  Individual tasks
+    can select a different policy via ``session.task(..., eviction=...)``.
     """
 
     def __init__(self, target: Any, budget: float, policy: str = "remop",
-                 step: float = 1.0):
+                 step: float = 1.0, eviction: Any = None,
+                 overlap_migration: bool = True, headroom: float = 0.0):
         if budget <= 0:
             raise ValueError(f"session budget must be > 0 pages, got {budget}")
         self.budget = float(budget)
@@ -268,6 +322,22 @@ class Session:
             self.hierarchy.levels[0].tier if self.is_hierarchy
             else self.remote.tier
         )
+        self.evictor = None
+        self.overlap_migration = False
+        if eviction is not None:
+            if not self.is_hierarchy:
+                raise ValueError(
+                    "eviction needs a memory hierarchy target; a single "
+                    "tier has nowhere to demote cold pages to"
+                )
+            from repro.engine.eviction import Evictor
+
+            self.evictor = Evictor(
+                self.remote, eviction, overlap=overlap_migration,
+                headroom=headroom,
+            )
+            self.remote.evictor = self.evictor
+            self.overlap_migration = bool(overlap_migration)
         self._task_seq = 0
         self._run_seq = 0
 
@@ -296,6 +366,14 @@ class Session:
             return self.hierarchy.level(placement).tier.tau_pages
         return self.tier.tau_pages
 
+    @property
+    def eviction_name(self) -> Optional[str]:
+        """Human-readable eviction setup, e.g. ``"lru+overlap"``."""
+        if self.evictor is None:
+            return None
+        name = self.evictor.policy.name
+        return f"{name}+overlap" if self.overlap_migration else name
+
     # -- task construction ---------------------------------------------------
 
     def task(
@@ -305,6 +383,7 @@ class Session:
         *,
         inputs: Optional[Mapping[str, Any]] = None,
         label: Optional[str] = None,
+        eviction: Any = None,
         **options: Any,
     ) -> OperatorTask:
         """Build a typed task; input names are validated against the operator.
@@ -312,6 +391,8 @@ class Session:
         ``inputs`` values may be live data (relations, page-id lists) or an
         earlier task's ``.output`` reference; ``options`` are passed through
         to the operator's data plane (``rows_per_page``, ``prefetch``, ...).
+        ``eviction`` selects a different eviction policy for this task only
+        (the session's evictor must be enabled; validated eagerly).
         """
         spec = get(op)  # raises ValueError for unknown operators
         if self.policy not in spec.policies:
@@ -319,6 +400,19 @@ class Session:
                 f"operator {op!r} has no policy {self.policy!r}; "
                 f"available: {spec.policies}"
             )
+        if eviction is not None:
+            if self.evictor is None:
+                raise ValueError(
+                    f"task {op!r} selects eviction policy {eviction!r} but "
+                    f"the session has no evictor (pass eviction=... to "
+                    f"Session)"
+                )
+            from repro.engine.eviction import make_policy
+
+            # Resolve once (failing fast on unknown names) and keep the
+            # instance on the task, so a stateful policy ("dead", "clock")
+            # retains its hints/sweep state across runs of the same task.
+            eviction = make_policy(eviction)
         # Unknown names fail fast here; *missing* inputs only fail at run
         # time (bind_inputs), so plan()/explain() work on data-free tasks.
         unknown = sorted(set(inputs or {}) - set(spec.inputs))
@@ -334,6 +428,7 @@ class Session:
             inputs=dict(inputs or {}),
             options=dict(options),
             label=label or f"{op}#{self._task_seq}",
+            eviction=eviction,
         )
 
     def _check_tasks(self, tasks: Sequence[OperatorTask]) -> List[OperatorTask]:
@@ -370,6 +465,7 @@ class Session:
         return _plan_pipeline(
             [t.op for t in tasks], [t.stats for t in tasks],
             target, self.budget, self.policy, self.step,
+            eviction=self.evictor is not None,
         )
 
     @staticmethod
@@ -406,11 +502,27 @@ class Session:
             fp = (spec.footprint(ob.stats, tau, ob.m_pages)
                   if spec.footprint else 0.0)
             usage[tier_name] = usage.get(tier_name, 0.0) + fp
+            ev_name, ev_pages, ev_rounds = None, 0.0, 0.0
+            if self.evictor is not None:
+                ev_name = (task.eviction.name if task.eviction is not None
+                           else self.evictor.policy.name)
+                # Footprint beyond the placement tier's free capacity is
+                # what the evictor must demote; the round estimate assumes
+                # one background batch per overflowing ~M_i-page write.
+                free = capacity
+                if not math.isinf(free):
+                    free = max(capacity - float(
+                        self.remote.tier_resident(tier_name)), 0.0)
+                    ev_pages = max(fp - free, 0.0)
+                    ev_rounds = math.ceil(
+                        ev_pages / max(ob.m_pages, 1.0)) if ev_pages else 0.0
             rows.append(TaskExplain(
                 op=ob.op, label=task.label, m_pages=ob.m_pages,
                 placement=tier_name, tau=tau, modeled_d=d, modeled_c=c,
                 modeled_latency=ob.modeled_latency, footprint=fp,
                 capacity=capacity, min_pages=spec.min_pages,
+                eviction=ev_name, eviction_pages=ev_pages,
+                eviction_rounds=ev_rounds,
             ))
         if self.hierarchy is not None:
             footprints = tuple(
@@ -424,6 +536,7 @@ class Session:
         return PlanReport(
             policy=self.policy, m_total=self.budget, target=self.target_name,
             tasks=tuple(rows), tier_footprints=footprints,
+            eviction=self.eviction_name,
         )
 
     # -- execution -----------------------------------------------------------
@@ -478,11 +591,24 @@ class Session:
                     kwargs.setdefault("tier", ob.placement)
                 task_label = f"{run_label}/{i}"
                 sched.checkpoint(task_label)
+                ev_before = (self.evictor.counters() if self.evictor
+                             else None)
+                saved_policy = None
+                if self.evictor is not None and task.eviction is not None:
+                    saved_policy = self.evictor.policy
+                    self.evictor.policy = task.eviction
                 try:
                     result = spec.run(self.remote, *args, ob.plan, **kwargs)
                     delta = sched.since(task_label)
                 finally:
                     sched.drop_checkpoint(task_label)
+                    if saved_policy is not None:
+                        self.evictor.policy = saved_policy
+                ev_pages = ev_rounds = 0
+                if ev_before is not None:
+                    after = self.evictor.counters()
+                    ev_pages = after["pages_demoted"] - ev_before["pages_demoted"]
+                    ev_rounds = after["demote_batches"] - ev_before["demote_batches"]
                 if spec.output_of is not None:
                     outputs[id(task)] = spec.output_of(result)
                 measured = (spec.measured_stats(cur_stats[i], result)
@@ -493,6 +619,7 @@ class Session:
                     m_pages=ob.m_pages, placement=ob.placement,
                     stats=ob.stats, measured=measured, result=result,
                     delta=delta, replanned=replanned[i],
+                    eviction_pages=ev_pages, eviction_rounds=ev_rounds,
                 ))
                 if replan == "measured" and i + 1 < len(tasks):
                     event = self._replan_remaining(
@@ -508,6 +635,7 @@ class Session:
         return SessionRunResult(
             per_task=per_task, total=total, plan=pplan, replan_events=events,
             tier=self.tier, hierarchy=self.hierarchy,
+            overlap_migration=self.overlap_migration,
         )
 
     # -- mid-pipeline re-arbitration ------------------------------------------
@@ -582,6 +710,8 @@ class Session:
             return None
         for j, nb in zip(remaining, new_budgets):
             budgets[j] = nb
+        ev = (self.evictor.counters() if self.evictor is not None
+              else {"demote_batches": 0, "pages_demoted": 0})
         return ReplanEvent(
             after_index=done,
             after_label=finished_task.label,
@@ -592,6 +722,8 @@ class Session:
             placements_after=tuple(nb.placement for nb in new_budgets),
             modeled_before=before_l,
             modeled_after=sum(nb.modeled_latency for nb in new_budgets),
+            eviction_rounds=ev["demote_batches"],
+            eviction_pages=ev["pages_demoted"],
         )
 
     def _arbitrate_tail(
@@ -643,7 +775,8 @@ class Session:
                 ),
             ))
         alloc, placement, _ = arbitrate_hierarchy(
-            items, budget, hspec.capacities, step=self.step, occupied=occupied
+            items, budget, hspec.capacities, step=self.step, occupied=occupied,
+            eviction=self.evictor is not None,
         )
         return [
             OperatorBudget(

@@ -96,8 +96,12 @@ class RemoteMemory:
 
     # -- reporting ------------------------------------------------------------
 
-    def latency_seconds(self, prefetch: bool = False) -> float:
-        return self.ledger.latency_seconds(self.tier, prefetch=prefetch)
+    def latency_seconds(
+        self, prefetch: bool = False, overlap_migration: bool = False
+    ) -> float:
+        return self.ledger.latency_seconds(
+            self.tier, prefetch=prefetch, overlap_migration=overlap_migration
+        )
 
     def latency_cost(self) -> float:
         return self.ledger.latency_cost(self.tier.tau_pages)
@@ -140,6 +144,15 @@ class MemoryHierarchy:
             RemoteMemory(lv.tier, _alloc=self._alloc) for lv in spec.levels
         ]
         self._placement: Dict[int, int] = {}
+        # Page access recency (one tick per batched access, shared across
+        # tiers): the substrate eviction policies rank victims by.  Migration
+        # is not an access — a demoted page keeps its coldness.
+        self._access_clock = 0
+        self._access: Dict[int, int] = {}
+        # Pluggable eviction hook (see repro.engine.eviction.Evictor): when
+        # set, write_batch asks it to make room on the target tier by
+        # demoting cold pages *before* waterfalling new pages downward.
+        self.evictor = None
 
     # -- resolution ----------------------------------------------------------
 
@@ -166,6 +179,31 @@ class MemoryHierarchy:
     def capacity_left(self, tier: Union[int, str]) -> float:
         idx = self.spec.index(tier)
         return self.spec.levels[idx].capacity_pages - self.tiers[idx].pages_resident
+
+    # -- access recency (eviction policy substrate) --------------------------
+
+    def _touch(self, page_ids: Sequence[int]) -> None:
+        """Mark a batched access: one clock tick shared by the whole batch."""
+        self._access_clock += 1
+        for i in page_ids:
+            self._access[i] = self._access_clock
+
+    @property
+    def access_clock(self) -> int:
+        return self._access_clock
+
+    def last_access(self, page_id: int) -> int:
+        """Clock tick of the page's last access (0 = never accessed)."""
+        return self._access.get(page_id, 0)
+
+    def is_resident(self, page_id: int) -> bool:
+        """Whether the page is currently held by any tier."""
+        return page_id in self._placement
+
+    def pages_on(self, tier: Union[int, str]) -> List[int]:
+        """Resident page ids on a tier, in stable (allocation) order."""
+        idx = self.spec.index(tier)
+        return sorted(i for i, t in self._placement.items() if t == idx)
 
     # -- allocation (no accounting) ------------------------------------------
 
@@ -199,6 +237,7 @@ class MemoryHierarchy:
                 ids.extend(chunk_ids)
                 remaining = remaining[take:]
             idx += 1
+        self._touch(ids)
         return ids
 
     def peek_batch(self, page_ids: Sequence[int]) -> List[np.ndarray]:
@@ -217,6 +256,7 @@ class MemoryHierarchy:
             )
         for i in ids:
             self.tiers[self._placement.pop(i)].free([i])
+            self._access.pop(i, None)
 
     # -- batched transfer rounds ---------------------------------------------
 
@@ -236,6 +276,7 @@ class MemoryHierarchy:
             ids = by_tier[idx]
             for i, page in zip(ids, self.tiers[idx].read_batch(ids, prefetched)):
                 fetched[i] = page
+        self._touch(list(page_ids))
         return [fetched[i] for i in page_ids]
 
     def write_batch(
@@ -246,10 +287,16 @@ class MemoryHierarchy:
         The batch targets ``tier`` (default: the top tier); pages beyond the
         target's remaining capacity cascade to the next tier down, each
         receiving tier accounting exactly one write round for its share.
+        With an :attr:`evictor` attached, the evictor first demotes cold
+        pages off the target tier (background migration rounds), so the hot
+        batch lands on its target instead of waterfalling; any residual
+        overflow still cascades as before.
         """
         if not len(pages):
             return []
         idx = self.tier_index(tier)
+        if self.evictor is not None:
+            self.evictor.make_room(idx, len(pages))
         ids: List[int] = []
         remaining = list(pages)
         while remaining:
@@ -267,11 +314,19 @@ class MemoryHierarchy:
                 ids.extend(chunk_ids)
                 remaining = remaining[take:]
             idx += 1
+        self._touch(ids)
+        if self.evictor is not None:
+            self.evictor.maintain()
         return ids
 
     # -- migration rounds ----------------------------------------------------
 
-    def migrate(self, page_ids: Sequence[int], dst: Union[int, str]) -> None:
+    def migrate(
+        self,
+        page_ids: Sequence[int],
+        dst: Union[int, str],
+        background: bool = False,
+    ) -> None:
         """Move a batch to ``dst`` in adjacent-tier migration rounds.
 
         Pages keep their ids.  Every adjacent hop is one read round on the
@@ -279,6 +334,13 @@ class MemoryHierarchy:
         two-level demotion crosses three ledgers with the middle one charged
         on both sides.  The destination must have room for the whole batch
         (pass-through tiers need none); short batches raise ``ValueError``.
+
+        ``background=True`` models migration overlapped with operator
+        compute (§IV-E applied to demotion): every round of every hop is
+        additionally recorded in that ledger's ``c_migration_hidden``, so
+        ``latency_seconds(overlap_migration=True)`` charges it no RTT.  The
+        volume term still pays in full, and migration never refreshes page
+        recency — a demoted page stays as cold as it was.
         """
         if not len(page_ids):
             return
@@ -307,21 +369,26 @@ class MemoryHierarchy:
                 pages = [src_rm._store[i] for i in ids]
                 src_rm.ledger.read(float(len(ids)))  # one round leaving `cur`
                 dst_rm.ledger.write(float(len(ids)))  # one round entering `nxt`
+                if background:
+                    src_rm.ledger.c_migration_hidden += 1
+                    dst_rm.ledger.c_migration_hidden += 1
                 for i, page in zip(ids, pages):
                     del src_rm._store[i]
                     dst_rm._store[i] = page
                     self._placement[i] = nxt
                 cur = nxt
 
-    def demote(self, page_ids: Sequence[int]) -> None:
+    def demote(self, page_ids: Sequence[int], background: bool = False) -> None:
         """Migrate a batch one tier down (all pages must share a tier)."""
-        self._hop(page_ids, +1)
+        self._hop(page_ids, +1, background=background)
 
-    def promote(self, page_ids: Sequence[int]) -> None:
+    def promote(self, page_ids: Sequence[int], background: bool = False) -> None:
         """Migrate a batch one tier up (all pages must share a tier)."""
-        self._hop(page_ids, -1)
+        self._hop(page_ids, -1, background=background)
 
-    def _hop(self, page_ids: Sequence[int], step: int) -> None:
+    def _hop(
+        self, page_ids: Sequence[int], step: int, background: bool = False
+    ) -> None:
         if not len(page_ids):
             return
         tiers = {self._placement.get(i) for i in page_ids}
@@ -337,7 +404,7 @@ class MemoryHierarchy:
                 f"cannot move {'down' if step > 0 else 'up'} from "
                 f"{'bottom' if step > 0 else 'top'} tier {self.spec.names[src_idx]!r}"
             )
-        self.migrate(page_ids, dst_idx)
+        self.migrate(page_ids, dst_idx, background=background)
 
     # -- reporting ------------------------------------------------------------
 
@@ -353,9 +420,14 @@ class MemoryHierarchy:
             for name, rm in zip(self.spec.names, self.tiers)
         ))
 
-    def latency_seconds(self, prefetch: bool = False) -> float:
+    def latency_seconds(
+        self, prefetch: bool = False, overlap_migration: bool = False
+    ) -> float:
         """Eq. (1) summed over tiers, each with its own (BW, RTT)."""
-        return sum(rm.latency_seconds(prefetch) for rm in self.tiers)
+        return sum(
+            rm.latency_seconds(prefetch, overlap_migration=overlap_migration)
+            for rm in self.tiers
+        )
 
     def latency_cost(self) -> float:
         """Hierarchy-wide L: per-tier D + tau_t * C summed over tiers."""

@@ -1,0 +1,454 @@
+"""Hierarchy invariant suite (ISSUE 5): the ledger identities every piece of
+the eviction/background-migration machinery must preserve.
+
+Property tests (hypothesis, with the deterministic conftest fallback) drive
+random put/read/demote/promote/evict sequences against a capacity-bounded
+DRAM -> RDMA -> SSD hierarchy with a live evictor, pinning:
+
+  * page ids are stable across migrations and no page is ever lost,
+    duplicated, or corrupted by routing/eviction;
+  * per-tier ledgers always sum to the ``HierarchySnapshot`` totals;
+  * ``c_migration_hidden <= c_total`` (and hidden counters never exceed the
+    rounds that carried them) on every tier and in aggregate;
+  * a 1-tier hierarchy with eviction disabled reproduces the PR 4 ledgers
+    byte-for-byte for all four operators;
+  * eviction composes with measured replanning: per-task
+    ``TransferScheduler.checkpoint``/``since`` deltas sum exactly to the run
+    total — no eviction round is double-counted across a replan boundary.
+
+Plus targeted tests for the policies (LRU order, clock second chance,
+dead-after-flush hints), the evictor's write-path semantics, the
+``eviction_waterfall_io`` closed form, and the eviction-aware arbiter.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import TABLE_I, TESTBED
+from repro.core.arbiter import HierarchyItem, arbitrate_hierarchy
+from repro.core.policies import eviction_waterfall_io, tiered_latency_cost
+from repro.engine import (
+    BufferPool,
+    Session,
+    TransferScheduler,
+    WorkloadStats,
+    plan_operator,
+    registry,
+)
+from repro.engine.eviction import (
+    ClockPolicy,
+    DeadAfterFlushPolicy,
+    Evictor,
+    LRUPolicy,
+    make_policy,
+)
+from repro.remote import RemoteMemory, make_hierarchy, make_relation
+from repro.remote.simulator import make_key_pages
+
+TIER = TESTBED["remon_tcp"]
+ROWS = 8
+
+
+def _page(fill: int) -> np.ndarray:
+    return np.full((4,), fill, dtype=np.int64)
+
+
+def _check_invariants(h, contents):
+    """The ledger identities that must hold after any operation sequence."""
+    snap = h.snapshot()
+    per_tier = [s for _, s in snap.tiers]
+    total = snap.total
+    # Per-tier ledgers sum to the hierarchy-wide totals, field by field.
+    assert total.d_read == sum(s.d_read for s in per_tier)
+    assert total.d_write == sum(s.d_write for s in per_tier)
+    assert total.c_read == sum(s.c_read for s in per_tier)
+    assert total.c_write == sum(s.c_write for s in per_tier)
+    assert total.c_prefetch_hidden == sum(s.c_prefetch_hidden for s in per_tier)
+    assert total.c_migration_hidden == sum(
+        s.c_migration_hidden for s in per_tier
+    )
+    assert snap.d_total == total.d_total and snap.c_total == total.c_total
+    assert snap.c_migration_hidden == total.c_migration_hidden
+    # Hidden rounds are a subset of real rounds, tier by tier: a hidden
+    # migration read/write happened on that ledger.
+    for s in per_tier:
+        assert s.c_migration_hidden <= s.c_total
+        assert s.c_prefetch_hidden <= s.c_read
+        assert s.c_prefetch_hidden + s.c_migration_hidden <= s.c_total
+    assert total.c_migration_hidden <= total.c_total
+    # No page lost, duplicated, or corrupted: every id resolves to exactly
+    # one tier and reads back the array that was written.
+    assert h.pages_resident == len(contents)
+    for i, fill in contents.items():
+        assert h.tier_of(i) in h.spec.names
+        np.testing.assert_array_equal(h.peek_batch([i])[0], _page(fill))
+    # Overlapped latency never exceeds the unhidden reading, and the gap is
+    # exactly the hidden rounds' RTT.
+    overlapped = h.latency_seconds(overlap_migration=True)
+    plain = h.latency_seconds()
+    assert overlapped <= plain + 1e-15
+    expect_gap = sum(
+        s.c_migration_hidden * h.spec.level(name).tier.rtt
+        for name, s in snap.tiers
+    )
+    assert plain - overlapped == pytest.approx(expect_gap)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dram_cap=st.integers(min_value=1, max_value=6),
+    rdma_cap=st.integers(min_value=2, max_value=8),
+    policy=st.sampled_from(["lru", "clock", "dead"]),
+    actions=st.lists(st.integers(min_value=0, max_value=9999), min_size=0,
+                     max_size=40),
+)
+def test_random_sequences_preserve_hierarchy_invariants(
+    dram_cap, rdma_cap, policy, actions
+):
+    h = make_hierarchy((TABLE_I["dram"], dram_cap), (TABLE_I["rdma"], rdma_cap),
+                       TABLE_I["ssd"])
+    evictor = Evictor(h, policy, overlap=True)
+    h.evictor = evictor
+    contents = {}  # page id -> fill value
+    fill = 0
+    for a in actions:
+        kind = a % 5
+        if kind <= 1:  # write a batch (evictor makes room, then waterfall)
+            n = a % 3 + 1
+            pages = []
+            for _ in range(n):
+                pages.append(_page(fill))
+                fill += 1
+            ids = h.write_batch(pages, tier="dram" if kind == 0 else "rdma")
+            for i, p in zip(ids, pages):
+                contents[i] = int(p[0])
+        elif kind == 2 and contents:  # read a known slice
+            known = sorted(contents)
+            lo = a % len(known)
+            h.read_batch(known[lo : lo + 3])
+        elif kind == 3 and contents:  # demote/promote a same-tier batch
+            tier = a % len(h.tiers)
+            resident = h.pages_on(tier)[: a % 2 + 1]
+            if resident:
+                try:
+                    if a % 2:
+                        h.demote(resident, background=bool(a % 4 == 1))
+                    else:
+                        h.promote(resident, background=bool(a % 4 == 0))
+                except ValueError:
+                    pass  # top/bottom tier or destination full: legal refusal
+        elif kind == 4:  # explicit eviction pass
+            evictor.make_room(a % 2, a % 3 + 1)
+        _check_invariants(h, contents)
+    _check_invariants(h, contents)
+    # Evictor counters agree with the hidden-round ledgers: every demote
+    # batch is one hidden read + one hidden write per hop crossed.
+    if evictor.overlap:
+        total_hidden = h.snapshot().total.c_migration_hidden
+        assert total_hidden >= 2 * evictor.demote_batches or (
+            evictor.demote_batches == 0 and total_hidden >= 0
+        )
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: eviction disabled, 1 tier => PR 4 ledgers byte-for-byte
+# ---------------------------------------------------------------------------
+
+STATS = WorkloadStats(size_r=40, size_s=80, out=24, selectivity=1 / 128,
+                      partitions=8, sigma=0.5, k_cap=8)
+
+
+def _run_operator(remote, op, m=14, seed=5):
+    plan = plan_operator(op, STATS, TIER, m)
+    if op in ("bnlj", "ehj"):
+        r = make_relation(remote, 40 * ROWS, ROWS, 128, seed=seed)
+        s = make_relation(remote, 80 * ROWS, ROWS, 128, seed=seed + 1)
+        return registry.get(op).run(remote, r, s, plan)
+    if op == "ems":
+        ids = make_key_pages(remote, 40, ROWS, seed=seed)
+        return registry.get(op).run(remote, ids, plan, rows_per_page=ROWS)
+    rel = make_relation(remote, 40 * ROWS, ROWS, 64, seed=seed)
+    return registry.get(op).run(remote, rel, plan)
+
+
+@pytest.mark.parametrize("op", ["bnlj", "ems", "ehj", "eagg"])
+def test_single_tier_no_eviction_reproduces_pr4_ledgers_exactly(op):
+    """The parity pin: the new counters and hooks change nothing when off."""
+    bare = RemoteMemory(TIER)
+    hier = make_hierarchy(TIER)
+    assert hier.evictor is None  # eviction is opt-in
+    _run_operator(bare, op)
+    _run_operator(hier, op)
+    bare_snap = bare.ledger.snapshot()
+    hier_snap = hier.tiers[0].ledger.snapshot()
+    # Dataclass equality covers every field, including the new
+    # c_migration_hidden (which must be 0 on both sides).
+    assert bare_snap == hier_snap
+    assert hier_snap.c_migration_hidden == 0
+
+
+# ---------------------------------------------------------------------------
+# Eviction policies
+# ---------------------------------------------------------------------------
+
+
+def _seeded(h, n, tier="dram"):
+    return h.write_batch([_page(i) for i in range(n)], tier=tier)
+
+
+def test_lru_policy_picks_coldest_first():
+    h = make_hierarchy((TABLE_I["dram"], 8), TABLE_I["ssd"])
+    ids = _seeded(h, 4)
+    h.read_batch(ids[:1])  # refresh page 0: now the warmest
+    lru = LRUPolicy()
+    assert lru.victims(h, 0, 2) == [ids[1], ids[2]]
+    assert lru.victims(h, 0, 99) == [ids[1], ids[2], ids[3], ids[0]]
+    assert lru.victims(h, 0, 0) == []
+
+
+def test_clock_policy_gives_accessed_pages_a_second_chance():
+    h = make_hierarchy((TABLE_I["dram"], 8), TABLE_I["ssd"])
+    ids = _seeded(h, 3)
+    clock = ClockPolicy()
+    # First sweep: everything is freshly referenced -> spare once, then the
+    # second sweep evicts in hand order.
+    assert clock.victims(h, 0, 1) == [ids[0]]
+    # A page re-accessed since the hand passed is spared again.
+    h.read_batch([ids[1]])
+    assert clock.victims(h, 0, 1) == [ids[2]]
+
+
+def test_dead_after_flush_prefers_flushed_streams_and_revives_on_read():
+    h = make_hierarchy((TABLE_I["dram"], 16), TABLE_I["ssd"])
+    dead_policy = DeadAfterFlushPolicy()
+    h.evictor = Evictor(h, dead_policy)
+    sched = TransferScheduler(h, tier="dram")
+    pool = BufferPool(sched, 2, ROWS)
+    pool.add(np.arange(3 * ROWS, dtype=np.int64)[:, None])
+    pool.flush_all()  # stream complete -> pages hinted dead via the scheduler
+    dead_ids = pool.pages(0)
+    live_ids = sched.write([_page(7)])  # newer, but NOT dead
+    assert dead_policy.victims(h, 0, 2) == sorted(dead_ids)[:2]
+    # Reading a dead page revives it: recency moved past the flush hint.
+    h.read_batch(dead_ids[:1])
+    revived = dead_policy.victims(h, 0, len(dead_ids) + 1)
+    assert dead_ids[0] == revived[-1] or dead_ids[0] not in revived[:-1]
+    assert revived[0] in dead_ids[1:]
+    assert live_ids[0] not in revived[: len(dead_ids) - 1]
+
+
+def test_make_policy_validates():
+    assert make_policy("lru").name == "lru"
+    assert make_policy(ClockPolicy()).name == "clock"
+    with pytest.raises(ValueError, match="unknown eviction policy"):
+        make_policy("fifo")
+    with pytest.raises(TypeError, match="EvictionPolicy"):
+        make_policy(42)
+
+
+# ---------------------------------------------------------------------------
+# Evictor write-path semantics + the closed form
+# ---------------------------------------------------------------------------
+
+
+def test_evictor_keeps_hot_writes_on_the_fast_tier():
+    h = make_hierarchy((TABLE_I["dram"], 4), (TABLE_I["rdma"], 16),
+                       TABLE_I["ssd"])
+    h.evictor = Evictor(h, "lru", overlap=True)
+    cold = h.write_batch([_page(i) for i in range(4)], tier="dram")
+    hot = h.write_batch([_page(10 + i) for i in range(3)], tier="dram")
+    # The hot batch landed on dram; the cold pages were demoted out of the
+    # way in one background batch instead of the hot batch waterfalling.
+    assert {h.tier_of(i) for i in hot} == {"dram"}
+    assert {h.tier_of(i) for i in cold[:3]} == {"rdma"}
+    rdma = h.tier("rdma").ledger
+    assert (rdma.d_write, rdma.c_write, rdma.c_migration_hidden) == (3.0, 1, 1)
+    dram = h.tier("dram").ledger
+    assert dram.c_migration_hidden == 1  # the hidden read leaving dram
+    assert h.evictor.pages_demoted == 3 and h.evictor.demote_batches == 1
+
+
+def test_evictor_requires_hierarchy_and_valid_headroom():
+    with pytest.raises(ValueError, match="needs a MemoryHierarchy"):
+        Evictor(RemoteMemory(TIER), "lru")
+    h = make_hierarchy((TABLE_I["dram"], 4), TABLE_I["ssd"])
+    with pytest.raises(ValueError, match="headroom"):
+        Evictor(h, "lru", headroom=-1)
+
+
+def test_evictor_headroom_maintains_free_pages():
+    h = make_hierarchy((TABLE_I["dram"], 6), TABLE_I["ssd"])
+    h.evictor = Evictor(h, "lru", headroom=2)
+    h.write_batch([_page(i) for i in range(5)], tier="dram")
+    assert h.capacity_left("dram") >= 2  # maintained after the write
+
+
+def test_eviction_waterfall_io_matches_simulated_ledgers():
+    """Closed form == router+evictor, tier by tier, hidden rounds included."""
+    h = make_hierarchy((TABLE_I["dram"], 7), (TABLE_I["rdma"], 13),
+                       TABLE_I["ssd"])
+    h.evictor = Evictor(h, "lru", overlap=True)
+    sched = TransferScheduler(h, tier="dram")
+    pool = BufferPool(sched, 4, ROWS)
+    rng = np.random.default_rng(0)
+    pool.add(rng.integers(0, 100, size=(31 * ROWS, 2), dtype=np.int64))
+    pool.flush_all()
+    closed = eviction_waterfall_io(31, 4, h.spec.capacities)
+    for (d, c, hidden), rm in zip(closed, h.tiers):
+        led = rm.ledger
+        assert (led.d_total, led.c_total, led.c_migration_hidden) == \
+            (d, c, hidden)
+    # Pricing identities: without overlap the closed form prices like the
+    # live hierarchy; with overlap it discounts exactly the hidden rounds.
+    assert tiered_latency_cost(closed, h.spec.taus) == pytest.approx(
+        h.latency_cost()
+    )
+    hidden_rtt = sum(
+        hid * lv.tier.rtt for (_, _, hid), lv in zip(closed, h.spec.levels)
+    )
+    assert h.latency_seconds() - h.latency_seconds(
+        overlap_migration=True
+    ) == pytest.approx(hidden_rtt)
+
+
+def test_eviction_waterfall_io_validates():
+    with pytest.raises(ValueError, match="round_pages"):
+        eviction_waterfall_io(8, 0, [4, math.inf])
+    with pytest.raises(ValueError, match="overflow the bottom"):
+        eviction_waterfall_io(9, 2, [4, 4])
+    with pytest.raises(ValueError, match="evictable"):
+        # occupied says the fast tier is empty, so there is nothing to
+        # demote when the very first oversized round arrives.
+        eviction_waterfall_io(12, 8, [4, math.inf])
+
+
+# ---------------------------------------------------------------------------
+# Eviction-aware arbitration
+# ---------------------------------------------------------------------------
+
+
+def test_arbitrate_hierarchy_eviction_softens_capacity():
+    # One item whose footprint (20) overflows the fast tier (8): without
+    # eviction it must sink; with eviction it may target the fast tier and
+    # its modeled cost blends the taus by where the footprint rests.
+    items = [
+        HierarchyItem("a", 2.0, lambda m, t: (100.0 if t else 10.0) / m,
+                      footprint_of=lambda m, t: 20.0),
+    ]
+    _, placement, _ = arbitrate_hierarchy(items, 10.0, [8.0, math.inf])
+    assert placement == [1]
+    alloc, placement, total = arbitrate_hierarchy(
+        items, 10.0, [8.0, math.inf], eviction=True
+    )
+    assert placement == [0]
+    # Blend: 8/20 of the footprint at tier-0 cost, 12/20 at tier-1 cost.
+    expect = (8.0 / 20.0) * (10.0 / 10.0) + (12.0 / 20.0) * (100.0 / 10.0)
+    assert total == pytest.approx(expect)
+    # Evictable occupancy sinks to the backstop instead of blocking.
+    _, placement, _ = arbitrate_hierarchy(
+        items, 10.0, [8.0, math.inf], occupied=[8.0, 0.0], eviction=True
+    )
+    assert placement == [0]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: eviction composes with measured replanning
+# ---------------------------------------------------------------------------
+
+
+def _fields(s):
+    return (s.d_read, s.d_write, s.c_read, s.c_write, s.c_prefetch_hidden,
+            s.c_migration_hidden)
+
+
+def test_eviction_composes_with_measured_replanning():
+    """Per-task checkpoint deltas sum exactly to the run total with a live
+    LRU evictor — no eviction round double-counted across replan events."""
+    sess = Session([("dram", 72), ("rdma", 512), "ssd"], budget=40.0,
+                   eviction="lru")
+    build = make_relation(sess.remote, 32 * ROWS, ROWS, 64, seed=41)
+    probe = make_relation(sess.remote, 64 * ROWS, ROWS, 64, seed=42)
+    sort_ids = make_key_pages(sess.remote, 80, ROWS, seed=43)
+    agg_rel = make_relation(sess.remote, 48 * ROWS, ROWS, 96, seed=44)
+    tasks = [
+        sess.task("ehj", WorkloadStats(size_r=32, size_s=64, out=8,
+                                       partitions=8, sigma=0.5),
+                  inputs={"build": build, "probe": probe}),
+        sess.task("ems", WorkloadStats(size_r=80, k_cap=8),
+                  inputs={"page_ids": sort_ids}, rows_per_page=ROWS),
+        sess.task("eagg", WorkloadStats(size_r=48, out=12, partitions=8,
+                                        sigma=0.5), inputs={"rel": agg_rel}),
+    ]
+    res = sess.run(tasks, replan="measured")
+    # The run replanned and the evictor actually worked.
+    assert res.replan_events, "expected at least one replan event"
+    assert sess.evictor.demote_batches > 0, "expected live evictions"
+    assert any(tr.eviction_rounds > 0 for tr in res.per_task)
+    # Checkpoint/restore consistency: per-task deltas (including hidden
+    # migration rounds) sum exactly to the run total, field by field, on
+    # every tier.
+    for name in sess.hierarchy.names:
+        per_task_sum = tuple(
+            sum(_fields(tr.delta.tier(name))[k] for tr in res.per_task)
+            for k in range(6)
+        )
+        assert per_task_sum == _fields(res.total.tier(name)), name
+    # Eviction effort attribution matches the evictor's monotone counters.
+    assert sum(tr.eviction_rounds for tr in res.per_task) == \
+        sess.evictor.demote_batches
+    assert sum(tr.eviction_pages for tr in res.per_task) == \
+        sess.evictor.pages_demoted
+    events_rounds = [e.eviction_rounds for e in res.replan_events]
+    assert events_rounds == sorted(events_rounds)  # cumulative, monotone
+    assert events_rounds[-1] <= sess.evictor.demote_batches
+    # Overlapped pricing is what the session reports.
+    assert res.latency_seconds() == pytest.approx(
+        sess.remote.latency_seconds(overlap_migration=True)
+    )
+
+
+def test_session_eviction_validation():
+    with pytest.raises(ValueError, match="needs a memory hierarchy"):
+        Session(TIER, budget=16.0, eviction="lru")
+    sess = Session([("dram", 16), "ssd"], budget=16.0)
+    with pytest.raises(ValueError, match="no evictor"):
+        sess.task("ems", WorkloadStats(size_r=8), eviction="lru")
+    sess_ev = Session([("dram", 16), "ssd"], budget=16.0, eviction="lru")
+    with pytest.raises(ValueError, match="unknown eviction policy"):
+        sess_ev.task("ems", WorkloadStats(size_r=8), eviction="mru")
+    task = sess_ev.task("ems", WorkloadStats(size_r=8), eviction="dead")
+    # The name is resolved once to a live policy instance, so stateful
+    # policies keep their hints across runs of the task.
+    assert task.eviction.name == "dead"
+    assert sess_ev.eviction_name == "lru+overlap"
+    assert Session([("dram", 16), "ssd"], budget=16.0, eviction="clock",
+                   overlap_migration=False).eviction_name == "clock"
+
+
+def test_explain_surfaces_eviction_plan():
+    sess = Session([("dram", 24), ("rdma", 256), "ssd"], budget=24.0,
+                   eviction="lru")
+    tasks = [
+        sess.task("ems", WorkloadStats(size_r=60, k_cap=8), rows_per_page=ROWS),
+        sess.task("eagg", WorkloadStats(size_r=24, out=6, partitions=8,
+                                        sigma=0.5), eviction="dead"),
+    ]
+    report = sess.explain(tasks)
+    assert report.eviction == "lru+overlap"
+    assert "eviction=lru+overlap" in str(report)
+    by_op = {t.op: t for t in report.tasks}
+    assert by_op["ems"].eviction == "lru"
+    assert by_op["eagg"].eviction == "dead"
+    # Any task placed where its footprint overflows free capacity reports
+    # the demotions the evictor will have to run.
+    for t in report.tasks:
+        if not math.isinf(t.capacity) and t.footprint > t.capacity:
+            assert t.eviction_pages > 0 and t.eviction_rounds > 0
+    assert report.total_eviction_rounds == sum(
+        t.eviction_rounds for t in report.tasks
+    )
+    assert report.to_dict()["eviction"] == "lru+overlap"

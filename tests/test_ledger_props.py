@@ -88,6 +88,53 @@ def test_prefetch_latency_never_exceeds_unhidden(ops):
     )
 
 
+@settings(max_examples=60, deadline=None)
+@given(ops=op_streams, hide=st.integers(min_value=0, max_value=10))
+def test_migration_hidden_carried_by_reset_merge_delta(ops, hide):
+    """Regression (ISSUE 5): ``c_migration_hidden`` must ride every ledger
+    operation — ``reset`` zeroes it, ``merge``/``delta``/``snapshot`` carry
+    it — and overlapped pricing discounts exactly the hidden rounds' RTT."""
+    ledger = TransferLedger()
+    _apply(ledger, ops)
+    budget = ledger.c_total - ledger.c_prefetch_hidden
+    ledger.c_migration_hidden = min(hide, max(budget, 0))
+    snap = ledger.snapshot()
+    assert snap.c_migration_hidden == ledger.c_migration_hidden
+
+    # delta: a fresh window starts at zero and accumulates independently.
+    mid = ledger.snapshot()
+    ledger.write(3.0)
+    ledger.c_migration_hidden += 1
+    delta = ledger.delta(mid)
+    assert delta.c_migration_hidden == 1
+    assert ledger.delta(ledger.snapshot()).c_migration_hidden == 0
+
+    # merge: adds the counter like every other field.
+    other = TransferLedger()
+    other.write(2.0)
+    other.c_migration_hidden = 1
+    before = ledger.c_migration_hidden
+    ledger.merge(other)
+    assert ledger.c_migration_hidden == before + 1
+
+    # Overlapped pricing: hidden migration rounds pay no RTT, and both
+    # hiding knobs compose additively.
+    unhidden = ledger.latency_seconds(TIER)
+    assert unhidden - ledger.latency_seconds(
+        TIER, overlap_migration=True
+    ) == pytest.approx(ledger.c_migration_hidden * TIER.rtt)
+    assert unhidden - ledger.latency_seconds(
+        TIER, prefetch=True, overlap_migration=True
+    ) == pytest.approx(
+        (ledger.c_migration_hidden + ledger.c_prefetch_hidden) * TIER.rtt
+    )
+
+    # The regression itself: reset must zero the new counter too.
+    ledger.reset()
+    assert ledger.c_migration_hidden == 0
+    assert ledger.snapshot() == TransferLedger().snapshot()
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     dram_cap=st.integers(min_value=1, max_value=8),
