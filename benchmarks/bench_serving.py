@@ -1,0 +1,306 @@
+"""Multi-tenant serving sweep: cross-query arbitration vs FIFO and even-split.
+
+Offered load x tenant mix on one shared DRAM -> RDMA -> SSD hierarchy
+(Table I constants).  Each sweep point replays the same request trace —
+high-priority *interactive* sorts over RDMA-resident keys interleaved with
+low-priority *batch* pipelines (a large external sort feeding an
+aggregation over SSD-cold inputs) — under the three
+:class:`repro.engine.Server` modes:
+
+  * ``arbitrated`` — the headline: one cross-query arbiter re-splits the
+    joint budget and tier placements on every arrival/finish event,
+    priority-weighted, with preemptive demotion clearing low-priority
+    residency off granted fast tiers;
+  * ``even`` — static 1/slots budget and capacity shares, no
+    re-arbitration (the "reserve a fixed slice per tenant" strawman);
+  * ``fifo`` — one query at a time on the full machine (serial
+    execution, zero interference).
+
+The sweep's structural result: interactive queries' DRAM/RDMA phases hide
+under the batch queries' conserved SSD input scans, so the arbitrated
+server sustains higher throughput than FIFO serialisation, while even
+split starves whichever class is scarce at that point.  The **strict-win
+gate** enforces this at every sweep point: arbitrated throughput must
+strictly exceed both baselines, or this bench raises.
+
+Two more gates ride along:
+
+  * **parity** — a single admitted tenant must reproduce the standalone
+    ``Session.run(replan="measured")`` ledger byte-for-byte and its
+    simulated latency exactly (the server's clock and arbitration add
+    nothing when there is nothing to share);
+  * **preemption demo** — on a DRAM-tight hierarchy, a high-priority
+    arrival must trigger preemptive demotion of the resident batch
+    sort's cold pages (visible ``PreemptionEvent``s) and must not be
+    slower than the same arrival without a priority edge.
+
+Writes ``BENCH_serving.json`` at the repo root — a machine-readable perf
+artifact CI uploads and gates with ``scripts/check_regression.py``
+(`simulated_seconds` leaves are the gated metrics).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from repro.core import TABLE_I
+from repro.engine import QueryRequest, Server, ServerReport, Session, WorkloadStats
+from repro.engine.registry import hierarchy_spec
+from benchmarks.common import Row
+
+ROWS = 8
+BUDGET = 256.0
+SLOTS = 3
+DRAM_CAP = 8192
+RDMA_CAP = 2048
+HSPEC = hierarchy_spec((TABLE_I["dram"], DRAM_CAP), (TABLE_I["rdma"], RDMA_CAP),
+                       TABLE_I["ssd"])
+
+INTERACTIVE_PAGES = 768  # RDMA-hot keys, sorted in DRAM
+BATCH_SORT_PAGES = 1536  # SSD-cold keys
+BATCH_AGG_PAGES = 512    # SSD-cold relation
+INTERACTIVE_PRIORITY = 4.0
+BATCH_PRIORITY = 1.0
+
+# (n_interactive, n_batch) x offered load (inter-arrival seconds).  Every
+# point is contended: batch pipelines span many interactive arrivals.
+MIXES = [(12, 2), (16, 2)]
+LOADS = [0.04, 0.08, 0.15]
+MODES = ["arbitrated", "even", "fifo"]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_serving.json")
+
+
+def _interactive_tasks_of(seed: int, pages: int = INTERACTIVE_PAGES):
+    """A hot sort: keys already resident on RDMA, merged through DRAM."""
+    def tasks_of(sess: Session):
+        from repro.remote.simulator import make_key_pages
+
+        ids = make_key_pages(sess.remote, pages, ROWS, seed=seed,
+                             tier="rdma")
+        return [
+            sess.task("ems", WorkloadStats(size_r=pages, k_cap=8),
+                      inputs={"page_ids": ids}, rows_per_page=ROWS),
+        ]
+    return tasks_of
+
+
+def _batch_tasks_of(seed: int, sort_pages: int = BATCH_SORT_PAGES,
+                    agg_pages: int = BATCH_AGG_PAGES):
+    """A cold pipeline: SSD-resident sort feeding an aggregation."""
+    def tasks_of(sess: Session):
+        from repro.remote import make_relation
+        from repro.remote.simulator import make_key_pages
+
+        ids = make_key_pages(sess.remote, sort_pages, ROWS, seed=seed)
+        rel = make_relation(sess.remote, agg_pages * ROWS, ROWS, 128,
+                            seed=seed + 1)
+        return [
+            sess.task("ems", WorkloadStats(size_r=sort_pages, k_cap=8),
+                      inputs={"page_ids": ids}, rows_per_page=ROWS),
+            sess.task("eagg", WorkloadStats(size_r=agg_pages, out=96,
+                                            partitions=8, sigma=0.5),
+                      inputs={"rel": rel}),
+        ]
+    return tasks_of
+
+
+def _trace(n_interactive: int, n_batch: int, interarrival: float
+           ) -> List[QueryRequest]:
+    """Deterministic arrival trace: batch queries spread through the mix."""
+    reqs: List[QueryRequest] = []
+    total = n_interactive + n_batch
+    batch_every = max(total // max(n_batch, 1), 1)
+    remaining_batch = n_batch
+    t = 0.0
+    for rid in range(total):
+        if rid % batch_every == 0 and remaining_batch > 0:
+            reqs.append(QueryRequest(
+                rid=rid, tasks_of=_batch_tasks_of(1000 + 17 * rid),
+                arrival=t, priority=BATCH_PRIORITY, label="batch"))
+            remaining_batch -= 1
+        else:
+            reqs.append(QueryRequest(
+                rid=rid, tasks_of=_interactive_tasks_of(1000 + 17 * rid),
+                arrival=t, priority=INTERACTIVE_PRIORITY, label="interactive"))
+        t += interarrival
+    return reqs
+
+
+def _mode_summary(rep: ServerReport) -> Dict[str, object]:
+    interactive = sorted(q.latency for q in rep.queries
+                         if q.label == "interactive")
+    batch = sorted(q.latency for q in rep.queries if q.label == "batch")
+    return {
+        "throughput_qps": round(rep.throughput, 6),
+        "preempted_pages": sum(e.pages for e in rep.preemptions),
+        "rearbitrations": rep.rearbitrations,
+        "simulated_seconds": {
+            "makespan": rep.makespan,
+            "p50_latency": rep.p50_latency,
+            "p99_latency": rep.p99_latency,
+            "interactive_p50": interactive[len(interactive) // 2],
+            "batch_max": batch[-1],
+        },
+    }
+
+
+def _check_accounting(rep: ServerReport) -> None:
+    for name in HSPEC.names:
+        if rep.tenant_total.tier(name) != rep.total.tier(name):
+            raise RuntimeError(
+                f"per-tenant ledgers do not sum to the hierarchy total on "
+                f"{name} (mode={rep.mode})")
+
+
+def _run_parity() -> Dict[str, object]:
+    """Single admitted tenant == standalone Session, byte for byte."""
+    tasks_of = _batch_tasks_of(4242)
+    sess = Session(HSPEC, budget=BUDGET, eviction="lru")
+    res = sess.run(tasks_of(sess), replan="measured")
+    solo = res.latency_seconds()
+
+    srv = Server(HSPEC, budget=BUDGET, slots=SLOTS)
+    srv.submit(QueryRequest(rid=0, tasks_of=tasks_of, label="solo"))
+    rep = srv.run()
+    served = rep.query(0).latency
+    for name in HSPEC.names:
+        if res.total.tier(name) != rep.query(0).ledger.tier(name):
+            raise RuntimeError(
+                f"serving parity: ledger mismatch on {name}:\n"
+                f"  standalone: {res.total.tier(name)}\n"
+                f"  served:     {rep.query(0).ledger.tier(name)}")
+    if abs(served - solo) > 1e-9 * max(solo, 1.0):
+        raise RuntimeError(
+            f"serving parity: latency mismatch: standalone {solo!r} "
+            f"vs served {served!r}")
+    _check_accounting(rep)
+    return {
+        "ledger_equal": True,
+        "simulated_seconds": {"standalone": solo, "served": served},
+    }
+
+
+def _run_preemption_demo() -> Dict[str, object]:
+    """Priority edge -> visible preemptive demotion on a tight hierarchy."""
+    tight = hierarchy_spec((TABLE_I["dram"], 2048), (TABLE_I["rdma"], 1024),
+                           TABLE_I["ssd"])
+
+    def serve(priority: float) -> ServerReport:
+        srv = Server(tight, budget=BUDGET, mode="arbitrated", slots=2)
+        srv.submit([
+            QueryRequest(rid=0, tasks_of=_batch_tasks_of(7000),
+                         arrival=0.0, priority=BATCH_PRIORITY, label="batch"),
+            QueryRequest(rid=1, tasks_of=_interactive_tasks_of(7017, 256),
+                         arrival=0.3, priority=priority, label="interactive"),
+        ])
+        rep = srv.run()
+        _check_accounting(rep)
+        return rep
+
+    with_prio = serve(8.0)
+    without = serve(BATCH_PRIORITY)
+    preempted = sum(e.pages for e in with_prio.preemptions)
+    lat_with = with_prio.query(1).latency
+    lat_without = without.query(1).latency
+    if preempted <= 0:
+        raise RuntimeError("preemption demo: the priority arrival did not "
+                           "trigger preemptive demotion")
+    if sum(e.pages for e in without.preemptions) != 0:
+        raise RuntimeError("preemption demo: equal priorities must not preempt")
+    if lat_with > lat_without:
+        raise RuntimeError(
+            f"preemption demo: priority made the interactive query slower "
+            f"({lat_with!r} vs {lat_without!r})")
+    return {
+        "preempted_pages": preempted,
+        "events": [
+            {"time": e.time, "rid": e.rid, "victim_rid": e.victim_rid,
+             "tier": e.tier, "pages": e.pages}
+            for e in with_prio.preemptions
+        ],
+        "simulated_seconds": {
+            "interactive_with_priority": lat_with,
+            "interactive_without_priority": lat_without,
+        },
+    }
+
+
+def run() -> List[Row]:
+    rows_out: List[Row] = []
+    report = {
+        "schema": 1,
+        "hierarchy": {"dram": DRAM_CAP, "rdma": RDMA_CAP, "ssd": "inf"},
+        "budget": BUDGET,
+        "slots": SLOTS,
+        "workloads": {
+            "interactive": {"op": "ems", "pages": INTERACTIVE_PAGES,
+                            "resident": "rdma",
+                            "priority": INTERACTIVE_PRIORITY},
+            "batch": {"ops": ["ems", "eagg"],
+                      "pages": [BATCH_SORT_PAGES, BATCH_AGG_PAGES],
+                      "resident": "ssd", "priority": BATCH_PRIORITY},
+        },
+        "sweep": [],
+    }
+
+    for n_interactive, n_batch in MIXES:
+        for interarrival in LOADS:
+            t0 = time.perf_counter()
+            reps: Dict[str, ServerReport] = {}
+            for mode in MODES:
+                srv = Server(HSPEC, budget=BUDGET, mode=mode, slots=SLOTS)
+                srv.submit(_trace(n_interactive, n_batch, interarrival))
+                reps[mode] = srv.run()
+                _check_accounting(reps[mode])
+            us = (time.perf_counter() - t0) * 1e6
+
+            arb = reps["arbitrated"]
+            win = (arb.throughput > reps["even"].throughput
+                   and arb.throughput > reps["fifo"].throughput)
+            tag = f"mix{n_interactive}i{n_batch}b_ia{interarrival:g}"
+            if not win:
+                raise RuntimeError(
+                    f"strict-win gate failed at {tag}: arbitrated "
+                    f"{arb.throughput:.3f} q/s vs even "
+                    f"{reps['even'].throughput:.3f} / fifo "
+                    f"{reps['fifo'].throughput:.3f}")
+            speedup_fifo = arb.throughput / reps["fifo"].throughput
+            rows_out.append((f"serving_{tag}_arb_throughput_qps", us,
+                             round(arb.throughput, 4)))
+            rows_out.append((f"serving_{tag}_speedup_vs_fifo", 0.0,
+                             round(speedup_fifo, 4)))
+            report["sweep"].append({
+                "name": tag,
+                "n_interactive": n_interactive,
+                "n_batch": n_batch,
+                "interarrival": interarrival,
+                "modes": {m: _mode_summary(reps[m]) for m in MODES},
+                "strict_win": win,
+            })
+
+    t0 = time.perf_counter()
+    report["parity"] = _run_parity()
+    rows_out.append(("serving_single_tenant_parity",
+                     (time.perf_counter() - t0) * 1e6, 1.0))
+
+    t0 = time.perf_counter()
+    report["preemption_demo"] = _run_preemption_demo()
+    rows_out.append(("serving_preemption_demo_pages",
+                     (time.perf_counter() - t0) * 1e6,
+                     float(report["preemption_demo"]["preempted_pages"])))
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows_out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

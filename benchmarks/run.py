@@ -18,8 +18,9 @@ import traceback
 from benchmarks import (bench_bnlj, bench_cost_model, bench_eagg, bench_ehj,
                         bench_ems, bench_endtoend, bench_kernel_policy,
                         bench_pipeline, bench_prefetch, bench_registry,
-                        bench_sensitivity, bench_session, bench_table3,
-                        bench_table4, bench_table6, bench_tiering)
+                        bench_sensitivity, bench_serving, bench_session,
+                        bench_table3, bench_table4, bench_table6,
+                        bench_tiering)
 from benchmarks.common import emit
 
 MODULES = [
@@ -38,13 +39,15 @@ MODULES = [
     ("pipeline_arbiter", bench_pipeline),
     ("tiering", bench_tiering),
     ("session_replan", bench_session),
+    ("serving", bench_serving),
     ("tpu_policies", bench_kernel_policy),
 ]
 
 # The CI `bench-smoke` subset: the registry/operator/arbiter surfaces this
 # repo actively grows, fast enough for every push (~tens of seconds).
 QUICK = {"engine_registry", "table1_eq1", "table3", "table4", "table6",
-         "fig6a_ehj", "eagg", "pipeline_arbiter", "tiering", "session_replan"}
+         "fig6a_ehj", "eagg", "pipeline_arbiter", "tiering", "session_replan",
+         "serving"}
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                          "BENCH_run.json")

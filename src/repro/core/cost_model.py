@@ -173,6 +173,19 @@ class LedgerSnapshot:
     def c_total(self) -> int:
         return self.c_read + self.c_write
 
+    def __add__(self, other: "LedgerSnapshot") -> "LedgerSnapshot":
+        """Field-wise sum: accumulate per-region deltas into one snapshot."""
+        if not isinstance(other, LedgerSnapshot):
+            return NotImplemented
+        return LedgerSnapshot(
+            d_read=self.d_read + other.d_read,
+            d_write=self.d_write + other.d_write,
+            c_read=self.c_read + other.c_read,
+            c_write=self.c_write + other.c_write,
+            c_prefetch_hidden=self.c_prefetch_hidden + other.c_prefetch_hidden,
+            c_migration_hidden=self.c_migration_hidden + other.c_migration_hidden,
+        )
+
     def latency_cost(self, tau: float) -> float:
         return latency_cost(self.d_total, self.c_total, tau)
 
@@ -404,6 +417,30 @@ class HierarchySnapshot:
     @property
     def total(self) -> LedgerSnapshot:
         return _sum_snapshots(tuple(s for _, s in self.tiers))
+
+    def __add__(self, other: "HierarchySnapshot") -> "HierarchySnapshot":
+        """Tier-wise sum of two snapshots of the *same* hierarchy.
+
+        The per-tenant ledger accounting of the multi-tenant server
+        accumulates task deltas this way; tier names must match pairwise.
+        """
+        if not isinstance(other, HierarchySnapshot):
+            return NotImplemented
+        names = [n for n, _ in self.tiers]
+        other_names = [n for n, _ in other.tiers]
+        if names != other_names:
+            raise ValueError(
+                f"cannot add snapshots of different hierarchies: "
+                f"{names} vs {other_names}"
+            )
+        return HierarchySnapshot(tiers=tuple(
+            (n, a + b) for (n, a), (_, b) in zip(self.tiers, other.tiers)
+        ))
+
+    @classmethod
+    def zero(cls, spec: "HierarchySpec") -> "HierarchySnapshot":
+        """An all-zero snapshot shaped like ``spec`` (accumulator seed)."""
+        return cls(tiers=tuple((n, LedgerSnapshot()) for n in spec.names))
 
     # Aggregate pass-throughs (keep operator reporting tier-agnostic).
     @property

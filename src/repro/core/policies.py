@@ -14,6 +14,7 @@ overheads instead of network RTT.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import ClassVar, List, Sequence, Tuple
 
@@ -293,11 +294,14 @@ def ems_h(k: float, a: float) -> float:
     return (2.0 + (math.sqrt(k) + 1.0) ** 2 / a) / math.log2(k)
 
 
+@functools.lru_cache(maxsize=65536)
 def ems_kopt(a: float, k_max: int = 1 << 20) -> int:
     """Optimal integer fan-in k*(alpha) — reproduces Table IV.
 
     As alpha -> 0 (RTT-dominated) k* = 4; as alpha grows, k* grows toward the
-    maximum feasible fan-in.
+    maximum feasible fan-in.  Memoized: the arbiter's marginal-cost descent
+    re-evaluates the EMS plan at every candidate budget, and alpha = m/tau
+    takes only ~budget x tiers distinct values per sweep.
     """
     if a <= 0.0:
         return 4

@@ -88,6 +88,13 @@ from repro.engine.pipeline import (
     plan_pipeline,
     run_pipeline,
 )
+from repro.engine.server import (
+    PreemptionEvent,
+    QueryReport,
+    QueryRequest,
+    Server,
+    ServerReport,
+)
 from repro.engine.session import (
     OperatorTask,
     PlanReport,
@@ -100,6 +107,11 @@ from repro.engine.session import (
 )
 
 __all__ = [
+    "Server",
+    "QueryRequest",
+    "QueryReport",
+    "ServerReport",
+    "PreemptionEvent",
     "Session",
     "OperatorTask",
     "TaskOutput",

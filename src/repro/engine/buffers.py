@@ -121,6 +121,11 @@ class PageCursor:
         self.pos = 0
         self.refills = 0
         self._buf: Optional[np.ndarray] = None
+        # Scan resistance: declare the unread window so an attached evictor
+        # never demotes pages this cursor is about to read (the EMS merge
+        # pattern — run pages rank LRU-coldest exactly when they are next).
+        self._scan_key = f"cursor-{id(self)}"
+        self.sched.scan_hint(self._scan_key, self.page_ids)
 
     # -- buffered streaming (merge consumers) --------------------------------
 
@@ -191,4 +196,10 @@ class PageCursor:
         pages = self.sched.read(ids, prefetch=self.prefetch and self.refills > 0)
         self.pos += len(ids)
         self.refills += 1
+        # Shrink the protected window to what is still unread; exhausting
+        # the stream lifts the protection entirely.
+        if self.pos >= len(self.page_ids):
+            self.sched.scan_done(self._scan_key)
+        else:
+            self.sched.scan_hint(self._scan_key, self.page_ids[self.pos:])
         return pages

@@ -36,7 +36,17 @@ cold pages exist above.  The closed-form counterpart is
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable
+from typing import (
+    Dict,
+    FrozenSet,
+    Hashable,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Union,
+    runtime_checkable,
+)
 
 
 @runtime_checkable
@@ -236,13 +246,65 @@ class Evictor:
         self.headroom = float(headroom)
         self.pages_demoted = 0
         self.demote_batches = 0
+        self.scan_spared = 0
+        # Active sequential-scan windows, keyed per cursor: pages a consumer
+        # is about to read.  Victim selection skips them (scan resistance).
+        self._scan_windows: Dict[Hashable, FrozenSet[int]] = {}
 
     def counters(self) -> Dict[str, int]:
         """Measured eviction effort so far (monotone)."""
         return {
             "pages_demoted": self.pages_demoted,
             "demote_batches": self.demote_batches,
+            "scan_spared": self.scan_spared,
         }
+
+    # -- scan resistance -----------------------------------------------------
+
+    def scan_hint(self, key: Hashable, page_ids: Sequence[int]) -> None:
+        """Declare the pages a sequential scan (``key``) has yet to read.
+
+        Pure LRU demotes exactly the run pages an EMS merge is about to read
+        next — their last access was the flush that wrote them, so they rank
+        coldest right when they are hottest.  While a window is active its
+        pages are skipped by victim selection; the consumer re-hints with the
+        shrinking remainder after each read round and an empty window (or
+        :meth:`scan_done`) lifts the protection.
+        """
+        ids = frozenset(int(i) for i in page_ids)
+        if ids:
+            self._scan_windows[key] = ids
+        else:
+            self._scan_windows.pop(key, None)
+
+    def scan_done(self, key: Hashable) -> None:
+        """Drop a scan window (missing keys are ignored)."""
+        self._scan_windows.pop(key, None)
+
+    def scan_pages(self) -> FrozenSet[int]:
+        """Union of all active scan windows (the currently unevictable set)."""
+        if not self._scan_windows:
+            return frozenset()
+        return frozenset().union(*self._scan_windows.values())
+
+    def _select_victims(self, tier_index: int, deficit: int) -> List[int]:
+        """Policy victims minus active scan windows, still ``deficit`` deep.
+
+        Asks the policy for enough extra candidates to cover the protected
+        pages it may rank first, so sparing a scan never shrinks the demotion
+        batch while colder unprotected pages exist.
+        """
+        protected = self.scan_pages()
+        if not protected:
+            return self.policy.victims(self.hierarchy, tier_index, deficit)
+        on_tier = self.hierarchy.pages_on(tier_index)
+        n_protected = sum(1 for i in on_tier if i in protected)
+        ranked = self.policy.victims(
+            self.hierarchy, tier_index, deficit + n_protected
+        )
+        victims = [i for i in ranked if i not in protected][:deficit]
+        self.scan_spared += sum(1 for i in ranked[:deficit] if i in protected)
+        return victims
 
     def make_room(self, tier_index: int, need: float) -> None:
         """Demote cold victims until ``tier_index`` has ``need`` free pages.
@@ -258,7 +320,7 @@ class Evictor:
         if math.isinf(free) or free >= need:
             return
         deficit = int(math.ceil(need - free))
-        victims = self.policy.victims(h, tier_index, deficit)
+        victims = self._select_victims(tier_index, deficit)
         if not victims:
             return
         self.make_room(tier_index + 1, len(victims))

@@ -171,6 +171,24 @@ class TransferScheduler:
         if evictor is not None and len(page_ids):
             evictor.stream_flushed(list(page_ids))
 
+    def scan_hint(self, key, page_ids: Sequence[int]) -> None:
+        """Hint: a sequential scan ``key`` has ``page_ids`` left to read.
+
+        Forwarded to the hierarchy's attached evictor so victim selection
+        spares pages an active scan is about to read (scan resistance —
+        pure LRU would demote exactly the merge-run pages whose last access
+        was the flush that wrote them).  A no-op without an evictor.
+        """
+        evictor = getattr(self.remote, "evictor", None)
+        if evictor is not None:
+            evictor.scan_hint(key, page_ids)
+
+    def scan_done(self, key) -> None:
+        """Drop a scan window previously declared via :meth:`scan_hint`."""
+        evictor = getattr(self.remote, "evictor", None)
+        if evictor is not None:
+            evictor.scan_done(key)
+
     def write(
         self,
         pages: Sequence[np.ndarray],

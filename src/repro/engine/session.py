@@ -338,8 +338,16 @@ class Session:
             )
             self.remote.evictor = self.evictor
             self.overlap_migration = bool(overlap_migration)
+        elif getattr(self.remote, "evictor", None) is not None:
+            # A live hierarchy handed in with an evictor already attached
+            # (e.g. by a Server sharing one hierarchy across tenants) keeps
+            # its eviction semantics: adopt it instead of silently planning
+            # without eviction-aware capacities.
+            self.evictor = self.remote.evictor
+            self.overlap_migration = bool(self.evictor.overlap)
         self._task_seq = 0
         self._run_seq = 0
+        self._exec_seq = 0
 
     @staticmethod
     def _materialize(target: Any):
@@ -541,11 +549,85 @@ class Session:
 
     # -- execution -----------------------------------------------------------
 
+    def exec_task(
+        self,
+        task: OperatorTask,
+        ob: Any,
+        *,
+        outputs: Optional[Dict[int, Any]] = None,
+        stats: Optional[WorkloadStats] = None,
+        label: Optional[str] = None,
+        replanned: bool = False,
+    ) -> TaskRun:
+        """Execute one planned task against the session's shared ledger.
+
+        ``ob`` is the task's :class:`~repro.engine.pipeline.OperatorBudget`;
+        ``outputs`` maps ``id(task)`` to resolved output pages — it resolves
+        this task's :class:`TaskOutput` inputs and receives its own output.
+        ``stats`` overrides the stats handed to the ``measured_stats`` hook
+        (defaults to ``ob.stats``).  This is the single execution path shared
+        by :meth:`run` and the multi-tenant ``Server``, so both produce
+        identical ledger deltas for the same plan.
+        """
+        spec = get(task.op)
+        if outputs is None:
+            outputs = {}
+        base_stats = stats if stats is not None else ob.stats
+        resolved = {
+            name: outputs[id(value.task)]
+            if isinstance(value, TaskOutput) else value
+            for name, value in task.inputs.items()
+        }
+        args = spec.bind_inputs(resolved)
+        kwargs = dict(task.options)
+        if self.is_hierarchy and ob.placement is not None:
+            kwargs.setdefault("tier", ob.placement)
+        if label is None:
+            self._exec_seq += 1
+            label = f"session-exec{self._exec_seq}"
+        sched = self.scheduler
+        sched.checkpoint(label)
+        ev_before = self.evictor.counters() if self.evictor else None
+        saved_policy = None
+        if self.evictor is not None and task.eviction is not None:
+            saved_policy = self.evictor.policy
+            self.evictor.policy = task.eviction
+        try:
+            result = spec.run(self.remote, *args, ob.plan, **kwargs)
+            delta = sched.since(label)
+        finally:
+            sched.drop_checkpoint(label)
+            if saved_policy is not None:
+                self.evictor.policy = saved_policy
+        ev_pages = ev_rounds = 0
+        if ev_before is not None:
+            after = self.evictor.counters()
+            ev_pages = after["pages_demoted"] - ev_before["pages_demoted"]
+            ev_rounds = after["demote_batches"] - ev_before["demote_batches"]
+        if spec.output_of is not None:
+            outputs[id(task)] = spec.output_of(result)
+        measured = (spec.measured_stats(base_stats, result)
+                    if spec.measured_stats else base_stats)
+        return TaskRun(
+            task=task, op=task.op, label=task.label,
+            m_pages=ob.m_pages, placement=ob.placement,
+            stats=ob.stats, measured=measured, result=result,
+            delta=delta, replanned=replanned,
+            eviction_pages=ev_pages, eviction_rounds=ev_rounds,
+        )
+
+    @staticmethod
+    def estimate_error(planned: WorkloadStats, measured: WorkloadStats) -> float:
+        """Relative cardinality error of a plan's estimate vs measurement."""
+        est, got = float(planned.out), float(measured.out)
+        return abs(got - est) / max(abs(est), 1.0)
+
     def run(
         self,
         tasks: Sequence[OperatorTask],
         replan: Optional[str] = None,
         plan=None,
+        replan_threshold: Optional[float] = None,
     ) -> SessionRunResult:
         """Execute ``tasks`` in order against the session's shared ledger.
 
@@ -555,13 +637,28 @@ class Session:
         the downstream stats (both the finished operator's ``out`` and any
         task input bound to its ``.output``), and the remaining operators'
         budgets and tier placements are re-planned against the measured
-        remaining capacity.  ``plan`` optionally supplies a precomputed
-        :class:`~repro.engine.pipeline.PipelinePlan`.
+        remaining capacity.  ``replan_threshold`` (only with
+        ``replan="measured"``) skips the re-arbitration while the finished
+        operator's relative cardinality error ``|measured - estimated| /
+        max(estimated, 1)`` stays at or below the threshold — measured stats
+        still propagate downstream, but an accurately-estimated pipeline
+        records zero :class:`ReplanEvent`\\ s.  ``None`` keeps the legacy
+        behaviour of re-arbitrating after every task.  ``plan`` optionally
+        supplies a precomputed :class:`~repro.engine.pipeline.PipelinePlan`.
         """
         if replan not in (None, "measured"):
             raise ValueError(
                 f"replan must be None or 'measured', got {replan!r}"
             )
+        if replan_threshold is not None:
+            if replan != "measured":
+                raise ValueError(
+                    "replan_threshold requires replan='measured'"
+                )
+            if replan_threshold < 0:
+                raise ValueError(
+                    f"replan_threshold must be >= 0, got {replan_threshold}"
+                )
         tasks = self._check_tasks(tasks)
         pplan = plan if plan is not None else self.plan(tasks)
         self._check_plan_matches(pplan, tasks)
@@ -579,51 +676,21 @@ class Session:
         try:
             for i, task in enumerate(tasks):
                 ob = budgets[i]
-                spec = get(task.op)
-                resolved = {
-                    name: outputs[id(value.task)]
-                    if isinstance(value, TaskOutput) else value
-                    for name, value in task.inputs.items()
-                }
-                args = spec.bind_inputs(resolved)
-                kwargs = dict(task.options)
-                if self.is_hierarchy and ob.placement is not None:
-                    kwargs.setdefault("tier", ob.placement)
-                task_label = f"{run_label}/{i}"
-                sched.checkpoint(task_label)
-                ev_before = (self.evictor.counters() if self.evictor
-                             else None)
-                saved_policy = None
-                if self.evictor is not None and task.eviction is not None:
-                    saved_policy = self.evictor.policy
-                    self.evictor.policy = task.eviction
-                try:
-                    result = spec.run(self.remote, *args, ob.plan, **kwargs)
-                    delta = sched.since(task_label)
-                finally:
-                    sched.drop_checkpoint(task_label)
-                    if saved_policy is not None:
-                        self.evictor.policy = saved_policy
-                ev_pages = ev_rounds = 0
-                if ev_before is not None:
-                    after = self.evictor.counters()
-                    ev_pages = after["pages_demoted"] - ev_before["pages_demoted"]
-                    ev_rounds = after["demote_batches"] - ev_before["demote_batches"]
-                if spec.output_of is not None:
-                    outputs[id(task)] = spec.output_of(result)
-                measured = (spec.measured_stats(cur_stats[i], result)
-                            if spec.measured_stats else cur_stats[i])
+                tr = self.exec_task(
+                    task, ob, outputs=outputs, stats=cur_stats[i],
+                    label=f"{run_label}/{i}", replanned=replanned[i],
+                )
+                measured = tr.measured
                 cur_stats[i] = measured
-                per_task.append(TaskRun(
-                    task=task, op=task.op, label=task.label,
-                    m_pages=ob.m_pages, placement=ob.placement,
-                    stats=ob.stats, measured=measured, result=result,
-                    delta=delta, replanned=replanned[i],
-                    eviction_pages=ev_pages, eviction_rounds=ev_rounds,
-                ))
+                per_task.append(tr)
                 if replan == "measured" and i + 1 < len(tasks):
+                    self.propagate_measured(tasks, cur_stats, outputs, i)
+                    if (replan_threshold is not None
+                            and self.estimate_error(ob.stats, measured)
+                            <= replan_threshold):
+                        continue
                     event = self._replan_remaining(
-                        tasks, budgets, cur_stats, outputs, i, measured
+                        tasks, budgets, cur_stats, i, measured
                     )
                     if event is not None:
                         events.append(event)
@@ -640,25 +707,20 @@ class Session:
 
     # -- mid-pipeline re-arbitration ------------------------------------------
 
-    def _replan_remaining(
-        self,
+    @staticmethod
+    def propagate_measured(
         tasks: Sequence[OperatorTask],
-        budgets: List[Any],
         cur_stats: List[WorkloadStats],
         outputs: Mapping[int, Any],
         done: int,
-        measured: WorkloadStats,
-    ) -> Optional[ReplanEvent]:
-        """Feed task ``done``'s measured output back and re-split the rest.
+    ) -> None:
+        """Feed task ``done``'s measured output sizes into downstream stats.
 
-        Updates ``cur_stats`` for every remaining task whose input binds to a
-        finished task's output (the operator's ``input_stats`` mapping names
-        the stats field the input sizes), then re-arbitrates the remaining
-        budget — on a hierarchy, against the *measured* per-tier residency
-        (``occupied``), so placements react to capacity actually consumed.
-        Returns a :class:`ReplanEvent` when the split changed, ``None`` when
-        the re-arbitration confirmed the current plan (or was infeasible, in
-        which case the current plan is kept).
+        Updates ``cur_stats`` in place for every later task whose input binds
+        to the finished task's output (the operator's ``input_stats`` mapping
+        names the stats field the input sizes).  Pure stats bookkeeping — no
+        arbitration — so callers can propagate measurements even when a
+        replan threshold suppresses the re-split itself.
         """
         finished_task = tasks[done]
         for j in range(done + 1, len(tasks)):
@@ -675,6 +737,24 @@ class Session:
                     cur_stats[j], **{field: float(len(resolved))}
                 )
 
+    def _replan_remaining(
+        self,
+        tasks: Sequence[OperatorTask],
+        budgets: List[Any],
+        cur_stats: List[WorkloadStats],
+        done: int,
+        measured: WorkloadStats,
+    ) -> Optional[ReplanEvent]:
+        """Re-split the remaining budget after task ``done`` finished.
+
+        Re-arbitrates the remaining budget over tasks ``done+1..`` at their
+        current (measured-updated) stats — on a hierarchy, against the
+        *measured* per-tier residency (``occupied``), so placements react to
+        capacity actually consumed.  Returns a :class:`ReplanEvent` when the
+        split changed, ``None`` when the re-arbitration confirmed the current
+        plan (or was infeasible, in which case the current plan is kept).
+        """
+        finished_task = tasks[done]
         remaining = list(range(done + 1, len(tasks)))
         budget_rem = self.budget - sum(budgets[k].m_pages
                                        for k in range(done + 1))
@@ -731,21 +811,46 @@ class Session:
         tasks: Sequence[OperatorTask],
         stats: Sequence[WorkloadStats],
         budget: float,
+        weights: Optional[Sequence[float]] = None,
+        pinned: Optional[Sequence[float]] = None,
     ) -> List[Any]:
-        """Arbitrate ``budget`` over the remaining tasks with updated stats."""
+        """Arbitrate ``budget`` over the remaining tasks with updated stats.
+
+        ``weights`` (one per task, default all 1.0) scale each task's modeled
+        latency inside the arbiter's marginal-cost descent — the multi-tenant
+        ``Server`` passes per-tenant priorities here so high-priority queries
+        win the contested budget quanta and fast-tier placements.  Reported
+        ``modeled_latency`` stays unweighted.
+
+        ``pinned`` (per-tier page counts, hierarchy targets only) marks
+        residency that must NOT be treated as evictable: those pages are
+        subtracted from both the tier capacities and the soft ``occupied``
+        residency before arbitration.  A single query's own cold pages are
+        legitimately evictable (the standalone semantics), but another
+        in-flight query's pages are about to be read again — planning spill
+        on top of them causes demotion thrash, so the ``Server`` pins every
+        admitted tenant's residency whenever two or more queries share the
+        hierarchy.
+        """
         from repro.engine.pipeline import OperatorBudget
 
         policy = self.policy
+        if weights is None:
+            weights = [1.0] * len(tasks)
+        if len(weights) != len(tasks):
+            raise ValueError(
+                f"{len(weights)} weights for {len(tasks)} tasks"
+            )
         if self.hierarchy is None:
             tau = self.tier.tau_pages
             items = [
                 ArbiterItem(
                     name=t.op, min_pages=get(t.op).min_pages,
-                    latency_of=lambda m, s=get(t.op), st=st: s.model(
+                    latency_of=lambda m, s=get(t.op), st=st, w=w: w * s.model(
                         st, tau, m, policy
                     ),
                 )
-                for t, st in zip(tasks, stats)
+                for t, st, w in zip(tasks, stats, weights)
             ]
             alloc, _ = arbitrate(items, budget, step=self.step)
             return [
@@ -761,13 +866,24 @@ class Session:
         occupied = [
             float(self.remote.tier_resident(t)) for t in range(len(hspec))
         ]
+        capacities = list(hspec.capacities)
+        if pinned is not None:
+            if len(pinned) != len(hspec):
+                raise ValueError(
+                    f"{len(pinned)} pinned counts for {len(hspec)} tiers"
+                )
+            occupied = [max(o - p, 0.0) for o, p in zip(occupied, pinned)]
+            capacities = [
+                c if math.isinf(c) else max(c - p, 0.0)
+                for c, p in zip(capacities, pinned)
+            ]
         items = []
-        for t, st in zip(tasks, stats):
+        for t, st, w in zip(tasks, stats, weights):
             spec = get(t.op)
             footprint = spec.footprint or (lambda st_, tau_, m_: 0.0)
             items.append(HierarchyItem(
                 name=t.op, min_pages=spec.min_pages,
-                latency_of=lambda m, ti, s=spec, st=st: s.model(
+                latency_of=lambda m, ti, s=spec, st=st, w=w: w * s.model(
                     st, taus[ti], m, policy
                 ),
                 footprint_of=lambda m, ti, fp=footprint, st=st: fp(
@@ -775,7 +891,7 @@ class Session:
                 ),
             ))
         alloc, placement, _ = arbitrate_hierarchy(
-            items, budget, hspec.capacities, step=self.step, occupied=occupied,
+            items, budget, capacities, step=self.step, occupied=occupied,
             eviction=self.evictor is not None,
         )
         return [

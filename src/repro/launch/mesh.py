@@ -13,8 +13,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # jax 0.4.x has no ``axis_types=`` / ``jax.sharding.AxisType``; Auto is
+    # already the default axis behaviour there.
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, model_parallel: int = None):
@@ -23,5 +24,4 @@ def make_mesh_for(devices: int, model_parallel: int = None):
     while devices % model:
         model //= 2
     data = devices // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"))

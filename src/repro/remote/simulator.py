@@ -205,6 +205,14 @@ class MemoryHierarchy:
         idx = self.spec.index(tier)
         return sorted(i for i, t in self._placement.items() if t == idx)
 
+    def resident_ids(self) -> List[int]:
+        """All resident page ids hierarchy-wide, in allocation order.
+
+        The multi-tenant server diffs this around each task execution to
+        attribute page ownership per tenant.
+        """
+        return sorted(self._placement)
+
     # -- allocation (no accounting) ------------------------------------------
 
     def put_local(
@@ -463,6 +471,18 @@ class Relation:
         return len(self.page_ids)
 
 
+def _seed_pages(remote, pages, tier) -> List[int]:
+    """Route seeding to a tier when asked (hierarchies only)."""
+    if tier is None:
+        return remote.put_local(pages)
+    if not getattr(remote, "is_hierarchy", False):
+        raise ValueError(
+            f"tier={tier!r} seeding needs a MemoryHierarchy target; a single "
+            f"tier has no placement choice"
+        )
+    return remote.put_local(pages, tier=tier)
+
+
 def make_relation(
     remote: RemoteMemory,
     n_rows: int,
@@ -471,12 +491,17 @@ def make_relation(
     payload_width: int = 1,
     seed: int = 0,
     sorted_keys: bool = False,
+    tier: Union[int, str, None] = None,
 ) -> Relation:
     """Materialize a synthetic relation in remote memory (§V-A b workloads).
 
     Keys are drawn uniformly from [0, key_domain); join selectivity between two
     such relations is ~1/key_domain per tuple pair, matching the paper's
     key-domain-controlled selectivity.
+
+    ``tier`` places the relation on a specific hierarchy tier (a *hot* cached
+    table already resident on DRAM/RDMA); the default is the capacity-rich
+    bottom tier, the cold-base-table convention of ``put_local``.
     """
     rng = np.random.default_rng(seed)
     keys = rng.integers(0, key_domain, size=n_rows, dtype=np.int64)
@@ -489,7 +514,7 @@ def make_relation(
     for start in range(0, n_rows, rows_per_page):
         sl = slice(start, min(start + rows_per_page, n_rows))
         pages.append(np.concatenate([keys[sl, None], payload[sl]], axis=1))
-    ids = remote.put_local(pages)
+    ids = _seed_pages(remote, pages, tier)
     return Relation(page_ids=ids, rows_per_page=rows_per_page, total_rows=n_rows)
 
 
@@ -499,6 +524,7 @@ def make_key_pages(
     rows_per_page: int,
     key_domain: int = 1 << 30,
     seed: int = 0,
+    tier: Union[int, str, None] = None,
 ) -> List[int]:
     """Key-only pages (1-D int64) for sort workloads (§V-B b)."""
     rng = np.random.default_rng(seed)
@@ -506,7 +532,7 @@ def make_key_pages(
         rng.integers(0, key_domain, size=rows_per_page, dtype=np.int64)
         for _ in range(n_pages)
     ]
-    return remote.put_local(pages)
+    return _seed_pages(remote, pages, tier)
 
 
 def relation_rows(remote: RemoteMemory, rel: Relation) -> np.ndarray:

@@ -452,3 +452,126 @@ def test_explain_surfaces_eviction_plan():
         t.eviction_rounds for t in report.tasks
     )
     assert report.to_dict()["eviction"] == "lru+overlap"
+
+
+# ---------------------------------------------------------------------------
+# Scan resistance: PageCursor windows are never victimized mid-scan
+# ---------------------------------------------------------------------------
+
+
+def test_scan_hint_spares_cursor_window_from_eviction():
+    from repro.engine.buffers import PageCursor
+
+    h = make_hierarchy((TABLE_I["dram"], 4), (TABLE_I["rdma"], 64),
+                       TABLE_I["ssd"])
+    evictor = Evictor(h, "lru", overlap=True)
+    h.evictor = evictor
+    sched = TransferScheduler(h, tier="dram")
+    # Three scan pages written first (LRU-coldest), one hot page after.
+    scan_ids = h.write_batch([_page(i) for i in range(3)], tier="dram")
+    (hot_id,) = h.write_batch([_page(9)], tier="dram")
+
+    cursor = PageCursor(sched, scan_ids, 2)
+    assert set(evictor.scan_pages()) == set(scan_ids)
+    evictor.make_room(0, 1)
+    # LRU ranks the scan pages first, but the window protects them: the
+    # younger unprotected page is demoted instead, and the sparing counted.
+    assert all(h.tier_of(i) == "dram" for i in scan_ids)
+    assert h.tier_of(hot_id) == "rdma"
+    assert evictor.counters()["scan_spared"] >= 1
+
+    # Draining the cursor lifts the protection window as it goes.
+    cursor.read_all()
+    assert evictor.scan_pages() == frozenset()
+    evictor.make_room(0, 4)
+    assert all(h.tier_of(i) != "dram" for i in scan_ids)
+
+
+def test_ems_merge_scan_window_engages_under_pressure():
+    """The EMS merge's run cursors register windows the evictor spares."""
+    spec = [(TABLE_I["dram"], 24), (TABLE_I["rdma"], 256), TABLE_I["ssd"]]
+    sess = Session(spec, budget=24.0, eviction="lru")
+    ids = make_key_pages(sess.remote, 96, ROWS, seed=3)
+    res = sess.run([
+        sess.task("ems", WorkloadStats(size_r=96, k_cap=8),
+                  inputs={"page_ids": ids}, rows_per_page=ROWS),
+    ])
+    assert res.per_task[0].measured is not None
+    counters = sess.evictor.counters()
+    assert counters["pages_demoted"] > 0
+    assert counters["scan_spared"] > 0
+    # No active scans survive the run: every cursor lifted its window.
+    assert sess.evictor.scan_pages() == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# Serving (two tenants on one hierarchy): ledger deltas stay conserved
+# ---------------------------------------------------------------------------
+
+
+def _served_sort_tasks(pages, seed, tier=None):
+    def tasks_of(sess):
+        ids = make_key_pages(sess.remote, pages, ROWS, seed=seed, tier=tier)
+        return [
+            sess.task("ems", WorkloadStats(size_r=pages, k_cap=8),
+                      inputs={"page_ids": ids}, rows_per_page=ROWS),
+        ]
+    return tasks_of
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    pages_a=st.sampled_from([32, 48, 64]),
+    pages_b=st.sampled_from([24, 40, 56]),
+    stagger_ms=st.integers(min_value=0, max_value=30),
+    prio_b=st.sampled_from([1.0, 3.0]),
+)
+def test_two_tenant_interleave_sums_to_shared_snapshot(
+    pages_a, pages_b, stagger_ms, prio_b
+):
+    from repro.engine import QueryRequest, Server
+
+    spec = [(TABLE_I["dram"], 32), (TABLE_I["rdma"], 256), TABLE_I["ssd"]]
+    srv = Server(spec, budget=48.0, slots=2)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_served_sort_tasks(pages_a, seed=1)),
+        QueryRequest(rid=1, tasks_of=_served_sort_tasks(pages_b, seed=2,
+                                                        tier="rdma"),
+                     arrival=stagger_ms / 1000.0, priority=prio_b),
+    ])
+    rep = srv.run()
+    # Per-tenant ledger deltas sum byte-for-byte, field by field, to the
+    # shared hierarchy totals on every tier — interleaving two queries'
+    # rounds (and any preemption/migration between them) conserves the
+    # ledger exactly.
+    names = [name for name, _ in rep.total.tiers]
+    for name in names:
+        assert rep.tenant_total.tier(name) == rep.total.tier(name), name
+    total = rep.tenant_total.total
+    assert total.d_total == rep.total.total.d_total
+    assert total.c_total == rep.total.total.c_total
+    for q in rep.queries:
+        assert q.finished >= q.admitted >= q.arrival
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    pages=st.sampled_from([24, 48, 72]),
+    budget=st.sampled_from([32.0, 64.0]),
+)
+def test_single_admitted_tenant_reproduces_standalone_session(pages, budget):
+    from repro.engine import QueryRequest, Server
+
+    spec = [(TABLE_I["dram"], 32), (TABLE_I["rdma"], 256), TABLE_I["ssd"]]
+    tasks_of = _served_sort_tasks(pages, seed=7)
+    sess = Session(spec, budget=budget, eviction="lru")
+    res = sess.run(tasks_of(sess), replan="measured")
+
+    srv = Server(spec, budget=budget, slots=2)
+    srv.submit(QueryRequest(rid=0, tasks_of=tasks_of))
+    rep = srv.run()
+    for name, _ in rep.total.tiers:
+        assert res.total.tier(name) == rep.query(0).ledger.tier(name), name
+    assert rep.query(0).latency == pytest.approx(
+        res.latency_seconds(), rel=1e-12
+    )

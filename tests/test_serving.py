@@ -1,0 +1,324 @@
+"""Multi-tenant serving suite: the ``Server`` invariants this PR pins.
+
+  * single-tenant admission reproduces the standalone
+    ``Session.run(replan="measured")`` ledger byte-for-byte and its
+    simulated latency exactly;
+  * per-tenant ledger deltas sum field-by-field to the shared
+    ``HierarchySnapshot`` totals, preemption rounds included;
+  * admission control: ``slots`` bounds concurrency, FIFO-within-priority
+    ordering, queueing when the joint footprint is infeasible, and a
+    ``RuntimeError`` for a request that can never be admitted;
+  * priority: higher-priority arrivals are admitted first and may trigger
+    preemptive demotion of lower-priority residency (never the converse);
+  * mode semantics: ``fifo`` serializes, ``even`` never re-arbitrates.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import TABLE_I
+from repro.engine import (
+    QueryRequest,
+    Server,
+    Session,
+    WorkloadStats,
+)
+from repro.engine.registry import hierarchy_spec
+from repro.remote import make_relation
+from repro.remote.simulator import make_key_pages
+
+ROWS = 8
+HSPEC = hierarchy_spec((TABLE_I["dram"], 48), (TABLE_I["rdma"], 512),
+                       TABLE_I["ssd"])
+BUDGET = 96.0
+
+
+def _sort_tasks_of(pages=96, seed=3, tier=None):
+    def tasks_of(sess):
+        ids = make_key_pages(sess.remote, pages, ROWS, seed=seed, tier=tier)
+        return [
+            sess.task("ems", WorkloadStats(size_r=pages, k_cap=8),
+                      inputs={"page_ids": ids}, rows_per_page=ROWS),
+        ]
+    return tasks_of
+
+
+def _pipeline_tasks_of(seed=11):
+    def tasks_of(sess):
+        ids = make_key_pages(sess.remote, 96, ROWS, seed=seed)
+        build = make_relation(sess.remote, 48 * ROWS, ROWS, 96, seed=seed + 1)
+        probe = make_relation(sess.remote, 96 * ROWS, ROWS, 96, seed=seed + 2)
+        return [
+            sess.task("ems", WorkloadStats(size_r=96, k_cap=8),
+                      inputs={"page_ids": ids}, rows_per_page=ROWS),
+            sess.task("ehj",
+                      WorkloadStats(size_r=48, size_s=96, out=36,
+                                    partitions=8, sigma=0.5),
+                      inputs={"build": build, "probe": probe}),
+        ]
+    return tasks_of
+
+
+def _assert_tenant_sum(rep):
+    for name in HSPEC.names:
+        assert rep.tenant_total.tier(name) == rep.total.tier(name), name
+
+
+# ---------------------------------------------------------------------------
+# Single-tenant parity: serving one query is exactly a standalone Session
+# ---------------------------------------------------------------------------
+
+
+def test_single_tenant_parity_ledger_and_latency():
+    tasks_of = _pipeline_tasks_of()
+    sess = Session(HSPEC, budget=BUDGET, eviction="lru")
+    res = sess.run(tasks_of(sess), replan="measured")
+    solo = res.latency_seconds()
+
+    srv = Server(HSPEC, budget=BUDGET, slots=4)
+    srv.submit(QueryRequest(rid=7, tasks_of=tasks_of, label="solo"))
+    rep = srv.run()
+    q = rep.query(7)
+
+    for name in HSPEC.names:
+        assert res.total.tier(name) == q.ledger.tier(name), name
+    assert q.latency == pytest.approx(solo, rel=1e-12)
+    assert q.wait == 0.0
+    assert rep.makespan == pytest.approx(solo, rel=1e-12)
+    _assert_tenant_sum(rep)
+
+
+def test_single_tenant_parity_all_modes():
+    """A lone query must not care how the server would share the machine."""
+    lats = {}
+    for mode in ("arbitrated", "even", "fifo"):
+        srv = Server(HSPEC, budget=BUDGET, mode=mode, slots=2)
+        srv.submit(QueryRequest(rid=0, tasks_of=_sort_tasks_of()))
+        lats[mode] = srv.run().query(0).latency
+    assert lats["arbitrated"] == pytest.approx(lats["fifo"], rel=1e-12)
+    # Even-split plans against 1/slots of the machine even when alone; it
+    # must still finish, but has no parity claim.
+    assert lats["even"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Shared-hierarchy accounting
+# ---------------------------------------------------------------------------
+
+
+def test_per_tenant_ledgers_sum_to_hierarchy_total():
+    srv = Server(HSPEC, budget=BUDGET, slots=3)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_pipeline_tasks_of(21), arrival=0.0),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(seed=22), arrival=0.001,
+                     priority=2.0),
+        QueryRequest(rid=2, tasks_of=_sort_tasks_of(seed=23, pages=48),
+                     arrival=0.002, priority=4.0),
+    ])
+    rep = srv.run()
+    assert len(rep.queries) == 3
+    _assert_tenant_sum(rep)
+    for q in rep.queries:
+        assert q.finished >= q.admitted >= q.arrival
+    assert rep.throughput > 0.0
+    assert rep.p50_latency <= rep.p99_latency
+    assert rep.p50_latency in [q.latency for q in rep.queries]
+
+
+def test_report_round_trips_and_prints():
+    srv = Server(HSPEC, budget=BUDGET, slots=2)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_sort_tasks_of(seed=31), label="a"),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(seed=32), label="b",
+                     arrival=0.001),
+    ])
+    rep = srv.run()
+    d = rep.to_dict()
+    assert d["mode"] == "arbitrated"
+    assert {q["rid"] for q in d["queries"]} == {0, 1}
+    text = str(rep)
+    assert "throughput" in text and "q0" in text and "q1" in text
+    with pytest.raises(KeyError):
+        rep.query(99)
+
+
+# ---------------------------------------------------------------------------
+# Admission control and queueing
+# ---------------------------------------------------------------------------
+
+
+def _intervals(rep):
+    return {q.rid: (q.admitted, q.finished) for q in rep.queries}
+
+
+def test_slots_bound_concurrency():
+    srv = Server(HSPEC, budget=BUDGET, slots=1)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_sort_tasks_of(seed=41)),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(seed=42), arrival=0.001),
+    ])
+    rep = srv.run()
+    iv = _intervals(rep)
+    # With one slot the second query waits for the first to finish.
+    assert iv[1][0] >= iv[0][1] - 1e-12
+    assert rep.query(1).wait > 0.0
+    _assert_tenant_sum(rep)
+
+
+def test_fifo_mode_serializes_regardless_of_slots():
+    srv = Server(HSPEC, budget=BUDGET, mode="fifo", slots=8)
+    assert srv.slots == 1
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_sort_tasks_of(seed=51)),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(seed=52), arrival=0.001),
+        QueryRequest(rid=2, tasks_of=_sort_tasks_of(seed=53), arrival=0.002),
+    ])
+    rep = srv.run()
+    iv = _intervals(rep)
+    order = sorted(iv, key=lambda r: iv[r][0])
+    for a, b in zip(order, order[1:]):
+        assert iv[b][0] >= iv[a][1] - 1e-12
+    _assert_tenant_sum(rep)
+
+
+def test_priority_orders_admission():
+    """A high-priority arrival jumps the queue; FIFO within a class."""
+    srv = Server(HSPEC, budget=BUDGET, slots=1)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_sort_tasks_of(seed=61), arrival=0.0,
+                     priority=1.0),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(seed=62), arrival=0.001,
+                     priority=1.0),
+        QueryRequest(rid=2, tasks_of=_sort_tasks_of(seed=63), arrival=0.002,
+                     priority=8.0),
+    ])
+    rep = srv.run()
+    iv = _intervals(rep)
+    # rid=2 (high priority) is admitted before rid=1 despite arriving later.
+    assert iv[2][0] < iv[1][0]
+    assert iv[0][0] == 0.0
+    _assert_tenant_sum(rep)
+
+
+def test_even_mode_never_rearbitrates():
+    srv = Server(HSPEC, budget=BUDGET, mode="even", slots=2)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_sort_tasks_of(seed=71)),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(seed=72), arrival=0.001),
+    ])
+    rep = srv.run()
+    assert rep.rearbitrations == 0
+    assert rep.mode == "even"
+    _assert_tenant_sum(rep)
+
+
+def test_arbitrated_rearbitrates_on_events():
+    srv = Server(HSPEC, budget=BUDGET, slots=2)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_sort_tasks_of(seed=81)),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(seed=82), arrival=0.001),
+    ])
+    rep = srv.run()
+    assert rep.rearbitrations > 0
+    _assert_tenant_sum(rep)
+
+
+def test_inadmissible_request_raises_on_idle_server():
+    srv = Server(HSPEC, budget=2.0, slots=1)
+    srv.submit(QueryRequest(rid=0, tasks_of=_pipeline_tasks_of(91)))
+    with pytest.raises(RuntimeError, match="inadmissible"):
+        srv.run()
+
+
+# ---------------------------------------------------------------------------
+# Preemptive demotion
+# ---------------------------------------------------------------------------
+
+TIGHT = hierarchy_spec((TABLE_I["dram"], 2048), (TABLE_I["rdma"], 1024),
+                       TABLE_I["ssd"])
+
+
+def _batch_tasks_of(seed=101):
+    def tasks_of(sess):
+        ids = make_key_pages(sess.remote, 1536, ROWS, seed=seed)
+        rel = make_relation(sess.remote, 512 * ROWS, ROWS, 128, seed=seed + 1)
+        return [
+            sess.task("ems", WorkloadStats(size_r=1536, k_cap=8),
+                      inputs={"page_ids": ids}, rows_per_page=ROWS),
+            sess.task("eagg", WorkloadStats(size_r=512, out=96, partitions=8,
+                                            sigma=0.5),
+                      inputs={"rel": rel}),
+        ]
+    return tasks_of
+
+
+def _serve_tight(priority):
+    srv = Server(TIGHT, budget=256.0, slots=2)
+    srv.submit([
+        QueryRequest(rid=0, tasks_of=_batch_tasks_of(), arrival=0.0,
+                     priority=1.0, label="batch"),
+        QueryRequest(rid=1, tasks_of=_sort_tasks_of(pages=256, seed=102,
+                                                    tier="rdma"),
+                     arrival=0.3, priority=priority, label="interactive"),
+    ])
+    return srv.run()
+
+
+def test_priority_triggers_preemptive_demotion():
+    rep = _serve_tight(8.0)
+    assert rep.preemptions, "high-priority admission should preempt"
+    for ev in rep.preemptions:
+        assert ev.rid == 1 and ev.victim_rid == 0
+        assert ev.tier in TIGHT.names
+        assert ev.pages > 0
+    assert rep.query(0).preempted_pages == sum(
+        e.pages for e in rep.preemptions
+    )
+    assert rep.query(1).preempted_pages == 0
+    # Preemption rounds are background migration, attributed to the admitted
+    # query; the per-tenant sum identity must survive them.
+    assert rep.query(1).ledger.total.c_migration_hidden > 0
+    _assert_tenant_sum(rep)
+
+
+def test_equal_priorities_never_preempt():
+    rep = _serve_tight(1.0)
+    assert rep.preemptions == []
+    _assert_tenant_sum(rep)
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+
+def test_server_validates_mode_slots_and_target():
+    with pytest.raises(ValueError, match="mode"):
+        Server(HSPEC, budget=BUDGET, mode="greedy")
+    with pytest.raises(ValueError, match="slots"):
+        Server(HSPEC, budget=BUDGET, slots=0)
+    with pytest.raises(ValueError, match="hierarchy"):
+        Server(TABLE_I["rdma"], budget=BUDGET)
+
+
+def test_submit_validates_requests():
+    srv = Server(HSPEC, budget=BUDGET)
+    srv.submit(QueryRequest(rid=0, tasks_of=_sort_tasks_of()))
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.submit(QueryRequest(rid=0, tasks_of=_sort_tasks_of()))
+    with pytest.raises(ValueError, match="priority"):
+        srv.submit(QueryRequest(rid=1, tasks_of=_sort_tasks_of(),
+                                priority=0.0))
+    with pytest.raises(ValueError, match="arrival"):
+        srv.submit(QueryRequest(rid=2, tasks_of=_sort_tasks_of(),
+                                arrival=-1.0))
+    with pytest.raises(ValueError, match="no tasks"):
+        srv.submit(QueryRequest(rid=3, tasks_of=lambda sess: []))
+
+
+def test_query_request_is_a_plain_record():
+    req = QueryRequest(rid=5, tasks_of=_sort_tasks_of(), arrival=1.5,
+                       priority=2.0, label="x")
+    assert dataclasses.is_dataclass(req)
+    assert (req.rid, req.arrival, req.priority, req.label) == (5, 1.5, 2.0, "x")

@@ -390,3 +390,59 @@ def test_replan_none_is_ledger_identical_to_static_plan():
     res_b = b.run(_misestimated_tasks(b), replan=None)
     assert res_a.total.d_total == res_b.total.d_total
     assert res_a.total.c_total == res_b.total.c_total
+
+
+def _accurate_tasks(sess):
+    """EMS -> EAGG with cardinality estimates that match the data."""
+    ids = make_key_pages(sess.remote, 48, ROWS, seed=31)
+    agg = make_relation(sess.remote, 96 * ROWS, ROWS, 128, seed=34)
+    sort = sess.task("ems", WorkloadStats(size_r=48, out=48, k_cap=8),
+                     inputs={"page_ids": ids}, rows_per_page=ROWS)
+    aggt = sess.task("eagg", WorkloadStats(size_r=96, out=16, partitions=8,
+                                           sigma=0.5), inputs={"rel": agg})
+    return [sort, aggt]
+
+
+def test_replan_threshold_suppresses_replans_on_accurate_estimates():
+    """An accurately-estimated pipeline records zero ReplanEvents..."""
+    thresholded = Session(TIER, budget=64.0)
+    res_thr = thresholded.run(_accurate_tasks(thresholded),
+                              replan="measured", replan_threshold=0.25)
+    assert res_thr.replan_events == []
+    assert not any(tr.replanned for tr in res_thr.per_task)
+    # ...and is ledger-identical to the static plan: skipping every
+    # re-arbitration leaves the original budgets untouched.
+    static = Session(TIER, budget=64.0)
+    res_static = static.run(_accurate_tasks(static))
+    assert res_thr.total.d_total == res_static.total.d_total
+    assert res_thr.total.c_total == res_static.total.c_total
+    # Measured stats still propagated downstream even without replans.
+    assert res_thr.per_task[0].measured is not None
+
+
+def test_replan_threshold_lets_large_errors_through():
+    """An ~8x cardinality error clears any reasonable threshold."""
+    adaptive = Session(TIER, budget=64.0)
+    res = adaptive.run(_misestimated_tasks(adaptive), replan="measured",
+                       replan_threshold=0.5)
+    assert res.replan_events
+    ev = res.replan_events[0]
+    assert ev.after_index == 0
+    assert ev.budgets_after[0] > ev.budgets_before[0]
+    # The threshold only gates *small* errors: the same run with an
+    # absurdly large threshold records none.
+    lax = Session(TIER, budget=64.0)
+    res_lax = lax.run(_misestimated_tasks(lax), replan="measured",
+                      replan_threshold=100.0)
+    assert res_lax.replan_events == []
+
+
+def test_replan_threshold_validation():
+    sess = Session(TIER, budget=40.0)
+    ids = make_key_pages(sess.remote, 16, ROWS, seed=0)
+    task = sess.task("ems", WorkloadStats(size_r=16),
+                     inputs={"page_ids": ids}, rows_per_page=ROWS)
+    with pytest.raises(ValueError, match="requires replan='measured'"):
+        sess.run([task], replan_threshold=0.1)
+    with pytest.raises(ValueError, match="must be >= 0"):
+        sess.run([task], replan="measured", replan_threshold=-0.1)
