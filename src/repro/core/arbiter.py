@@ -218,6 +218,7 @@ def arbitrate_hierarchy(
     step: float = 1.0,
     occupied: Sequence[float] | None = None,
     eviction: bool = False,
+    pinned_tiers: Sequence[int | None] | None = None,
 ) -> Tuple[List[float], List[int], float]:
     """Split one page budget AND place each item on a hierarchy tier.
 
@@ -239,6 +240,11 @@ def arbitrate_hierarchy(
     by where the footprint actually comes to rest, and non-bottom
     ``occupied`` pages are treated as evictable cold data that sinks to the
     bottom tier instead of blocking placements.
+
+    ``pinned_tiers`` (one entry per item, ``None`` = free) fixes an item's
+    tier: the descent still grants it budget quanta but never moves it off
+    its pinned tier — how per-task ``placement=`` pins flow through a
+    frontier re-arbitration without losing the joint budget split.
 
     Returns ``(allocations, tier indices, total modeled latency)``;
     allocations sum to ``budget`` and respect every item's floor, and the
@@ -275,19 +281,34 @@ def arbitrate_hierarchy(
         ]
     if eviction:
         items = _evictable_items(items, capacities)
+    if pinned_tiers is not None:
+        if len(pinned_tiers) != len(items):
+            raise ValueError(
+                f"{len(pinned_tiers)} pinned tiers for {len(items)} items"
+            )
+        for it, pt in zip(items, pinned_tiers):
+            if pt is not None and not 0 <= pt < n_tiers:
+                raise ValueError(
+                    f"item {it.name!r} pinned to tier {pt}, hierarchy has "
+                    f"{n_tiers} tiers"
+                )
+    else:
+        pinned_tiers = [None] * len(items)
 
     candidates: List[Tuple[List[float], List[int]]] = [
-        _greedy_joint(items, budget, capacities, step)
+        _greedy_joint(items, budget, capacities, step, pinned_tiers)
     ]
-    # Single-tier baselines: all items on tier t, pages split by the 1-D
-    # arbiter.  Guarantees the "never worse than best single tier" property.
+    # Single-tier baselines: all (unpinned) items on tier t, pages split by
+    # the 1-D arbiter.  Guarantees "never worse than best single tier".
     for t in range(n_tiers):
+        tiers = [t if pt is None else pt for pt in pinned_tiers]
         flat = [
-            ArbiterItem(it.name, it.min_pages, lambda m, it=it, t=t: it.latency_of(m, t))
-            for it in items
+            ArbiterItem(it.name, it.min_pages,
+                        lambda m, it=it, ti=ti: it.latency_of(m, ti))
+            for it, ti in zip(items, tiers)
         ]
         alloc, _ = arbitrate(flat, budget, step=step)
-        candidates.append((alloc, [t] * len(items)))
+        candidates.append((alloc, tiers))
 
     # Only capacity-feasible, fully-allocated assignments may win: the
     # greedy pass can stop early (capacity exhausted) or fall back to an
@@ -320,12 +341,19 @@ def _greedy_joint(
     budget: float,
     capacities: Sequence[float],
     step: float,
+    pinned_tiers: Sequence[int | None] | None = None,
 ) -> Tuple[List[float], List[int]]:
     """Greedy descent over joint (item gets a quantum, on some tier) moves."""
     n_tiers = len(capacities)
+    if pinned_tiers is None:
+        pinned_tiers = [None] * len(items)
     alloc = [it.min_pages for it in items]
     used = [0.0] * n_tiers
     placement: List[int] = []
+
+    def tiers_of(i: int) -> range | Tuple[int]:
+        pt = pinned_tiers[i]
+        return range(n_tiers) if pt is None else (pt,)
 
     def fits(i: int, m: float, t: int) -> bool:
         fp = items[i].footprint_of(m, t)
@@ -337,7 +365,7 @@ def _greedy_joint(
     # Initial placement at the floors: cheapest feasible tier per item.
     for i, it in enumerate(items):
         best_t, best_l = None, float("inf")
-        for t in range(n_tiers):
+        for t in tiers_of(i):
             if used[t] + it.footprint_of(alloc[i], t) > capacities[t] + 1e-9:
                 continue
             latency = it.latency_of(alloc[i], t)
@@ -346,7 +374,8 @@ def _greedy_joint(
         if best_t is None:  # nothing fits: fall back to the roomiest tier
             # (the resulting assignment is filtered out as infeasible by
             # arbitrate_hierarchy unless a later move repairs it)
-            best_t = max(range(n_tiers), key=lambda t: capacities[t] - used[t])
+            best_t = (pinned_tiers[i] if pinned_tiers[i] is not None else max(
+                range(n_tiers), key=lambda t: capacities[t] - used[t]))
         placement.append(best_t)
         used[best_t] += it.footprint_of(alloc[i], best_t)
 
@@ -356,7 +385,7 @@ def _greedy_joint(
         s = min(step, remaining)
         best = None  # (gain, i, t, next_latency)
         for i, it in enumerate(items):
-            for t in range(n_tiers):
+            for t in tiers_of(i):
                 if not fits(i, alloc[i] + s, t):
                     continue
                 nxt = it.latency_of(alloc[i] + s, t)
@@ -378,7 +407,7 @@ def _greedy_joint(
     while improved:
         improved = False
         for i, it in enumerate(items):
-            for t in range(n_tiers):
+            for t in tiers_of(i):
                 if t == placement[i] or not fits(i, alloc[i], t):
                     continue
                 nxt = it.latency_of(alloc[i], t)

@@ -30,7 +30,13 @@ from repro.engine.scheduler import TransferScheduler
 
 
 class BufferPool:
-    """Per-stream sliced write pool with batched, capacity-triggered flushes."""
+    """Per-stream sliced write pool with batched, capacity-triggered flushes.
+
+    On a hierarchy target, ``tier`` names the placement tier for this pool's
+    flush rounds (``None`` falls through to the scheduler's default tier) —
+    the hook fractional placement uses to route one operator's streams to
+    different tiers.
+    """
 
     def __init__(
         self,
@@ -38,8 +44,10 @@ class BufferPool:
         capacity_pages: float,
         rows_per_page: int,
         n_streams: int = 1,
+        tier=None,
     ):
         self.sched = sched
+        self.tier = tier
         self.slice_pages = max(1, int(capacity_pages / max(n_streams, 1)))
         self.slice_rows = self.slice_pages * rows_per_page
         self.rows_per_page = rows_per_page
@@ -75,7 +83,9 @@ class BufferPool:
             chunk[i : i + self.rows_per_page]
             for i in range(0, len(chunk), self.rows_per_page)
         ]
-        self._pages.setdefault(stream, []).extend(self.sched.write(pages))
+        self._pages.setdefault(stream, []).extend(
+            self.sched.write(pages, tier=self.tier)
+        )
         self.flushes += 1
         self.rows_flushed += len(chunk)
 

@@ -150,13 +150,17 @@ def _plan_pipeline(
     policy: str = "remop",
     step: float = 1.0,
     eviction: bool = False,
+    pinned: Optional[Sequence[Optional[int]]] = None,
 ) -> PipelinePlan:
     """The shared planning core behind ``Session.plan`` and the legacy shim.
 
     ``eviction=True`` plans for a hierarchy with a background evictor:
     tier capacities are soft and placement costs blend per-tier taus by
     where each footprint comes to rest (see
-    :func:`repro.core.arbiter.arbitrate_hierarchy`).
+    :func:`repro.core.arbiter.arbitrate_hierarchy`).  ``pinned`` (hierarchy
+    targets only; one tier index or ``None`` per operator) fixes operators
+    with an explicit ``placement=`` on their pinned tier while the arbiter
+    still grants them budget.
     """
     if not list(ops):
         raise ValueError(
@@ -166,7 +170,7 @@ def _plan_pipeline(
     if _is_hierarchy(tier):
         return _plan_pipeline_hierarchy(
             ops, stats, resolve_hierarchy(tier), m_pages, policy, step,
-            eviction=eviction,
+            eviction=eviction, pinned=pinned,
         )
     tier_spec = resolve_tier(tier)
     tau = tier_spec.tau_pages
@@ -204,6 +208,7 @@ def _plan_pipeline_hierarchy(
     policy: str,
     step: float,
     eviction: bool = False,
+    pinned: Optional[Sequence[Optional[int]]] = None,
 ) -> PipelinePlan:
     """Joint (pages, tier) assignment over a hierarchy's taus and capacities."""
     taus = hspec.taus
@@ -223,7 +228,8 @@ def _plan_pipeline_hierarchy(
             footprint_of=lambda m, t, fp=footprint, st=st: fp(st, taus[t], m),
         ))
     alloc, placement, _ = arbitrate_hierarchy(
-        items, float(m_pages), hspec.capacities, step=step, eviction=eviction
+        items, float(m_pages), hspec.capacities, step=step, eviction=eviction,
+        pinned_tiers=pinned,
     )
     budgets = tuple(
         OperatorBudget(

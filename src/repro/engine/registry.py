@@ -98,6 +98,15 @@ Footprint = Callable[[WorkloadStats, float, float], float]
 # Measured-feedback hook: (estimated stats, run result) -> stats with the
 # *measured* output cardinality, for mid-pipeline re-planning.
 MeasuredStats = Callable[[WorkloadStats, Any], WorkloadStats]
+# Output-stats hook: estimated output size (pages) of the operator at plan
+# time — the planning-time analogue of ``MeasuredStats``.  A query frontend
+# uses it to feed one task's estimated output into the downstream task's
+# input stats (``input_stats``) before anything has run.
+OutputPages = Callable[[WorkloadStats], float]
+# Per-stream footprint decomposition: the same pages ``Footprint`` reports,
+# attributed to the operator's named spill streams (``OperatorSpec.streams``)
+# — what fractional placement splits across tiers and ``explain()`` renders.
+StreamFootprints = Callable[[WorkloadStats, float, float], Dict[str, float]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +130,14 @@ class OperatorSpec:
     input_stats: Mapping[str, str] = dataclasses.field(default_factory=dict)
     measured_stats: Optional[MeasuredStats] = None  # replan feedback hook
     output_of: Optional[Callable[[Any], Any]] = None  # run result -> output pages
+    # Estimated output pages at plan time (feeds downstream input stats).
+    output_pages: Optional[OutputPages] = None
+    # Named spill streams, in the order the data plane's ``tier=`` mapping
+    # (and ``session.task(..., placement=[...])`` lists) bind to; empty for
+    # operators without per-stream routing.
+    streams: Tuple[str, ...] = ()
+    # ``footprint`` decomposed per stream (keys ⊆ ``streams``).
+    stream_footprints: Optional[StreamFootprints] = None
 
     def bind_inputs(self, inputs: Mapping[str, Any]) -> Tuple[Any, ...]:
         """Resolve named inputs to ``run``'s positional argument order.
@@ -367,6 +384,48 @@ def _fp_eagg(stats: WorkloadStats, tau: float, m: float) -> float:
     return stats.sigma * stats.size_r + stats.out
 
 
+# Per-stream decompositions of the footprints above (same totals).  The
+# stream names match the ``tier=`` mapping each operator's data plane takes,
+# so fractional placement can route e.g. EHJ build partitions to DRAM while
+# the staged probe spills to SSD.
+
+
+def _sfp_bnlj(stats: WorkloadStats, tau: float, m: float) -> Dict[str, float]:
+    return {"output": stats.out}
+
+
+def _sfp_ems(stats: WorkloadStats, tau: float, m: float) -> Dict[str, float]:
+    plan = _plan_ems(stats, tau, m, "remop")
+    passes = ems_passes(stats.size_r, m, plan.k)
+    return {"runs": stats.size_r * passes, "output": stats.size_r}
+
+
+def _sfp_ehj(stats: WorkloadStats, tau: float, m: float) -> Dict[str, float]:
+    return {
+        "build": stats.sigma * stats.size_r,
+        "stage": stats.sigma * stats.size_s,
+        "output": stats.out,
+    }
+
+
+def _sfp_eagg(stats: WorkloadStats, tau: float, m: float) -> Dict[str, float]:
+    return {"partitions": stats.sigma * stats.size_r, "output": stats.out}
+
+
+# Estimated output pages at plan time: what the operator's result stream is
+# expected to occupy, per its WorkloadStats — the planning-time mirror of the
+# ``measured_stats`` feedback hooks above.
+
+
+def _out_pages_from_out(stats: WorkloadStats) -> float:
+    return stats.out
+
+
+def _out_pages_ems(stats: WorkloadStats) -> float:
+    # A sort permutes its input: the final run is the input's size.
+    return stats.size_r
+
+
 def _ensure_builtin() -> None:
     """Register the built-in operators on first lookup.
 
@@ -398,6 +457,8 @@ def _ensure_builtin() -> None:
         model=_model_bnlj, footprint=_fp_bnlj, costs=_costs_bnlj,
         inputs=bnlj_mod.INPUTS, input_stats=bnlj_mod.INPUT_STATS,
         measured_stats=bnlj_mod.bnlj_measured, output_of=bnlj_mod.bnlj_output,
+        output_pages=_out_pages_from_out,
+        streams=bnlj_mod.STREAMS, stream_footprints=_sfp_bnlj,
     ))
     register(OperatorSpec(
         name="ems", plan_type=EMSPlan,
@@ -406,6 +467,8 @@ def _ensure_builtin() -> None:
         model=_model_ems, footprint=_fp_ems, costs=_costs_ems,
         inputs=ems_mod.INPUTS, input_stats=ems_mod.INPUT_STATS,
         measured_stats=ems_mod.ems_measured, output_of=ems_mod.ems_output,
+        output_pages=_out_pages_ems,
+        streams=ems_mod.STREAMS, stream_footprints=_sfp_ems,
     ))
     register(OperatorSpec(
         name="ehj", plan_type=EHJPlan,
@@ -414,6 +477,8 @@ def _ensure_builtin() -> None:
         model=_model_ehj, footprint=_fp_ehj, costs=_costs_ehj,
         inputs=ehj_mod.INPUTS, input_stats=ehj_mod.INPUT_STATS,
         measured_stats=ehj_mod.ehj_measured, output_of=ehj_mod.ehj_output,
+        output_pages=_out_pages_from_out,
+        streams=ehj_mod.STREAMS, stream_footprints=_sfp_ehj,
     ))
     register(OperatorSpec(
         name="eagg", plan_type=EAggPlan,
@@ -422,5 +487,7 @@ def _ensure_builtin() -> None:
         model=_model_eagg, footprint=_fp_eagg, costs=_costs_eagg,
         inputs=eagg_mod.INPUTS, input_stats=eagg_mod.INPUT_STATS,
         measured_stats=eagg_mod.eagg_measured, output_of=eagg_mod.eagg_output,
+        output_pages=_out_pages_from_out,
+        streams=eagg_mod.STREAMS, stream_footprints=_sfp_eagg,
     ))
     _builtin_registered = True

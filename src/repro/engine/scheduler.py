@@ -33,6 +33,43 @@ from repro.core.cost_model import HierarchySnapshot, LedgerSnapshot, TransferLed
 
 Snapshot = Union[LedgerSnapshot, HierarchySnapshot]
 
+TierSpec = Union[int, str, None]
+
+
+def stream_tiers(
+    tier: Union[TierSpec, Dict[str, TierSpec], Sequence[TierSpec]],
+    streams: Sequence[str],
+) -> Dict[str, TierSpec]:
+    """Normalize an operator ``tier=`` spec into a ``{stream: tier}`` map.
+
+    Operators declare their spill streams (``OperatorSpec.streams``) and
+    accept ``tier=`` as either
+
+      * a scalar (index / name / ``None``) — every stream on that tier, the
+        pre-fractional behaviour,
+      * a dict keyed by stream name — missing streams fall back to ``None``
+        (the scheduler's default placement); unknown keys raise, or
+      * a sequence aligned with ``streams`` — one entry per stream.
+
+    The result always has exactly one entry per declared stream.
+    """
+    if isinstance(tier, dict):
+        unknown = sorted(set(tier) - set(streams))
+        if unknown:
+            raise ValueError(
+                f"unknown stream(s) {unknown} in tier spec; "
+                f"operator streams are {list(streams)}"
+            )
+        return {s: tier.get(s) for s in streams}
+    if isinstance(tier, (list, tuple)):
+        if len(tier) != len(streams):
+            raise ValueError(
+                f"tier list has {len(tier)} entries for {len(streams)} "
+                f"stream(s) {list(streams)}"
+            )
+        return dict(zip(streams, tier))
+    return {s: tier for s in streams}
+
 
 class TransferScheduler:
     """Schedules batched transfer rounds against one remote target.

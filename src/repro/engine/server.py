@@ -78,9 +78,57 @@ from repro.core.cost_model import (
     LedgerSnapshot,
     TierLevel,
 )
-from repro.engine.session import OperatorTask, Session, TaskRun
+from repro.engine.session import OperatorTask, Session, TaskRun, delta_chunks
 
 _EPS = 1e-9
+
+
+# --------------------------------------------------------------------------
+# The continuous-batching primitive
+# --------------------------------------------------------------------------
+
+
+class SlotLoop:
+    """Continuous batching over an arbitrary per-item engine.
+
+    The slot discipline both serving surfaces share: at most ``slots`` items
+    are active, free slots refill FIFO from the pending queue, every active
+    item advances one quantum per iteration, and a finishing item releases
+    its slot immediately for the queue head.  ``start(item)`` admits an item
+    into a slot and returns its slot state; ``step(item, state)`` advances
+    it one quantum and returns ``True`` when it finished.
+
+    :class:`Server` interleaves this discipline with its simulated event
+    clock; ``repro.runtime.serve_loop.ServeEngine`` (LM decode) delegates
+    its batching loop here verbatim — one quantum is one decoded token.
+    """
+
+    def __init__(
+        self,
+        slots: int,
+        start: Callable[[Any], Any],
+        step: Callable[[Any, Any], bool],
+    ) -> None:
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.slots = int(slots)
+        self.start = start
+        self.step = step
+
+    def run(self, items: Sequence[Any]) -> List[Any]:
+        """Drive every item to completion; returns them in finish order."""
+        pending = list(items)
+        active: List[Tuple[Any, Any]] = []
+        finished: List[Any] = []
+        while pending or active:
+            while pending and len(active) < self.slots:
+                item = pending.pop(0)
+                active.append((item, self.start(item)))
+            for entry in list(active):
+                if self.step(entry[0], entry[1]):
+                    active.remove(entry)
+                    finished.append(entry[0])
+        return finished
 
 
 # --------------------------------------------------------------------------
@@ -651,16 +699,12 @@ class Server:
 
     def _chunks_of(self, delta: HierarchySnapshot) -> List[List[float]]:
         """Decompose a ledger delta into per-tier Eq.-(1) seconds, top first."""
-        chunks: List[List[float]] = []
-        for ti, (name, lv) in enumerate(zip(self.spec.names, self.spec.levels)):
-            snap = delta.tier(name)
-            c = snap.c_total
-            if self.overlap:
-                c -= snap.c_migration_hidden
-            secs = lv.tier.latency_seconds(snap.d_total, max(c, 0))
-            if secs > 0.0:
-                chunks.append([float(ti), secs])
-        return chunks
+        return [
+            [float(ti), secs]
+            for ti, secs in delta_chunks(
+                delta, self.spec, None, overlap_migration=self.overlap
+            )
+        ]
 
     def _advance_tenant(
         self, ten: _Tenant, now: float, reports: List[QueryReport]

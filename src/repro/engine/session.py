@@ -52,7 +52,7 @@ from repro.engine.registry import (
     resolve_hierarchy,
     resolve_tier,
 )
-from repro.engine.scheduler import TransferScheduler
+from repro.engine.scheduler import TransferScheduler, stream_tiers
 
 # --------------------------------------------------------------------------
 # Typed tasks
@@ -66,9 +66,12 @@ class OperatorTask:
     ``inputs`` maps the operator's declared input names (see
     ``OperatorSpec.inputs``) to data-plane values — a ``Relation``, a page-id
     list, or another task's :class:`TaskOutput` (``task.output``), resolved
-    when the producing task has run.  ``options`` carries the remaining run
-    keywords (``rows_per_page``, ``prefetch``, ...).  Tasks compare by
-    identity so the same task object can be referenced from several places.
+    when the producing task has run.  A ``TaskOutput`` input is also a DAG
+    edge: ``session.run(tasks, schedule="dag")`` executes producers before
+    consumers and overlaps independent subtrees.  ``options`` carries the
+    remaining run keywords (``rows_per_page``, ``prefetch``, ...).  Tasks
+    compare by identity so the same task object can be referenced from
+    several places.
     """
 
     op: str
@@ -80,6 +83,10 @@ class OperatorTask:
     # (session.task() resolves names once, so stateful policies keep their
     # hints across runs); None uses the session's policy.
     eviction: Any = None
+    # Fractional placement: {stream: tier-name-or-None} over the operator's
+    # declared spill streams (``OperatorSpec.streams``); None-valued streams
+    # follow the arbiter's placement.  Built by ``session.task(placement=)``.
+    placement: Optional[Mapping[str, Optional[str]]] = None
 
     @property
     def output(self) -> "TaskOutput":
@@ -121,10 +128,16 @@ class TaskExplain:
     eviction: Optional[str] = None
     eviction_pages: float = 0.0
     eviction_rounds: float = 0.0
+    # Fractional placement: (stream, tier, estimated pages) per declared
+    # stream — only populated when the task carries a per-stream placement.
+    streams: Tuple[Tuple[str, str, float], ...] = ()
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["capacity"] = None if math.isinf(self.capacity) else self.capacity
+        d["streams"] = [
+            {"stream": s, "tier": t, "footprint": fp} for s, t, fp in self.streams
+        ]
         return d
 
 
@@ -196,6 +209,12 @@ class PlanReport:
             "  ".join(cell.ljust(w) for cell, w in zip(row, widths)).rstrip()
             for row in rows
         ]
+        for t in self.tasks:
+            if t.streams:
+                split = " ".join(
+                    f"{s}->{tn}({fp:g}p)" for s, tn, fp in t.streams
+                )
+                lines.append(f"  {t.label} streams: {split}")
         lines.append(f"total modeled latency L = {self.total_modeled_latency:.1f}")
         return "\n".join(lines)
 
@@ -257,6 +276,12 @@ class SessionRunResult:
     # True when the session ran background demotions overlapped with compute
     # (hidden migration rounds then pay no RTT in latency_seconds()).
     overlap_migration: bool = False
+    # "serial" (list order) or "dag" (dependency order, ready tasks overlap).
+    schedule: str = "serial"
+    # DAG runs only: Eq.-(1) wall clock with ready tasks from independent
+    # subtrees overlapped under per-tier processor sharing — never more than
+    # the serial ``latency_seconds()``; equal for a linear chain.
+    makespan_seconds: Optional[float] = None
 
     @property
     def per_op(self) -> List[Tuple[str, Any, Any]]:
@@ -276,6 +301,87 @@ class SessionRunResult:
         if self.hierarchy is not None:
             return self.total.latency_cost(self.hierarchy)
         return self.total.latency_cost(self.tier.tau_pages)
+
+
+# --------------------------------------------------------------------------
+# Simulated concurrency: chunk decomposition + processor-shared playback
+# --------------------------------------------------------------------------
+
+_EPS = 1e-12
+
+
+def delta_chunks(delta, hierarchy, tier, overlap_migration=False):
+    """Decompose one task's ledger delta into ``[tier_index, seconds]`` work.
+
+    Each chunk is the Eq.-(1) seconds the task spends on one tier (hidden
+    migration rounds pay no RTT when ``overlap_migration``).  The chunks are
+    the currency of :func:`playback_dag` and the server's event clock: tasks
+    demanding the same tier at the same simulated time share its bandwidth.
+    """
+    if hierarchy is None:
+        secs = tier.latency_seconds(delta.d_total, delta.c_total)
+        return [[0, float(secs)]] if secs > 0 else []
+    chunks = []
+    for ti, (name, lv) in enumerate(zip(hierarchy.names, hierarchy.levels)):
+        snap = delta.tier(name)
+        c = snap.c_total
+        if overlap_migration:
+            c -= snap.c_migration_hidden
+        secs = lv.tier.latency_seconds(snap.d_total, max(c, 0))
+        if secs > 0:
+            chunks.append([ti, float(secs)])
+    return chunks
+
+
+def playback_dag(chunks, deps) -> float:
+    """Makespan of per-task chunk lists under dependency-gated sharing.
+
+    ``chunks[i]`` is task *i*'s ``[tier, seconds]`` list (``None`` treated as
+    empty); ``deps[i]`` the set of task indices it waits on.  A task starts
+    the instant its last dependency finishes; concurrently-running tasks
+    demanding the same tier split its bandwidth evenly (processor sharing),
+    so per-tier work is conserved and the makespan never exceeds the serial
+    sum — a linear chain reproduces it exactly.
+    """
+    n = len(chunks)
+    remaining = [[list(c) for c in (chunks[i] or [])] for i in range(n)]
+    finished = [False] * n
+    running: set = set()
+    clock = 0.0
+
+    def admit() -> None:
+        moved = True
+        while moved:
+            moved = False
+            for i in range(n):
+                if (not finished[i] and i not in running
+                        and all(finished[d] for d in deps[i])):
+                    if remaining[i]:
+                        running.add(i)
+                    else:
+                        finished[i] = True  # zero-work task: instant
+                    moved = True
+
+    admit()
+    while running:
+        demand: Dict[int, int] = {}
+        for i in running:
+            ti = remaining[i][0][0]
+            demand[ti] = demand.get(ti, 0) + 1
+        dt = min(
+            remaining[i][0][1] * demand[remaining[i][0][0]] for i in running
+        )
+        clock += dt
+        for i in list(running):
+            ti = remaining[i][0][0]
+            remaining[i][0][1] -= dt / demand[ti]
+            while remaining[i] and remaining[i][0][1] <= _EPS:
+                remaining[i].pop(0)
+            if not remaining[i]:
+                running.discard(i)
+                finished[i] = True
+        admit()
+    return clock
 
 
 # --------------------------------------------------------------------------
@@ -392,6 +498,7 @@ class Session:
         inputs: Optional[Mapping[str, Any]] = None,
         label: Optional[str] = None,
         eviction: Any = None,
+        placement: Any = None,
         **options: Any,
     ) -> OperatorTask:
         """Build a typed task; input names are validated against the operator.
@@ -401,6 +508,14 @@ class Session:
         to the operator's data plane (``rows_per_page``, ``prefetch``, ...).
         ``eviction`` selects a different eviction policy for this task only
         (the session's evictor must be enabled; validated eagerly).
+
+        ``placement`` routes the operator's spill *streams* to explicit
+        hierarchy tiers (fractional placement): a list aligned with the
+        operator's ``OperatorSpec.streams`` declaration, or a dict keyed by
+        stream name — e.g. EHJ ``placement={"build": "dram", "stage":
+        "ssd"}`` keeps spilled build partitions hot while staging probes
+        cold.  ``None`` entries follow the arbiter's placement; tier names
+        are validated eagerly against the session's hierarchy.
         """
         spec = get(op)  # raises ValueError for unknown operators
         if self.policy not in spec.policies:
@@ -429,6 +544,29 @@ class Session:
                 f"operator {op!r} takes inputs {list(spec.inputs)}: "
                 f"unknown {unknown}"
             )
+        if placement is not None:
+            if not self.is_hierarchy:
+                raise ValueError(
+                    f"task {op!r} placement needs a memory hierarchy target; "
+                    f"a single tier has no placement choice"
+                )
+            if not spec.streams:
+                raise ValueError(
+                    f"operator {op!r} declares no spill streams; per-stream "
+                    f"placement is not supported"
+                )
+            norm = stream_tiers(placement, spec.streams)
+            # Resolve names/indices eagerly so bad tiers fail at task build.
+            try:
+                placement = {
+                    s: (None if v is None
+                        else self.hierarchy.names[self.remote.tier_index(v)])
+                    for s, v in norm.items()
+                }
+            except KeyError as e:
+                raise ValueError(
+                    f"task {op!r} placement: {e.args[0]}"
+                ) from None
         self._task_seq += 1
         return OperatorTask(
             op=op,
@@ -437,9 +575,12 @@ class Session:
             options=dict(options),
             label=label or f"{op}#{self._task_seq}",
             eviction=eviction,
+            placement=placement,
         )
 
-    def _check_tasks(self, tasks: Sequence[OperatorTask]) -> List[OperatorTask]:
+    def _check_tasks(
+        self, tasks: Sequence[OperatorTask], dag: bool = False
+    ) -> List[OperatorTask]:
         tasks = list(tasks)
         if not tasks:
             raise ValueError(
@@ -452,28 +593,125 @@ class Session:
                     f"tasks[{i}] is {type(task).__name__}, expected an "
                     f"OperatorTask from session.task(...)"
                 )
-            for name, value in task.inputs.items():
-                if isinstance(value, TaskOutput):
-                    if not any(value.task is t for t in tasks[:i]):
-                        raise ValueError(
-                            f"task {task.label!r} input {name!r} references a "
-                            f"task output that does not run earlier in this "
-                            f"pipeline"
-                        )
+            if not dag:
+                for name, value in task.inputs.items():
+                    if isinstance(value, TaskOutput):
+                        if not any(value.task is t for t in tasks[:i]):
+                            raise ValueError(
+                                f"task {task.label!r} input {name!r} "
+                                f"references a task output that does not run "
+                                f"earlier in this pipeline"
+                            )
+        if dag:
+            self._check_dag(tasks)
         return tasks
+
+    @staticmethod
+    def _dag_deps(tasks: Sequence[OperatorTask]) -> List[set]:
+        """Per-task dependency sets (list indices) from ``TaskOutput`` edges."""
+        index = {id(t): i for i, t in enumerate(tasks)}
+        return [
+            {
+                index[id(v.task)]
+                for v in t.inputs.values()
+                if isinstance(v, TaskOutput)
+            }
+            for t in tasks
+        ]
+
+    def _check_dag(self, tasks: Sequence[OperatorTask]) -> None:
+        """Fail fast on DAG wiring errors, naming the offending task.
+
+        Duplicate task objects or labels, ``inputs=`` referencing a task not
+        part of this run, and dependency cycles each raise ``ValueError``.
+        """
+        seen_labels: Dict[str, int] = {}
+        for i, t in enumerate(tasks):
+            if any(t is u for u in tasks[:i]):
+                raise ValueError(
+                    f"duplicate task {t.label!r}: the same task object "
+                    f"appears twice in this run"
+                )
+            if t.label in seen_labels:
+                raise ValueError(
+                    f"duplicate task name {t.label!r}: labels must be unique "
+                    f"in a DAG run"
+                )
+            seen_labels[t.label] = i
+        index = {id(t): i for i, t in enumerate(tasks)}
+        for t in tasks:
+            for name, value in t.inputs.items():
+                if isinstance(value, TaskOutput) and id(value.task) not in index:
+                    raise ValueError(
+                        f"task {t.label!r} input {name!r} references task "
+                        f"{value.task.label!r}, which is not part of this run"
+                    )
+        # Kahn's algorithm: anything left unordered sits on a cycle.
+        deps = self._dag_deps(tasks)
+        pending = {i: set(d) for i, d in enumerate(deps)}
+        while True:
+            ready = [i for i, d in pending.items() if not d]
+            if not ready:
+                break
+            for i in ready:
+                del pending[i]
+            for d in pending.values():
+                d.difference_update(ready)
+        if pending:
+            offender = tasks[min(pending)]
+            raise ValueError(
+                f"cyclic inputs=: task {offender.label!r} participates in a "
+                f"dependency cycle"
+            )
 
     # -- planning ------------------------------------------------------------
 
-    def plan(self, tasks: Sequence[OperatorTask]):
-        """Arbitrate the session budget (and placements) across ``tasks``."""
+    def _primary_pin(self, task: OperatorTask) -> Optional[int]:
+        """Arbiter tier pin for a fractionally-placed task (else ``None``).
+
+        The arbiter assigns one (pages, tier) pair per task; a per-stream
+        placement pins that choice to the *primary* stream's tier — the
+        explicitly-placed stream with the largest estimated footprint — so
+        the joint descent prices the task where most of its spill lands
+        while the data plane routes each stream to its own tier.
+        """
+        if task.placement is None or self.hierarchy is None:
+            return None
+        explicit = {s: v for s, v in task.placement.items() if v is not None}
+        if not explicit:
+            return None
+        spec = get(task.op)
+        primary = next(iter(explicit))
+        if spec.stream_footprints is not None and len(explicit) > 1:
+            m0 = max(self.budget / 4.0, spec.min_pages)
+            tau0 = self.tier.tau_pages
+            fps = spec.stream_footprints(task.stats, tau0, m0)
+            primary = max(explicit, key=lambda s: (fps.get(s, 0.0), s))
+        return self.remote.tier_index(explicit[primary])
+
+    def _task_pins(
+        self, tasks: Sequence[OperatorTask]
+    ) -> Optional[List[Optional[int]]]:
+        if self.hierarchy is None:
+            return None
+        pins = [self._primary_pin(t) for t in tasks]
+        return pins if any(p is not None for p in pins) else None
+
+    def plan(self, tasks: Sequence[OperatorTask], dag: bool = False):
+        """Arbitrate the session budget (and placements) across ``tasks``.
+
+        ``dag=True`` validates the tasks as a DAG (any topological wiring)
+        instead of requiring list order to be execution order.
+        """
         from repro.engine.pipeline import _plan_pipeline
 
-        tasks = self._check_tasks(tasks)
+        tasks = self._check_tasks(tasks, dag=dag)
         target = self.hierarchy if self.hierarchy is not None else self.tier
         return _plan_pipeline(
             [t.op for t in tasks], [t.stats for t in tasks],
             target, self.budget, self.policy, self.step,
             eviction=self.evictor is not None,
+            pinned=self._task_pins(tasks),
         )
 
     @staticmethod
@@ -489,10 +727,12 @@ class Session:
                     f"{task.op!r} ({task.label})"
                 )
 
-    def explain(self, tasks: Sequence[OperatorTask], plan=None) -> PlanReport:
+    def explain(
+        self, tasks: Sequence[OperatorTask], plan=None, dag: bool = False
+    ) -> PlanReport:
         """The structured plan report: budgets, placements, D/C/L, footprints."""
-        tasks = self._check_tasks(tasks)
-        pplan = plan if plan is not None else self.plan(tasks)
+        tasks = self._check_tasks(tasks, dag=dag)
+        pplan = plan if plan is not None else self.plan(tasks, dag=dag)
         self._check_plan_matches(pplan, tasks)
         rows: List[TaskExplain] = []
         usage: Dict[str, float] = {}
@@ -509,7 +749,22 @@ class Session:
                     if spec.costs else (math.nan, math.nan))
             fp = (spec.footprint(ob.stats, tau, ob.m_pages)
                   if spec.footprint else 0.0)
-            usage[tier_name] = usage.get(tier_name, 0.0) + fp
+            # Fractional placement: decompose the footprint per stream and
+            # attribute each stream's pages to *its* tier.
+            stream_rows: Tuple[Tuple[str, str, float], ...] = ()
+            if task.placement is not None and spec.streams:
+                sf = (spec.stream_footprints(ob.stats, tau, ob.m_pages)
+                      if spec.stream_footprints else {})
+                stream_rows = tuple(
+                    (s, task.placement.get(s) or tier_name,
+                     float(sf.get(s, 0.0)))
+                    for s in spec.streams
+                )
+            if stream_rows:
+                for s, s_tier, s_fp in stream_rows:
+                    usage[s_tier] = usage.get(s_tier, 0.0) + s_fp
+            else:
+                usage[tier_name] = usage.get(tier_name, 0.0) + fp
             ev_name, ev_pages, ev_rounds = None, 0.0, 0.0
             if self.evictor is not None:
                 ev_name = (task.eviction.name if task.eviction is not None
@@ -530,7 +785,7 @@ class Session:
                 modeled_latency=ob.modeled_latency, footprint=fp,
                 capacity=capacity, min_pages=spec.min_pages,
                 eviction=ev_name, eviction_pages=ev_pages,
-                eviction_rounds=ev_rounds,
+                eviction_rounds=ev_rounds, streams=stream_rows,
             ))
         if self.hierarchy is not None:
             footprints = tuple(
@@ -580,8 +835,16 @@ class Session:
         }
         args = spec.bind_inputs(resolved)
         kwargs = dict(task.options)
-        if self.is_hierarchy and ob.placement is not None:
-            kwargs.setdefault("tier", ob.placement)
+        if self.is_hierarchy:
+            if task.placement is not None and spec.streams:
+                # Fractional placement: every stream to its explicit tier,
+                # unplaced streams follow the arbiter's placement.
+                kwargs.setdefault("tier", {
+                    s: (task.placement.get(s) or ob.placement)
+                    for s in spec.streams
+                })
+            elif ob.placement is not None:
+                kwargs.setdefault("tier", ob.placement)
         if label is None:
             self._exec_seq += 1
             label = f"session-exec{self._exec_seq}"
@@ -628,6 +891,7 @@ class Session:
         replan: Optional[str] = None,
         plan=None,
         replan_threshold: Optional[float] = None,
+        schedule: str = "serial",
     ) -> SessionRunResult:
         """Execute ``tasks`` in order against the session's shared ledger.
 
@@ -645,6 +909,15 @@ class Session:
         records zero :class:`ReplanEvent`\\ s.  ``None`` keeps the legacy
         behaviour of re-arbitrating after every task.  ``plan`` optionally
         supplies a precomputed :class:`~repro.engine.pipeline.PipelinePlan`.
+
+        ``schedule="dag"`` treats ``TaskOutput`` inputs as DAG edges instead
+        of requiring list order: tasks execute in dependency order (lowest
+        list index first among ready tasks), wiring errors fail fast
+        (cycles, duplicates, foreign references), ``replan="measured"``
+        re-arbitrates the *remaining frontier* after each finish, and the
+        result carries ``makespan_seconds`` — the Eq.-(1) wall clock with
+        independent subtrees overlapped under per-tier processor sharing.
+        A linear chain reproduces the serial schedule's ledgers exactly.
         """
         if replan not in (None, "measured"):
             raise ValueError(
@@ -659,6 +932,15 @@ class Session:
                 raise ValueError(
                     f"replan_threshold must be >= 0, got {replan_threshold}"
                 )
+        if schedule not in ("serial", "dag"):
+            raise ValueError(
+                f"schedule must be 'serial' or 'dag', got {schedule!r}"
+            )
+        if schedule == "dag":
+            return self._run_dag(
+                tasks, replan=replan, plan=plan,
+                replan_threshold=replan_threshold,
+            )
         tasks = self._check_tasks(tasks)
         pplan = plan if plan is not None else self.plan(tasks)
         self._check_plan_matches(pplan, tasks)
@@ -705,6 +987,91 @@ class Session:
             overlap_migration=self.overlap_migration,
         )
 
+    def _run_dag(
+        self,
+        tasks: Sequence[OperatorTask],
+        replan: Optional[str],
+        plan,
+        replan_threshold: Optional[float],
+    ) -> SessionRunResult:
+        """DAG scheduler: dependency-ordered execution + overlapped makespan.
+
+        Tasks execute one at a time against the shared ledger (the simulator
+        is single-threaded), picking the lowest-index ready task — so a
+        linear chain is byte-identical to the serial path, labels included.
+        Concurrency is *modeled*: each task's ledger delta decomposes into
+        per-tier work chunks (:func:`delta_chunks`) and
+        :func:`playback_dag` replays them with ready tasks from independent
+        subtrees sharing each tier's bandwidth — the same event clock the
+        multi-tenant ``Server`` uses cross-query, re-used intra-query.
+        """
+        tasks = self._check_tasks(tasks, dag=True)
+        pplan = plan if plan is not None else self.plan(tasks, dag=True)
+        self._check_plan_matches(pplan, tasks)
+        deps = self._dag_deps(tasks)
+        n = len(tasks)
+        budgets = list(pplan.ops)
+        cur_stats = [ob.stats for ob in budgets]
+        replanned = [False] * n
+        outputs: Dict[int, Any] = {}
+        events: List[ReplanEvent] = []
+        per_task: List[TaskRun] = []
+        chunks: List[Any] = [None] * n
+        done = [False] * n
+
+        self._run_seq += 1
+        run_label = f"session-run{self._run_seq}"
+        sched = self.scheduler
+        sched.checkpoint(run_label)
+        try:
+            for _ in range(n):
+                i = next(
+                    j for j in range(n)
+                    if not done[j] and all(done[d] for d in deps[j])
+                )
+                task, ob = tasks[i], budgets[i]
+                tr = self.exec_task(
+                    task, ob, outputs=outputs, stats=cur_stats[i],
+                    label=f"{run_label}/{i}", replanned=replanned[i],
+                )
+                measured = tr.measured
+                cur_stats[i] = measured
+                per_task.append(tr)
+                chunks[i] = delta_chunks(
+                    tr.delta, self.hierarchy, self.tier,
+                    overlap_migration=self.overlap_migration,
+                )
+                done[i] = True
+                remaining = [j for j in range(n) if not done[j]]
+                if replan == "measured" and remaining:
+                    self.propagate_measured(
+                        tasks, cur_stats, outputs, i, targets=remaining
+                    )
+                    if (replan_threshold is not None
+                            and self.estimate_error(ob.stats, measured)
+                            <= replan_threshold):
+                        continue
+                    budget_rem = self.budget - sum(
+                        budgets[k].m_pages for k in range(n) if done[k]
+                    )
+                    event = self._replan_indices(
+                        tasks, budgets, cur_stats, remaining, budget_rem,
+                        i, measured,
+                    )
+                    if event is not None:
+                        events.append(event)
+                        for j in remaining:
+                            replanned[j] = True
+            total = sched.since(run_label)
+        finally:
+            sched.drop_checkpoint(run_label)
+        return SessionRunResult(
+            per_task=per_task, total=total, plan=pplan, replan_events=events,
+            tier=self.tier, hierarchy=self.hierarchy,
+            overlap_migration=self.overlap_migration,
+            schedule="dag", makespan_seconds=playback_dag(chunks, deps),
+        )
+
     # -- mid-pipeline re-arbitration ------------------------------------------
 
     @staticmethod
@@ -713,17 +1080,23 @@ class Session:
         cur_stats: List[WorkloadStats],
         outputs: Mapping[int, Any],
         done: int,
+        targets: Optional[Sequence[int]] = None,
     ) -> None:
         """Feed task ``done``'s measured output sizes into downstream stats.
 
         Updates ``cur_stats`` in place for every later task whose input binds
         to the finished task's output (the operator's ``input_stats`` mapping
-        names the stats field the input sizes).  Pure stats bookkeeping — no
-        arbitration — so callers can propagate measurements even when a
-        replan threshold suppresses the re-split itself.
+        names the stats field the input sizes).  ``targets`` restricts the
+        update to specific task indices (the DAG scheduler passes its
+        unfinished frontier; the default is every later list position).
+        Pure stats bookkeeping — no arbitration — so callers can propagate
+        measurements even when a replan threshold suppresses the re-split
+        itself.
         """
         finished_task = tasks[done]
-        for j in range(done + 1, len(tasks)):
+        if targets is None:
+            targets = range(done + 1, len(tasks))
+        for j in targets:
             spec_j = get(tasks[j].op)
             for name, value in tasks[j].inputs.items():
                 if not (isinstance(value, TaskOutput)
@@ -754,10 +1127,30 @@ class Session:
         split changed, ``None`` when the re-arbitration confirmed the current
         plan (or was infeasible, in which case the current plan is kept).
         """
-        finished_task = tasks[done]
         remaining = list(range(done + 1, len(tasks)))
         budget_rem = self.budget - sum(budgets[k].m_pages
                                        for k in range(done + 1))
+        return self._replan_indices(
+            tasks, budgets, cur_stats, remaining, budget_rem, done, measured
+        )
+
+    def _replan_indices(
+        self,
+        tasks: Sequence[OperatorTask],
+        budgets: List[Any],
+        cur_stats: List[WorkloadStats],
+        remaining: Sequence[int],
+        budget_rem: float,
+        done: int,
+        measured: WorkloadStats,
+    ) -> Optional[ReplanEvent]:
+        """Re-arbitrate ``budget_rem`` over the ``remaining`` task indices.
+
+        The index-list generalization shared by the serial tail replan and
+        the DAG scheduler's frontier replan (the frontier is not a list
+        suffix once independent subtrees interleave).
+        """
+        finished_task = tasks[done]
         before_m = tuple(budgets[j].m_pages for j in remaining)
         before_p = tuple(budgets[j].placement for j in remaining)
         # Price the *old* split at the *updated* stats, so before/after in the
@@ -893,6 +1286,7 @@ class Session:
         alloc, placement, _ = arbitrate_hierarchy(
             items, budget, capacities, step=self.step, occupied=occupied,
             eviction=self.evictor is not None,
+            pinned_tiers=self._task_pins(tasks),
         )
         return [
             OperatorBudget(

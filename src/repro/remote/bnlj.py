@@ -16,8 +16,8 @@ import numpy as np
 
 from repro.core.policies import BNLJPlan
 from repro.engine.buffers import BufferPool, PageCursor
-from repro.engine.scheduler import TransferScheduler
-from repro.remote.simulator import Relation, RemoteMemory
+from repro.engine.scheduler import TransferScheduler, stream_tiers
+from repro.remote.simulator import Relation, RemoteMemory, as_relation
 
 
 # Typed input signature for the session API: ``engine.registry`` binds named
@@ -25,6 +25,10 @@ from repro.remote.simulator import Relation, RemoteMemory
 # maps each input to the WorkloadStats field that estimates its size.
 INPUTS = ("outer", "inner")
 INPUT_STATS = {"outer": "size_r", "inner": "size_s"}
+
+# Spill streams this operator writes, in declaration order — the unit of
+# fractional placement (``tier=`` may map each to a different tier).
+STREAMS = ("output",)
 
 
 @dataclasses.dataclass
@@ -73,20 +77,26 @@ def bnlj(
     inner: Relation,
     plan: BNLJPlan,
     prefetch: bool = False,
-    tier: int | str | None = None,
+    tier=None,
 ) -> JoinResult:
     """Run BNLJ with the given buffer plan; returns output + ledger deltas.
 
     ``remote`` is a single tier or a :class:`MemoryHierarchy`; on a
-    hierarchy, ``tier`` names the placement the output spill is routed to.
+    hierarchy, ``tier`` names the placement the output spill is routed to —
+    a scalar, or a per-stream spec over ``STREAMS`` (see ``stream_tiers``).
+    ``outer`` / ``inner`` accept a ``Relation`` or a bare page-id list
+    (a DAG upstream's output), coerced via ``as_relation``.
     """
+    outer = as_relation(remote, outer)
+    inner = as_relation(remote, inner)
+    tiers = stream_tiers(tier, STREAMS)
     p_r = max(1, int(round(plan.outer_pages)))
     p_s = max(1, int(round(plan.inner_pages)))
     r_out = max(1, int(round(plan.output_pages)))
 
-    sched = TransferScheduler(remote, tier=tier)
+    sched = TransferScheduler(remote, tier=tiers["output"])
     before = sched.snapshot()
-    out_pool = BufferPool(sched, r_out, outer.rows_per_page)
+    out_pool = BufferPool(sched, r_out, outer.rows_per_page, tier=tiers["output"])
 
     for r_block in PageCursor(sched, outer.page_ids, p_r).blocks():
         # Inner stream is sequential and predictable: prefetchable (§IV-E);

@@ -23,8 +23,8 @@ import numpy as np
 
 from repro.core.policies import EAggPlan
 from repro.engine.buffers import BufferPool, PageCursor
-from repro.engine.scheduler import TransferScheduler
-from repro.remote.simulator import Relation, RemoteMemory, relation_rows
+from repro.engine.scheduler import TransferScheduler, stream_tiers
+from repro.remote.simulator import Relation, RemoteMemory, as_relation, relation_rows
 
 
 # Typed input signature for the session API: ``engine.registry`` binds named
@@ -32,6 +32,11 @@ from repro.remote.simulator import Relation, RemoteMemory, relation_rows
 # maps each input to the WorkloadStats field that estimates its size.
 INPUTS = ("rel",)
 INPUT_STATS = {"rel": "size_r"}
+
+# Spill streams this operator writes, in declaration order — the unit of
+# fractional placement: raw spilled partitions vs. the group output
+# (resident P1 groups and external P2 groups share the output stream tier).
+STREAMS = ("partitions", "output")
 
 
 @dataclasses.dataclass
@@ -77,19 +82,22 @@ def eagg(
     plan: EAggPlan,
     rows_per_page: int | None = None,
     prefetch: bool = False,
-    tier: int | str | None = None,
+    tier=None,
 ) -> AggResult:
     """Run the two-phase external hash aggregation under ``plan``.
 
     ``remote`` is a single tier or a :class:`MemoryHierarchy`; on a
     hierarchy, ``tier`` names the placement spilled partitions and group
-    output are routed to.
+    output are routed to — a scalar, or a per-stream spec over ``STREAMS``.
+    ``rel`` accepts a ``Relation`` or a bare page-id list.
     """
+    rel = as_relation(remote, rel)
+    tiers = stream_tiers(tier, STREAMS)
     rows_per_page = rows_per_page or rel.rows_per_page
     p = plan.partitions
     n_spilled = int(round(plan.sigma * p))
     spilled = set(range(p - n_spilled, p))  # deterministic spill set
-    sched = TransferScheduler(remote, tier=tier)
+    sched = TransferScheduler(remote, tier=tiers["output"])
     before = sched.snapshot()
     phase_rounds: Dict[str, int] = {}
 
@@ -97,7 +105,8 @@ def eagg(
     t0 = sched.snapshot()
     r_r1, r_w1, r_o1 = plan.p1
     spill_pool = BufferPool(sched, r_w1, rows_per_page,
-                            n_streams=max(len(spilled), 1))
+                            n_streams=max(len(spilled), 1),
+                            tier=tiers["partitions"])
     resident: Dict[int, List[np.ndarray]] = {q: [] for q in range(p) if q not in spilled}
     for rows in PageCursor(sched, rel.page_ids, round(r_r1),
                            prefetch=prefetch).blocks():
@@ -109,7 +118,7 @@ def eagg(
             else:
                 resident[int(q)].append(sel)
     spill_pool.flush_all()
-    out_pool = BufferPool(sched, r_o1, rows_per_page)
+    out_pool = BufferPool(sched, r_o1, rows_per_page, tier=tiers["output"])
     group_rows = 0
     for q in sorted(resident):
         if not resident[q]:
@@ -124,7 +133,7 @@ def eagg(
     t0 = sched.snapshot()
     r_r2, r_o2 = plan.p2
     read_pages = round(r_r2)
-    ext_out_pool = BufferPool(sched, r_o2, rows_per_page)
+    ext_out_pool = BufferPool(sched, r_o2, rows_per_page, tier=tiers["output"])
     for q in sorted(spilled):
         ids = spill_pool.pages(q)
         if not ids:

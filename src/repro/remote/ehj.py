@@ -20,9 +20,9 @@ import numpy as np
 
 from repro.core.policies import EHJPlan
 from repro.engine.buffers import BufferPool, PageCursor
-from repro.engine.scheduler import TransferScheduler
+from repro.engine.scheduler import TransferScheduler, stream_tiers
 from repro.remote.bnlj import _block_join
-from repro.remote.simulator import Relation, RemoteMemory, relation_rows
+from repro.remote.simulator import Relation, RemoteMemory, as_relation, relation_rows
 
 
 # Typed input signature for the session API: ``engine.registry`` binds named
@@ -30,6 +30,11 @@ from repro.remote.simulator import Relation, RemoteMemory, relation_rows
 # maps each input to the WorkloadStats field that estimates its size.
 INPUTS = ("build", "probe")
 INPUT_STATS = {"build": "size_r", "probe": "size_s"}
+
+# Spill streams this operator writes, in declaration order — the unit of
+# fractional placement: spilled build partitions, staged probe tuples, and
+# the join output (resident + external rounds share the output stream tier).
+STREAMS = ("build", "stage", "output")
 
 
 @dataclasses.dataclass
@@ -66,19 +71,24 @@ def ehj(
     plan: EHJPlan,
     rows_per_page: int | None = None,
     prefetch: bool = False,
-    tier: int | str | None = None,
+    tier=None,
 ) -> HashJoinResult:
     """Run the three-phase external hash join under `plan`.
 
     ``remote`` is a single tier or a :class:`MemoryHierarchy`; on a
     hierarchy, ``tier`` names the placement spilled partitions and output
-    are routed to.
+    are routed to — a scalar, or a per-stream spec over ``STREAMS`` (e.g.
+    spilled build partitions on DRAM, staged probe tuples on SSD).
+    ``build`` / ``probe`` accept a ``Relation`` or a bare page-id list.
     """
+    build = as_relation(remote, build)
+    probe = as_relation(remote, probe)
+    tiers = stream_tiers(tier, STREAMS)
     rows_per_page = rows_per_page or build.rows_per_page
     p = plan.partitions
     n_spilled = int(round(plan.sigma * p))
     spilled = set(range(p - n_spilled, p))  # deterministic spill set
-    sched = TransferScheduler(remote, tier=tier)
+    sched = TransferScheduler(remote, tier=tiers["output"])
     before = sched.snapshot()
     phase_rounds: Dict[str, int] = {}
 
@@ -90,7 +100,8 @@ def ehj(
     t0 = sched.snapshot()
     r_r1, r_w1 = plan.p1
     build_pool = BufferPool(sched, r_w1, rows_per_page,
-                            n_streams=max(len(spilled), 1))
+                            n_streams=max(len(spilled), 1),
+                            tier=tiers["build"])
     resident_build: Dict[int, List[np.ndarray]] = {q: [] for q in range(p) if q not in spilled}
     for rows in PageCursor(sched, build.page_ids, round(r_r1),
                            prefetch=prefetch).blocks():
@@ -112,8 +123,9 @@ def ehj(
     t0 = sched.snapshot()
     r_r2, r_s2, r_o2 = plan.p2
     stage_pool = BufferPool(sched, r_s2, rows_per_page,
-                            n_streams=max(len(spilled), 1))
-    out_pool = BufferPool(sched, r_o2, rows_per_page)
+                            n_streams=max(len(spilled), 1),
+                            tier=tiers["stage"])
+    out_pool = BufferPool(sched, r_o2, rows_per_page, tier=tiers["output"])
     output_rows = 0
     for rows in PageCursor(sched, probe.page_ids, round(r_r2),
                            prefetch=prefetch).blocks():
@@ -134,7 +146,7 @@ def ehj(
     t0 = sched.snapshot()
     r_r3, r_o3 = plan.p3
     read_pages = round(r_r3)
-    ext_out_pool = BufferPool(sched, r_o3, rows_per_page)
+    ext_out_pool = BufferPool(sched, r_o3, rows_per_page, tier=tiers["output"])
     for q in sorted(spilled):
         b_ids = build_pool.pages(q)
         q_ids = stage_pool.pages(q)

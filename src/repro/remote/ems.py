@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.policies import EMSPlan
 from repro.engine.buffers import BufferPool, PageCursor
-from repro.engine.scheduler import TransferScheduler
+from repro.engine.scheduler import TransferScheduler, stream_tiers
 from repro.remote.simulator import RemoteMemory
 
 
@@ -27,6 +27,10 @@ from repro.remote.simulator import RemoteMemory
 # and maps each input to the WorkloadStats field that estimates its size.
 INPUTS = ("page_ids",)
 INPUT_STATS = {"page_ids": "size_r"}
+
+# Spill streams this operator writes, in declaration order — the unit of
+# fractional placement: intermediate sorted runs vs. the final merged output.
+STREAMS = ("runs", "output")
 
 
 @dataclasses.dataclass
@@ -55,6 +59,7 @@ def _merge_group(
     plan: EMSPlan,
     rows_per_page: int,
     prefetch: bool,
+    out_tier=None,
 ) -> List[int]:
     """Merge up to k runs into one; returns the new run's page ids."""
     per_run = max(1, int(plan.input_pages) // max(len(runs), 1))
@@ -62,7 +67,7 @@ def _merge_group(
     cursors = [
         PageCursor(sched, r, per_run, prefetch=prefetch, ravel=True) for r in runs
     ]
-    out_pool = BufferPool(sched, r_out, rows_per_page)
+    out_pool = BufferPool(sched, r_out, rows_per_page, tier=out_tier)
 
     while True:
         for c in cursors:
@@ -95,14 +100,19 @@ def ems_sort(
     rows_per_page: int,
     prefetch: bool = False,
     count_run_formation: bool = True,
-    tier: int | str | None = None,
+    tier=None,
 ) -> SortResult:
     """Full external merge sort of the pages' int64 keys under `plan`.
 
     ``remote`` is a single tier or a :class:`MemoryHierarchy`; on a
-    hierarchy, ``tier`` names the placement runs and merge output spill to.
+    hierarchy, ``tier`` names the placement runs and merge output spill to —
+    a scalar, or a per-stream spec over ``STREAMS`` routing intermediate
+    runs and the final merged output to different tiers.
     """
-    sched = TransferScheduler(remote, tier=tier)
+    if hasattr(page_ids, "page_ids"):  # accept a Relation (DAG scan output)
+        page_ids = list(page_ids.page_ids)
+    tiers = stream_tiers(tier, STREAMS)
+    sched = TransferScheduler(remote, tier=tiers["output"])
     before = sched.snapshot()
     m_pages = max(1, int(plan.m))
 
@@ -117,20 +127,28 @@ def ems_sort(
         data = np.sort(np.concatenate([p.ravel() for p in pages]), kind="stable")
         out_pages = [data[i : i + rows_per_page] for i in range(0, len(data), rows_per_page)]
         if count_run_formation:
-            runs.append(sched.write(out_pages))  # 1 round
+            runs.append(sched.write(out_pages, tier=tiers["runs"]))  # 1 round
         else:
             runs.append(remote.put_local(out_pages))
 
     # ---- merge passes (Algorithm 2) ----------------------------------------
     passes = 0
     while len(runs) > 1:
+        # The last pass (a single merge group) writes the *output* stream;
+        # every earlier pass writes intermediate runs.
+        final = len(runs) <= plan.k
+        out_tier = tiers["output"] if final else tiers["runs"]
         nxt: List[List[int]] = []
         for g in range(0, len(runs), plan.k):
             group = runs[g : g + plan.k]
             if len(group) == 1:
                 nxt.append(group[0])
             else:
-                nxt.append(_merge_group(sched, group, plan, rows_per_page, prefetch))
+                nxt.append(
+                    _merge_group(
+                        sched, group, plan, rows_per_page, prefetch, out_tier=out_tier
+                    )
+                )
         runs = nxt
         passes += 1
 

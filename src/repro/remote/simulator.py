@@ -471,6 +471,26 @@ class Relation:
         return len(self.page_ids)
 
 
+def as_relation(remote, value, rows_per_page: Optional[int] = None) -> Relation:
+    """Coerce ``value`` (a ``Relation`` or a page-id list) into a ``Relation``.
+
+    Session task DAGs chain operators by page-id lists — a ``TaskOutput``
+    resolves to the upstream operator's flushed output pages — while the
+    relational operators (BNLJ/EHJ/EAGG) take ``Relation`` inputs.  Row
+    geometry is recovered by peeking the pages oracle-side: bookkeeping,
+    not a transfer round, so ledgers are unaffected.
+    """
+    if isinstance(value, Relation):
+        return value
+    ids = [int(p) for p in value]
+    if not ids:
+        return Relation(page_ids=[], rows_per_page=rows_per_page or 1, total_rows=0)
+    pages = remote.peek_batch(ids)
+    total = int(sum(len(p) for p in pages))
+    rpp = rows_per_page or max(len(p) for p in pages)
+    return Relation(page_ids=ids, rows_per_page=int(rpp), total_rows=total)
+
+
 def _seed_pages(remote, pages, tier) -> List[int]:
     """Route seeding to a tier when asked (hierarchies only)."""
     if tier is None:

@@ -1,9 +1,15 @@
-"""Batched serving loop: continuous batching over a prefill/decode engine.
+"""LM serving shim over the engine's serving surface (continuous batching).
 
-Requests queue up; the engine keeps a fixed decode batch, prefills new
-requests into free slots (padding their KV into the shared cache length),
-and steps all active slots together — one `decode_step` per token across the
-whole batch.  Slot release on EOS/length gives continuous batching.
+The generic serving machinery lives in :mod:`repro.engine.server` — see the
+README migration table: :class:`~repro.engine.server.Server` /
+:class:`~repro.engine.server.QueryRequest` serve query pipelines on a shared
+memory hierarchy, and :class:`~repro.engine.server.SlotLoop` is the
+continuous-batching slot discipline both surfaces share.  This module keeps
+the LM decode surface (``Request`` / ``ServeEngine``) as a thin shim: the
+prefill/decode_step model calls stay here, while the batching loop — free
+slots refill FIFO, every active request decodes one token per quantum, slot
+release on EOS/length — is ``SlotLoop`` verbatim, not a parallel
+implementation.
 """
 
 from __future__ import annotations
@@ -16,7 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.engine.server import QueryRequest, Server, SlotLoop
 from repro.models import transformer as tf
+
+__all__ = ["Request", "ServeEngine", "QueryRequest", "Server", "SlotLoop"]
 
 
 @dataclasses.dataclass
@@ -36,10 +45,8 @@ class ServeEngine:
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.batch_slots = batch_slots
         self.eos_id = eos_id
-        self.pos = 0
-        self.caches = None
         self._decode = jax.jit(
             lambda p, c, t, pos: tf.decode_step(p, cfg, c, t, pos))
 
@@ -53,30 +60,27 @@ class ServeEngine:
 
     def submit(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Run all requests to completion with continuous batching."""
-        pending = list(requests)
         results: Dict[int, List[int]] = {}
-        # Reference implementation: per-request caches batched along slots.
-        active: List[dict] = []
-        while pending or active:
-            while pending and len(active) < len(self.slots):
-                req = pending.pop(0)
-                caches, plen = self._prefill_request(req)
-                active.append({"req": req, "caches": caches, "pos": plen})
-            # Step every active request one token.
-            for entry in list(active):
-                req = entry["req"]
-                token = jnp.asarray([req.out_tokens[-1]], jnp.int32)
-                logits, new_caches = self._decode(
-                    self.params, entry["caches"], token,
-                    jnp.asarray(entry["pos"], jnp.int32))
-                entry["caches"] = new_caches
-                entry["pos"] += 1
-                nxt = int(jnp.argmax(logits[0]))
-                req.out_tokens.append(nxt)
-                if (len(req.out_tokens) >= req.max_new_tokens
-                        or (self.eos_id is not None and nxt == self.eos_id)
-                        or entry["pos"] >= self.max_len - 1):
-                    req.done = True
-                    results[req.rid] = req.out_tokens
-                    active.remove(entry)
+
+        def start(req: Request) -> dict:
+            caches, plen = self._prefill_request(req)
+            return {"caches": caches, "pos": plen}
+
+        def step(req: Request, entry: dict) -> bool:
+            token = jnp.asarray([req.out_tokens[-1]], jnp.int32)
+            logits, entry["caches"] = self._decode(
+                self.params, entry["caches"], token,
+                jnp.asarray(entry["pos"], jnp.int32))
+            entry["pos"] += 1
+            nxt = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(nxt)
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or (self.eos_id is not None and nxt == self.eos_id)
+                    or entry["pos"] >= self.max_len - 1):
+                req.done = True
+                results[req.rid] = req.out_tokens
+                return True
+            return False
+
+        SlotLoop(self.batch_slots, start, step).run(requests)
         return results

@@ -1,0 +1,235 @@
+"""DAG scheduler suite (ISSUE 7): wiring validation + execution properties.
+
+Fail-fast wiring errors: cyclic ``inputs=``, references to tasks outside the
+run, and duplicate task names/objects each raise ``ValueError`` naming the
+offending task.
+
+Property tests (hypothesis, with the deterministic conftest fallback) drive
+random task DAGs through ``session.run(schedule="dag")``, pinning:
+
+  * tasks execute in a valid topological order of the ``inputs=`` edges;
+  * per-task ledger deltas sum byte-for-byte to the run total (with and
+    without ``replan="measured"``);
+  * the overlapped makespan never exceeds the serial Eq.-(1) latency;
+  * a linear-chain DAG reproduces the PR 5 list-pipeline ledgers exactly —
+    same per-task deltas, same totals, same labels.
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import TABLE_I
+from repro.engine import Session, WorkloadStats
+from repro.engine.registry import hierarchy_spec
+from repro.remote import make_relation
+
+ROWS = 8
+
+
+def _hier():
+    return hierarchy_spec(
+        (TABLE_I["dram"], 64), (TABLE_I["rdma"], 512), TABLE_I["ssd"])
+
+
+def _seed(sess, pages, seed):
+    return make_relation(sess.remote, pages * ROWS, ROWS, 64, seed=seed)
+
+
+def _chain(sess):
+    """join -> sort chain over seeded relations (the PR 5 pipeline shape)."""
+    build = _seed(sess, 24, seed=11)
+    probe = _seed(sess, 48, seed=12)
+    join = sess.task(
+        "ehj", WorkloadStats(size_r=24, size_s=48, out=48, partitions=8,
+                             sigma=0.5),
+        inputs={"build": build, "probe": probe}, rows_per_page=ROWS,
+    )
+    sort = sess.task(
+        "ems", WorkloadStats(size_r=48, out=48, k_cap=8),
+        inputs={"page_ids": join.output}, rows_per_page=ROWS,
+    )
+    return [join, sort]
+
+
+# --------------------------------------------------------------------------
+# Fail-fast wiring validation
+# --------------------------------------------------------------------------
+
+
+def test_dag_cycle_raises_naming_task():
+    sess = Session(_hier(), budget=64)
+    tasks = _chain(sess)
+    # Close the loop: the join consumes the sort's output.
+    tasks[0].inputs["probe"] = tasks[1].output
+    with pytest.raises(ValueError, match="cycle") as ei:
+        sess.run(tasks, schedule="dag")
+    assert tasks[0].label in str(ei.value) or tasks[1].label in str(ei.value)
+
+
+def test_dag_foreign_reference_raises_naming_both_tasks():
+    sess = Session(_hier(), budget=64)
+    tasks = _chain(sess)
+    outsider = sess.task(
+        "eagg", WorkloadStats(size_r=24, out=8, partitions=8, sigma=0.5),
+        inputs={"rel": _seed(sess, 24, seed=13)}, label="outsider",
+    )
+    tasks[1].inputs["page_ids"] = outsider.output
+    with pytest.raises(ValueError, match="not part of this run") as ei:
+        sess.run(tasks, schedule="dag")
+    assert "outsider" in str(ei.value)
+    assert tasks[1].label in str(ei.value)
+
+
+def test_dag_duplicate_label_raises():
+    sess = Session(_hier(), budget=64)
+    a = sess.task("eagg", WorkloadStats(size_r=24, out=8, partitions=8,
+                                        sigma=0.5),
+                  inputs={"rel": _seed(sess, 24, seed=14)}, label="dup")
+    b = sess.task("eagg", WorkloadStats(size_r=24, out=8, partitions=8,
+                                        sigma=0.5),
+                  inputs={"rel": _seed(sess, 24, seed=15)}, label="dup")
+    with pytest.raises(ValueError, match="duplicate task name 'dup'"):
+        sess.run([a, b], schedule="dag")
+
+
+def test_dag_duplicate_object_raises():
+    sess = Session(_hier(), budget=64)
+    a = sess.task("eagg", WorkloadStats(size_r=24, out=8, partitions=8,
+                                        sigma=0.5),
+                  inputs={"rel": _seed(sess, 24, seed=16)})
+    with pytest.raises(ValueError, match="appears twice"):
+        sess.run([a, a], schedule="dag")
+
+
+def test_serial_schedule_still_requires_list_order():
+    sess = Session(_hier(), budget=64)
+    tasks = _chain(sess)
+    with pytest.raises(ValueError, match="does not run earlier"):
+        sess.run(list(reversed(tasks)))
+
+
+def test_dag_accepts_any_list_order():
+    sess = Session(_hier(), budget=64)
+    tasks = _chain(sess)
+    res = sess.run(list(reversed(tasks)), schedule="dag")
+    # Producer first despite the reversed list.
+    assert [tr.op for tr in res.per_task] == ["ehj", "ems"]
+
+
+def test_bad_schedule_raises():
+    sess = Session(_hier(), budget=64)
+    with pytest.raises(ValueError, match="schedule"):
+        sess.run(_chain(sess), schedule="parallel")
+
+
+# --------------------------------------------------------------------------
+# Random-DAG properties
+# --------------------------------------------------------------------------
+
+_OPS = ["ehj", "eagg", "ems", "bnlj"]
+
+
+def _build_dag(sess, shape):
+    """Materialize a random DAG: each task binds inputs to earlier outputs.
+
+    ``shape`` is a list of (op_index, [use_dep_flag per input]) pairs; input
+    slot k of task j binds to task (j - 1 - k)'s output when flagged (always
+    acyclic), else to a freshly seeded relation.
+    """
+    tasks = []
+    deps = []
+    for j, (op_i, flags) in enumerate(shape):
+        op = _OPS[op_i]
+        spec_inputs = {"ehj": ("build", "probe"), "eagg": ("rel",),
+                       "ems": ("page_ids",), "bnlj": ("outer", "inner")}[op]
+        inputs = {}
+        jdeps = set()
+        for k, name in enumerate(spec_inputs):
+            d = j - 1 - k
+            # A sort's output is a raveled key stream — only another sort
+            # can consume it (the hash operators need (key, payload) rows).
+            ok = d >= 0 and (op == "ems" or shape[d][0] != _OPS.index("ems"))
+            if flags[k % len(flags)] and ok:
+                inputs[name] = tasks[d].output
+                jdeps.add(d)
+            else:
+                inputs[name] = _seed(sess, 12 + 4 * k, seed=100 + 10 * j + k)
+        stats = WorkloadStats(size_r=16, size_s=16, out=16, partitions=8,
+                              sigma=0.5, k_cap=8)
+        kwargs = {} if op == "bnlj" else {"rows_per_page": ROWS}
+        tasks.append(sess.task(op, stats, inputs=inputs, **kwargs))
+        deps.append(jdeps)
+    return tasks, deps
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    codes=st.lists(st.integers(min_value=0, max_value=15),
+                   min_size=2, max_size=4),
+    replan=st.booleans(),
+)
+def test_random_dags_topo_order_and_ledger_sums(codes, replan):
+    # Each code packs one task: op = low 2 bits, input-edge flags above.
+    shape = [(v % len(_OPS), [bool(v & 4), bool(v & 8)]) for v in codes]
+    sess = Session(_hier(), budget=96)
+    tasks, deps = _build_dag(sess, shape)
+    res = sess.run(tasks, schedule="dag",
+                   replan="measured" if replan else None)
+
+    # Execution order is a valid topological order of the inputs= edges.
+    index = {id(t): j for j, t in enumerate(tasks)}
+    order = [index[id(tr.task)] for tr in res.per_task]
+    assert sorted(order) == list(range(len(tasks)))
+    pos = {j: rank for rank, j in enumerate(order)}
+    for j, jdeps in enumerate(deps):
+        for d in jdeps:
+            assert pos[d] < pos[j], (order, deps)
+
+    # Per-task ledger deltas sum byte-for-byte to the run total.
+    acc = res.per_task[0].delta
+    for tr in res.per_task[1:]:
+        acc = acc + tr.delta
+    assert acc == res.total
+
+    # Overlapped makespan never exceeds the serial Eq.-(1) latency.
+    assert res.schedule == "dag"
+    assert res.makespan_seconds <= res.latency_seconds() + 1e-9
+
+
+# --------------------------------------------------------------------------
+# Linear-chain parity with the PR 5 list pipeline
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("target_fn", [_hier, lambda: TABLE_I["tcp"]],
+                         ids=["hierarchy", "single_tier"])
+def test_linear_chain_reproduces_list_pipeline_ledgers(target_fn):
+    serial_sess = Session(target_fn(), budget=64)
+    res_serial = serial_sess.run(_chain(serial_sess))
+
+    dag_sess = Session(target_fn(), budget=64)
+    res_dag = dag_sess.run(_chain(dag_sess), schedule="dag")
+
+    assert [tr.label for tr in res_dag.per_task] == \
+        [tr.label for tr in res_serial.per_task]
+    for a, b in zip(res_serial.per_task, res_dag.per_task):
+        assert a.delta == b.delta  # byte-for-byte, every counter
+    assert res_serial.total == res_dag.total
+    # A chain has no overlap: the makespan IS the serial latency.
+    assert res_dag.makespan_seconds == pytest.approx(
+        res_serial.latency_seconds(), rel=1e-12)
+
+
+def test_linear_chain_parity_with_replan_measured():
+    serial_sess = Session(_hier(), budget=64)
+    res_serial = serial_sess.run(_chain(serial_sess), replan="measured")
+
+    dag_sess = Session(_hier(), budget=64)
+    res_dag = dag_sess.run(_chain(dag_sess), schedule="dag",
+                           replan="measured")
+
+    for a, b in zip(res_serial.per_task, res_dag.per_task):
+        assert a.delta == b.delta
+    assert res_serial.total == res_dag.total
+    assert len(res_serial.replan_events) == len(res_dag.replan_events)

@@ -1,0 +1,241 @@
+"""Logical-plan frontend suite (ISSUE 7): lowering, join-order choice, and
+fractional per-stream placement on the public session surface."""
+
+import numpy as np
+import pytest
+
+from repro.core import TABLE_I
+from repro.engine import Session, WorkloadStats
+from repro.engine.plan import LogicalPlan, compile_plan
+from repro.engine.registry import hierarchy_spec
+from repro.remote import make_relation
+
+ROWS = 8
+
+
+def _hier(dram=64):
+    return hierarchy_spec(
+        (TABLE_I["dram"], dram), (TABLE_I["rdma"], 512), TABLE_I["ssd"])
+
+
+def _q3ish(sess):
+    """lineitem |><| orders |><| customer -> group-by -> order-by."""
+    li = make_relation(sess.remote, 48 * ROWS, ROWS, 96, seed=21)
+    o = make_relation(sess.remote, 24 * ROWS, ROWS, 96, seed=22)
+    c = make_relation(sess.remote, 12 * ROWS, ROWS, 96, seed=23)
+    lp = LogicalPlan("q3")
+    l_n = lp.scan("lineitem", li, rows_per_page=ROWS)
+    o_n = lp.scan("orders", o, rows_per_page=ROWS)
+    c_n = lp.filter(lp.scan("customer", c, rows_per_page=ROWS), 0.5)
+    j = lp.join(lp.join(l_n, o_n, out_pages=48.0), c_n, out_pages=48.0,
+                sigma=0.5, partitions=8)
+    lp.sort(lp.aggregate(j, out_pages=12.0, sigma=0.5, partitions=8), k_cap=8)
+    return lp
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+
+
+def test_compile_lowers_to_dependency_ordered_dag():
+    sess = Session(_hier(), budget=64)
+    cp = compile_plan(sess, _q3ish(sess))
+    assert [t.op for t in cp.tasks] == ["ehj", "ehj", "eagg", "ems"]
+    assert cp.root is cp.tasks[-1]
+    assert cp.output.task is cp.root
+    res = cp.run(sess)
+    assert res.schedule == "dag"
+    assert res.makespan_seconds <= res.latency_seconds() + 1e-9
+    # The sort's output is the sorted group keys, fully materialized.
+    final = np.concatenate([
+        p.ravel()
+        for p in sess.remote.peek_batch(res.per_task[-1].result.run_page_ids)
+    ])
+    assert (np.diff(final) >= 0).all()
+
+
+def test_compiled_chain_matches_hand_wired_tasks_byte_for_byte():
+    """optimize=False on a chain == the hand-wired PR 5 task list."""
+    a_sess = Session(_hier(), budget=64)
+    lp = LogicalPlan("q")
+    l_n = lp.scan("l", make_relation(a_sess.remote, 24 * ROWS, ROWS, 64,
+                                     seed=31), rows_per_page=ROWS)
+    r_n = lp.scan("r", make_relation(a_sess.remote, 12 * ROWS, ROWS, 64,
+                                     seed=32), rows_per_page=ROWS)
+    lp.sort(lp.join(l_n, r_n, out_pages=24.0, sigma=0.5, partitions=8),
+            k_cap=8)
+    res_a = compile_plan(a_sess, lp, optimize=False).run(
+        a_sess, schedule="serial")
+
+    b_sess = Session(_hier(), budget=64)
+    build = make_relation(b_sess.remote, 24 * ROWS, ROWS, 64, seed=31)
+    probe = make_relation(b_sess.remote, 12 * ROWS, ROWS, 64, seed=32)
+    join = b_sess.task(
+        "ehj", WorkloadStats(size_r=24, size_s=12, out=24, sigma=0.5,
+                             partitions=8),
+        inputs={"build": build, "probe": probe}, rows_per_page=ROWS,
+    )
+    sort = b_sess.task(
+        "ems", WorkloadStats(size_r=24, out=24, k_cap=8),
+        inputs={"page_ids": join.output}, rows_per_page=ROWS,
+    )
+    res_b = b_sess.run([join, sort])
+
+    for a, b in zip(res_a.per_task, res_b.per_task):
+        assert a.delta == b.delta
+    assert res_a.total == res_b.total
+
+
+def test_q18_shape_overlaps_independent_subtrees():
+    """join(customer |><| orders, agg(lineitem)): the agg runs concurrently."""
+    sess = Session(_hier(), budget=64)
+    c = make_relation(sess.remote, 12 * ROWS, ROWS, 96, seed=41)
+    o = make_relation(sess.remote, 24 * ROWS, ROWS, 96, seed=42)
+    li = make_relation(sess.remote, 48 * ROWS, ROWS, 96, seed=43)
+    lp = LogicalPlan("q18")
+    agg = lp.aggregate(lp.scan("lineitem", li, rows_per_page=ROWS),
+                       out_pages=12.0, sigma=0.5, partitions=8)
+    lp.join(lp.join(lp.scan("customer", c, rows_per_page=ROWS),
+                    lp.scan("orders", o, rows_per_page=ROWS),
+                    out_pages=24.0),
+            agg, out_pages=24.0, sigma=0.5, partitions=8)
+    cp = compile_plan(sess, lp, optimize=False)
+    deps = Session._dag_deps(cp.tasks)
+    roots = [i for i, d in enumerate(deps) if not d]
+    assert len(roots) == 2  # the agg and the first join are independent
+    res = cp.run(sess)
+    assert res.makespan_seconds < res.latency_seconds() - 1e-12
+
+
+def test_empty_and_invalid_plans_raise():
+    sess = Session(_hier(), budget=64)
+    with pytest.raises(ValueError, match="empty"):
+        compile_plan(sess, LogicalPlan("empty"))
+    lp = LogicalPlan("scan_only")
+    lp.scan("t", make_relation(sess.remote, 8 * ROWS, ROWS, 32, seed=51))
+    with pytest.raises(ValueError, match="no operator tasks"):
+        compile_plan(sess, lp)
+    with pytest.raises(ValueError, match="join_op"):
+        lp2 = LogicalPlan("j")
+        a = lp2.scan("a", make_relation(sess.remote, 8 * ROWS, ROWS, 32,
+                                        seed=52))
+        b = lp2.scan("b", make_relation(sess.remote, 8 * ROWS, ROWS, 32,
+                                        seed=53))
+        lp2.join(a, b)
+        compile_plan(sess, lp2, join_op="sortmerge")
+    with pytest.raises(ValueError, match="selectivity"):
+        lp2.filter(a, 1.5)
+    with pytest.raises(ValueError, match="no pages"):
+        LogicalPlan("x").scan("empty", [])
+    with pytest.raises(TypeError, match="plan Node"):
+        LogicalPlan("y").filter("not-a-node", 0.5)
+
+
+# --------------------------------------------------------------------------
+# Join-order choice
+# --------------------------------------------------------------------------
+
+
+def test_join_choice_never_models_worse_than_as_written():
+    sess = Session(_hier(), budget=64)
+    cp = compile_plan(sess, _q3ish(sess))
+    assert len(cp.join_choices) == 1
+    jc = cp.join_choices[0]
+    assert jc.chosen_cost <= jc.left_deep_cost + 1e-9
+    assert jc.candidates[0][0] == "left-deep (as written)"
+    # Bounded candidate set: as-written + permutations + bushy.
+    descs = [d for d, _ in jc.candidates]
+    assert "bushy smallest-pair" in descs
+    assert jc.chosen_cost == pytest.approx(
+        min(c for _, c in jc.candidates), rel=1e-12)
+
+
+def test_optimize_false_keeps_as_written_order():
+    sess = Session(_hier(), budget=64)
+    cp = compile_plan(sess, _q3ish(sess), optimize=False)
+    assert cp.join_choices == []
+    # As written: lineitem |><| orders first, then |><| customer.
+    assert cp.tasks[0].stats.size_r == 48.0
+    assert cp.tasks[0].stats.size_s == 24.0
+
+
+def test_two_leaf_join_skips_enumeration():
+    sess = Session(_hier(), budget=64)
+    lp = LogicalPlan("q")
+    a = lp.scan("a", make_relation(sess.remote, 8 * ROWS, ROWS, 32, seed=61))
+    b = lp.scan("b", make_relation(sess.remote, 8 * ROWS, ROWS, 32, seed=62))
+    lp.join(a, b, out_pages=8.0, sigma=0.5, partitions=8)
+    cp = compile_plan(sess, lp)
+    assert cp.join_choices == []
+    assert len(cp.tasks) == 1
+
+
+# --------------------------------------------------------------------------
+# Fractional placement (per-stream tier routing) on the public surface
+# --------------------------------------------------------------------------
+
+
+def test_task_placement_routes_streams_to_named_tiers():
+    sess = Session(_hier(dram=256), budget=64)
+    build = make_relation(sess.remote, 24 * ROWS, ROWS, 64, seed=71,
+                          tier="dram")
+    probe = make_relation(sess.remote, 48 * ROWS, ROWS, 64, seed=72,
+                          tier="dram")
+    placement = {"build": "dram", "stage": "ssd", "output": "rdma"}
+    join = sess.task(
+        "ehj", WorkloadStats(size_r=24, size_s=48, out=48, sigma=0.5,
+                             partitions=8),
+        inputs={"build": build, "probe": probe}, rows_per_page=ROWS,
+        placement=placement,
+    )
+    res = sess.run([join])
+    # Every placed stream actually wrote pages on its tier.
+    for tier in ("dram", "ssd", "rdma"):
+        assert res.total.tier(tier).d_write > 0, tier
+
+
+def test_task_placement_renders_in_explain():
+    sess = Session(_hier(), budget=64)
+    join = sess.task(
+        "ehj", WorkloadStats(size_r=24, size_s=48, out=48, sigma=0.5,
+                             partitions=8),
+        placement={"build": "dram", "stage": "rdma"},
+    )
+    report = sess.explain([join])
+    te = report.tasks[0]
+    streams = {s: t for s, t, _ in te.streams}
+    assert streams["build"] == "dram"
+    assert streams["stage"] == "rdma"
+    assert "streams:" in str(report)
+    d = report.to_dict()
+    assert d["tasks"][0]["streams"][0]["stream"] in ("build", "stage",
+                                                     "output")
+
+
+def test_task_placement_validation():
+    sess = Session(_hier(), budget=64)
+    stats = WorkloadStats(size_r=24, size_s=48, out=48)
+    with pytest.raises(ValueError, match="unknown stream"):
+        sess.task("ehj", stats, placement={"hash_table": "dram"})
+    with pytest.raises(ValueError, match="placement"):
+        sess.task("ehj", stats, placement={"build": "nvme"})
+    single = Session(TABLE_I["tcp"], budget=64)
+    with pytest.raises(ValueError, match="hierarchy"):
+        single.task("ehj", stats, placement={"build": "dram"})
+
+
+def test_plan_options_reach_placement():
+    """Node options pass through: placement on a logical join node."""
+    sess = Session(_hier(), budget=64)
+    lp = LogicalPlan("q")
+    a = lp.scan("a", make_relation(sess.remote, 12 * ROWS, ROWS, 64, seed=81),
+                rows_per_page=ROWS)
+    b = lp.scan("b", make_relation(sess.remote, 24 * ROWS, ROWS, 64, seed=82),
+                rows_per_page=ROWS)
+    lp.join(a, b, out_pages=24.0, sigma=0.5, partitions=8,
+            placement={"build": "dram"})
+    cp = compile_plan(sess, lp)
+    assert cp.tasks[0].placement["build"] == "dram"
+    res = cp.run(sess)
+    assert res.per_task[0].op == "ehj"
