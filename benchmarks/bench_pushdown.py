@@ -1,0 +1,242 @@
+"""Operator pushdown: ship-pages vs. ship-compute across the sweep grid.
+
+One BNLJ query (R |><| sel(S), probe-side filter physicalized by the plan
+frontend) swept over **selectivity x page budget x tier compute speed** on a
+dram/remote hierarchy whose remote tier is compute-capable.  Per sweep point
+the *same* seeded data runs twice:
+
+  * **arb**: the default path — the arbiter prices ship-the-pages against
+    ship-the-compute per (budget, tier) and realizes its verdict through
+    the operator's pushdown kwargs.
+  * **ship**: the forced baseline — ``pushdown=False`` as an explicit task
+    option wins over the arbiter's kwargs, so every probe page crosses the
+    wire and the filter runs locally.  Outputs are identical either way.
+
+Acceptance gates of the pushdown ISSUE, computed into the artifact:
+
+  * ``never_worse``: measured Eq.-(1) latency of ``arb`` is never above
+    ``ship`` at any sweep point (ties allowed — the chooser ships on ties).
+  * ``capable_strict``: on the compute-fast tier at selectivity < 1 the
+    ``arb`` run is *strictly* faster (volume saved beats tier compute).
+  * ``crossover_declines``: the compute-slow row (compute below the tier's
+    wire rate in pages/s) declines pushdown — verdict ``ship``, zero
+    ``c_pushdown``, latency exactly equal to the forced baseline.
+  * ``closed_form_exact``: on every capable test tier the closed forms
+    (``pushdown_costs`` / ``pushdown_reduce_costs``) match the simulated
+    ledger delta field-for-field (D shipped, C rounds, ``c_pushdown``,
+    ``d_pushdown_saved``).
+
+Writes ``BENCH_pushdown.json`` at the repo root, gated by
+``scripts/check_regression.py`` in CI like the other BENCH artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import List, Optional
+
+from repro.core import TABLE_I
+from repro.core.cost_model import TierLevel, hierarchy_spec
+from repro.core.policies import pushdown_costs, pushdown_reduce_costs
+from repro.engine import Session
+from repro.engine.plan import LogicalPlan, compile_plan
+from repro.engine.scheduler import TransferScheduler
+from repro.remote import MemoryHierarchy, make_relation
+from benchmarks.common import Row
+
+ROWS = 8
+DOMAIN = 64
+SIZE_R = 30  # outer pages
+SIZE_S = 50  # inner (probe/filtered) pages
+SELECTIVITIES = [0.25, 0.5, 1.0]
+BUDGETS = [16.0, 24.0, 32.0]
+
+# Compute-speed axis for the remote tier.  The RDMA wire moves
+# bandwidth/page_bytes ~ 25.9k pages/s, so 200k pps is comfortably faster
+# than shipping (pushdown can win) and 2k pps is slower (the arbiter must
+# decline: scanning at the tier costs more than the trip it saves).
+SPEEDS = [
+    ("fast", 200_000.0),
+    ("slow", 2_000.0),
+    ("none", None),
+]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_pushdown.json")
+
+
+def _target(compute_pps: Optional[float]):
+    remote = TierLevel(
+        tier=TABLE_I["rdma"], capacity_pages=4096.0,
+        compute_pps=compute_pps,
+        pushdown_ops=("filter", "reduce") if compute_pps else (),
+    )
+    # dram too small to host the join spill: placement lands on the remote
+    # tier, so the verdict is priced where the probe pages actually live.
+    return hierarchy_spec((TABLE_I["dram"], 4.0), remote)
+
+
+def _build(sess: Session, sel: float, *, force_ship: bool):
+    r = make_relation(sess.remote, SIZE_R * ROWS, ROWS, DOMAIN, seed=11,
+                      tier="rdma")
+    s = make_relation(sess.remote, SIZE_S * ROWS, ROWS, DOMAIN, seed=12,
+                      tier="rdma")
+    lp = LogicalPlan("pushdown")
+    r_n = lp.scan("R", r, rows_per_page=ROWS)
+    s_n = lp.filter(lp.scan("S", s, rows_per_page=ROWS), sel, name="sel_s")
+    opts = {"pushdown": False} if force_ship else {}
+    lp.join(r_n, s_n, out_pages=20.0, name="J", selectivity=0.4, **opts)
+    return lp
+
+
+def _run(compute_pps: Optional[float], sel: float, budget: float,
+         *, force_ship: bool):
+    sess = Session(_target(compute_pps), budget=budget)
+    cp = compile_plan(sess, _build(sess, sel, force_ship=force_ship),
+                      join_op="bnlj")
+    verdict = None
+    for row in cp.explain(sess).tasks:
+        ch = getattr(row, "pushdown", None)
+        if ch is not None:
+            verdict = ch.mode
+    res = cp.run(sess)
+    snap = sess.remote.snapshot()
+    return {
+        "latency": res.latency_seconds(),
+        "verdict": verdict,
+        "c_pushdown": snap.c_pushdown,
+        "d_pushdown_saved": snap.d_pushdown_saved,
+        "output_rows": res.per_task[-1].result.output_rows,
+    }
+
+
+def _sweep(report: dict) -> None:
+    never_worse = True
+    capable_strict = True
+    crossover_ok = True
+    for speed_name, pps in SPEEDS:
+        for sel in SELECTIVITIES:
+            for budget in BUDGETS:
+                arb = _run(pps, sel, budget, force_ship=False)
+                ship = _run(pps, sel, budget, force_ship=True)
+                if arb["output_rows"] != ship["output_rows"]:
+                    raise AssertionError(
+                        f"pushdown changed the join output at "
+                        f"speed={speed_name} sel={sel} M={budget}"
+                    )
+                point = {
+                    "speed": speed_name, "selectivity": sel, "budget": budget,
+                    "verdict": arb["verdict"],
+                    "c_pushdown": arb["c_pushdown"],
+                    "d_pushdown_saved": arb["d_pushdown_saved"],
+                    "simulated_seconds": {
+                        "arb": arb["latency"], "ship": ship["latency"],
+                    },
+                }
+                report["points"].append(point)
+                if arb["latency"] > ship["latency"] * (1 + 1e-9):
+                    never_worse = False
+                if speed_name == "fast" and sel < 1.0:
+                    if not (arb["verdict"] == "push"
+                            and arb["latency"] < ship["latency"] * (1 - 1e-9)):
+                        capable_strict = False
+                if speed_name == "slow":
+                    if not (arb["verdict"] == "ship"
+                            and arb["c_pushdown"] == 0
+                            and math.isclose(arb["latency"], ship["latency"],
+                                             rel_tol=1e-12)):
+                        crossover_ok = False
+    report["never_worse"] = never_worse
+    report["capable_strict"] = capable_strict
+    report["crossover_declines"] = crossover_ok
+
+
+# Capable test tiers for the closed-form exactness gate: the sweep's fast
+# and slow remote tiers plus a TCP tier with a very different tau.
+EXACT_TIERS = [
+    ("rdma_fast", TABLE_I["rdma"], 200_000.0),
+    ("rdma_slow", TABLE_I["rdma"], 2_000.0),
+    ("tcp_fast", TABLE_I["tcp"], 200_000.0),
+]
+
+
+def _exactness(report: dict) -> None:
+    """Closed form vs. simulated ledger, field-for-field, per test tier."""
+    all_exact = True
+    for tag, tier, pps in EXACT_TIERS:
+        level = TierLevel(tier=tier, capacity_pages=4096.0, compute_pps=pps,
+                          pushdown_ops=("filter", "reduce"))
+        hier = MemoryHierarchy(hierarchy_spec((TABLE_I["dram"], 4.0), level))
+        rel = make_relation(hier, SIZE_S * ROWS, ROWS, DOMAIN, seed=21,
+                            tier=tier.name)
+        sched = TransferScheduler(hier)
+
+        before = sched.snapshot()
+        sched.read_filtered(rel.page_ids, selectivity=0.4, batch_pages=7)
+        delta = sched.delta(before)
+        pc = pushdown_costs(SIZE_S, 0.4, level, batch_pages=7)
+        filt_exact = (
+            delta.d_read == pc.d_ship
+            and delta.c_read == pc.c_rounds
+            and delta.c_pushdown == pc.c_rounds
+            and delta.d_pushdown == pc.d_ship
+            and delta.d_pushdown_saved == pc.d_saved
+        )
+
+        before = sched.snapshot()
+        out_pages = hier.read_reduced(
+            tier.name, rel.page_ids,
+            lambda pages: pages[0][:2], ROWS,
+        )
+        delta = sched.delta(before)
+        pr = pushdown_reduce_costs(SIZE_S, float(len(out_pages)), level)
+        red_exact = (
+            delta.d_read == pr.d_ship
+            and delta.c_read == pr.c_rounds
+            and delta.c_pushdown == pr.c_rounds
+            and delta.d_pushdown == pr.d_ship
+            and delta.d_pushdown_saved == pr.d_saved
+        )
+
+        all_exact = all_exact and filt_exact and red_exact
+        report["exactness"].append({
+            "name": tag, "filter_exact": filt_exact, "reduce_exact": red_exact,
+            "d_pushdown": delta.d_pushdown, "c_pushdown": delta.c_pushdown,
+        })
+    report["closed_form_exact"] = all_exact
+
+
+def run() -> List[Row]:
+    t0 = time.perf_counter()
+    report = {
+        "schema": 1, "selectivities": SELECTIVITIES, "budgets": BUDGETS,
+        "speeds": [s for s, _ in SPEEDS], "points": [], "exactness": [],
+    }
+    _sweep(report)
+    _exactness(report)
+    us = (time.perf_counter() - t0) * 1e6
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    fast = [p for p in report["points"]
+            if p["speed"] == "fast" and p["selectivity"] < 1.0]
+    best = max(
+        1 - p["simulated_seconds"]["arb"] / p["simulated_seconds"]["ship"]
+        for p in fast
+    )
+    gates_pass = (report["never_worse"] and report["capable_strict"]
+                  and report["crossover_declines"]
+                  and report["closed_form_exact"])
+    return [
+        ("pushdown_arb_best_latency_reduction_vs_ship", us, round(best, 4)),
+        ("pushdown_gates_pass", us, float(gates_pass)),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -122,6 +122,14 @@ class HierarchyItem:
     ``t`` — tier-dependent because the executed plan is (the tier's tau
     picks e.g. the EMS fan-in, hence pass count) — which is what tier
     capacities constrain.
+
+    The closure is also where operator pushdown enters arbitration: the
+    engine folds the ship-vs-push delta ``min(L_push - L_ship, 0)`` for
+    tier ``t`` into ``latency_of`` (see ``engine.pipeline._modeled_latency``),
+    so a compute-capable tier with a slower wire can still win placement
+    when executing the scan tier-side saves more volume than the extra tau
+    costs.  The arbiter itself stays pure — pushdown is just another term
+    in the per-(m, t) cost surface it descends.
     """
 
     name: str

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, FrozenSet, Optional, Tuple
 
 # --------------------------------------------------------------------------
 # Tier specifications
@@ -164,6 +164,14 @@ class LedgerSnapshot:
     # demotion): they still count in c_read/c_write but pay no RTT when the
     # caller opts into ``overlap_migration``.
     c_migration_hidden: int = 0
+    # Pushdown accounting (operator off-loading to a compute-capable tier):
+    # ``c_pushdown`` request rounds (a subset of ``c_read``) carried back only
+    # result pages, ``d_pushdown`` of them (a subset of ``d_read``), while
+    # ``d_pushdown_saved`` pages were scanned at the tier and never shipped.
+    # Pages processed by tier compute = d_pushdown + d_pushdown_saved.
+    c_pushdown: int = 0
+    d_pushdown: float = 0.0
+    d_pushdown_saved: float = 0.0
 
     @property
     def d_total(self) -> float:
@@ -172,6 +180,11 @@ class LedgerSnapshot:
     @property
     def c_total(self) -> int:
         return self.c_read + self.c_write
+
+    @property
+    def d_pushdown_scanned(self) -> float:
+        """Pages processed by tier compute (shipped results + saved pages)."""
+        return self.d_pushdown + self.d_pushdown_saved
 
     def __add__(self, other: "LedgerSnapshot") -> "LedgerSnapshot":
         """Field-wise sum: accumulate per-region deltas into one snapshot."""
@@ -184,6 +197,9 @@ class LedgerSnapshot:
             c_write=self.c_write + other.c_write,
             c_prefetch_hidden=self.c_prefetch_hidden + other.c_prefetch_hidden,
             c_migration_hidden=self.c_migration_hidden + other.c_migration_hidden,
+            c_pushdown=self.c_pushdown + other.c_pushdown,
+            d_pushdown=self.d_pushdown + other.d_pushdown,
+            d_pushdown_saved=self.d_pushdown_saved + other.d_pushdown_saved,
         )
 
     def latency_cost(self, tau: float) -> float:
@@ -209,6 +225,12 @@ class TransferLedger:
     # Migration rounds overlapped with operator compute (background demotion
     # modeled the way §IV-E models prefetch); disjoint from prefetch hiding.
     c_migration_hidden: int = 0
+    # Pushdown rounds (subset of c_read): the request shipped a predicate or
+    # partial down and only result pages (d_pushdown, subset of d_read) back;
+    # d_pushdown_saved pages stayed at the tier instead of making the trip.
+    c_pushdown: int = 0
+    d_pushdown: float = 0.0
+    d_pushdown_saved: float = 0.0
 
     @property
     def d_total(self) -> float:
@@ -218,6 +240,11 @@ class TransferLedger:
     def c_total(self) -> int:
         return self.c_read + self.c_write
 
+    @property
+    def d_pushdown_scanned(self) -> float:
+        """Pages processed by tier compute (shipped results + saved pages)."""
+        return self.d_pushdown + self.d_pushdown_saved
+
     def read(self, pages: float) -> None:
         self.d_read += pages
         self.c_read += 1
@@ -225,6 +252,15 @@ class TransferLedger:
     def write(self, pages: float) -> None:
         self.d_write += pages
         self.c_write += 1
+
+    def pushdown(self, shipped: float, saved: float) -> None:
+        """One pushdown request round: ``shipped`` result pages made the
+        trip, ``saved`` scanned pages did not.  Counts as a read round."""
+        self.d_read += shipped
+        self.c_read += 1
+        self.d_pushdown += shipped
+        self.c_pushdown += 1
+        self.d_pushdown_saved += saved
 
     def snapshot(self) -> LedgerSnapshot:
         """Freeze the current counters (Definition 1/2 state) for later deltas."""
@@ -235,6 +271,9 @@ class TransferLedger:
             c_write=self.c_write,
             c_prefetch_hidden=self.c_prefetch_hidden,
             c_migration_hidden=self.c_migration_hidden,
+            c_pushdown=self.c_pushdown,
+            d_pushdown=self.d_pushdown,
+            d_pushdown_saved=self.d_pushdown_saved,
         )
 
     def delta(self, since: LedgerSnapshot) -> LedgerSnapshot:
@@ -246,6 +285,9 @@ class TransferLedger:
             c_write=self.c_write - since.c_write,
             c_prefetch_hidden=self.c_prefetch_hidden - since.c_prefetch_hidden,
             c_migration_hidden=self.c_migration_hidden - since.c_migration_hidden,
+            c_pushdown=self.c_pushdown - since.c_pushdown,
+            d_pushdown=self.d_pushdown - since.d_pushdown,
+            d_pushdown_saved=self.d_pushdown_saved - since.d_pushdown_saved,
         )
 
     def merge(self, other: "TransferLedger") -> None:
@@ -255,12 +297,16 @@ class TransferLedger:
         self.c_write += other.c_write
         self.c_prefetch_hidden += other.c_prefetch_hidden
         self.c_migration_hidden += other.c_migration_hidden
+        self.c_pushdown += other.c_pushdown
+        self.d_pushdown += other.d_pushdown
+        self.d_pushdown_saved += other.d_pushdown_saved
 
     def latency_seconds(
         self,
         tier: TierSpec,
         prefetch: bool = False,
         overlap_migration: bool = False,
+        compute_pps: Optional[float] = None,
     ) -> float:
         """Eq. (1) over the ledger; hidden rounds pay no RTT when opted in.
 
@@ -268,14 +314,18 @@ class TransferLedger:
         ``overlap_migration`` drops the RTT of migration rounds performed in
         the background (demotions overlapped with operator compute).  The
         bandwidth term always pays in full — overlap hides latency, not
-        volume.
+        volume.  ``compute_pps`` (a compute-capable tier's processing rate)
+        adds the tier-side compute time of pushdown-scanned pages.
         """
         c_paying = self.c_total
         if prefetch:
             c_paying -= self.c_prefetch_hidden
         if overlap_migration:
             c_paying -= self.c_migration_hidden
-        return tier.latency_seconds(self.d_total, max(c_paying, 0))
+        seconds = tier.latency_seconds(self.d_total, max(c_paying, 0))
+        if compute_pps:
+            seconds += self.d_pushdown_scanned / compute_pps
+        return seconds
 
     def latency_cost(self, tau: float) -> float:
         return latency_cost(self.d_total, self.c_total, tau)
@@ -285,6 +335,9 @@ class TransferLedger:
         self.c_read = self.c_write = 0
         self.c_prefetch_hidden = 0
         self.c_migration_hidden = 0
+        self.c_pushdown = 0
+        self.d_pushdown = 0.0
+        self.d_pushdown_saved = 0.0
 
 
 # --------------------------------------------------------------------------
@@ -298,10 +351,19 @@ class TierLevel:
 
     ``capacity_pages`` bounds how many pages the level's store may hold;
     ``math.inf`` marks an effectively unbounded backstop (the bottom tier).
+
+    A level may additionally be *compute-capable* (Farview/PIMDAL-style
+    near-memory processing): ``compute_pps`` is the tier's processing rate in
+    pages/second and ``pushdown_ops`` names the operations it can execute on
+    resident pages (``"filter"``, ``"reduce"``).  ``None``/empty means no
+    capability — plain DRAM and SSD levels default off; RDMA/CXL-style
+    disaggregated tiers opt in per hierarchy.
     """
 
     tier: TierSpec
     capacity_pages: float = math.inf
+    compute_pps: Optional[float] = None
+    pushdown_ops: FrozenSet[str] = frozenset()
 
     def __post_init__(self) -> None:
         if self.capacity_pages <= 0:
@@ -309,6 +371,41 @@ class TierLevel:
                 f"tier {self.tier.name!r} needs capacity_pages > 0, "
                 f"got {self.capacity_pages}"
             )
+        object.__setattr__(self, "pushdown_ops",
+                           frozenset(self.pushdown_ops))
+        if self.compute_pps is not None and self.compute_pps <= 0:
+            raise ValueError(
+                f"tier {self.tier.name!r} needs compute_pps > 0 (or None), "
+                f"got {self.compute_pps}"
+            )
+        if self.pushdown_ops and self.compute_pps is None:
+            raise ValueError(
+                f"tier {self.tier.name!r} declares pushdown_ops "
+                f"{sorted(self.pushdown_ops)} but no compute_pps rate"
+            )
+
+    def can_push(self, op: str) -> bool:
+        """Whether this level can execute pushdown op ``op`` on its pages."""
+        return self.compute_pps is not None and op in self.pushdown_ops
+
+    @property
+    def compute_tau_pages(self) -> float:
+        """Tier compute priced in this tier's L units (pages per page scanned).
+
+        ``latency_seconds = L * page_bytes / bandwidth`` per tier, so one
+        second of tier compute is worth ``bandwidth / page_bytes`` L-pages;
+        scanning one page costs ``1 / compute_pps`` seconds.  ``inf`` for a
+        tier with no compute capability.
+        """
+        if not self.compute_pps:
+            return math.inf
+        return (self.tier.bandwidth / self.tier.page_bytes) / self.compute_pps
+
+    def compute_seconds(self, pages: float) -> float:
+        """Tier-side processing time for ``pages`` scanned pages."""
+        if not self.compute_pps:
+            return math.inf if pages > 0 else 0.0
+        return pages / self.compute_pps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -364,18 +461,23 @@ class HierarchySpec:
 
 
 def hierarchy_spec(
-    *levels: "TierSpec | str | Tuple[TierSpec | str, float]",
+    *levels: "TierLevel | TierSpec | str | Tuple[TierSpec | str, float]",
 ) -> HierarchySpec:
     """Build a :class:`HierarchySpec` from tier / ``(tier, cap)`` levels.
 
     Tiers are ``TierSpec``\\ s or names resolved against Table I / TESTBED /
     TPU tiers, e.g. ``hierarchy_spec(("dram", 64), ("rdma", 1024), "ssd")``;
-    a bare tier gets unbounded capacity.  The single normalization point for
-    every hierarchy constructor (``make_hierarchy``, ``resolve_hierarchy``).
+    a bare tier gets unbounded capacity.  A fully-specified
+    :class:`TierLevel` passes through unchanged — the way compute-capable
+    levels (``compute_pps``/``pushdown_ops``) enter a hierarchy.  The single
+    normalization point for every hierarchy constructor
+    (``make_hierarchy``, ``resolve_hierarchy``).
     """
     built = []
     for lv in levels:
-        if isinstance(lv, (tuple, list)):
+        if isinstance(lv, TierLevel):
+            built.append(lv)
+        elif isinstance(lv, (tuple, list)):
             tier, cap = lv
             built.append(TierLevel(resolve_tier_name(tier), float(cap)))
         else:
@@ -391,6 +493,9 @@ def _sum_snapshots(snaps: "Tuple[LedgerSnapshot, ...]") -> LedgerSnapshot:
         c_write=sum(s.c_write for s in snaps),
         c_prefetch_hidden=sum(s.c_prefetch_hidden for s in snaps),
         c_migration_hidden=sum(s.c_migration_hidden for s in snaps),
+        c_pushdown=sum(s.c_pushdown for s in snaps),
+        d_pushdown=sum(s.d_pushdown for s in snaps),
+        d_pushdown_saved=sum(s.d_pushdown_saved for s in snaps),
     )
 
 
@@ -468,6 +573,18 @@ class HierarchySnapshot:
         return sum(s.c_migration_hidden for _, s in self.tiers)
 
     @property
+    def c_pushdown(self) -> int:
+        return sum(s.c_pushdown for _, s in self.tiers)
+
+    @property
+    def d_pushdown(self) -> float:
+        return sum(s.d_pushdown for _, s in self.tiers)
+
+    @property
+    def d_pushdown_saved(self) -> float:
+        return sum(s.d_pushdown_saved for _, s in self.tiers)
+
+    @property
     def d_total(self) -> float:
         return self.d_read + self.d_write
 
@@ -480,13 +597,18 @@ class HierarchySnapshot:
 
         A scalar ``tau`` prices every round the same (the single-tier
         degenerate case); a :class:`HierarchySpec` prices each tier's rounds
-        with that tier's ``tau_pages``.
+        with that tier's ``tau_pages`` plus — for compute-capable tiers —
+        the pushdown-scanned pages at ``compute_tau_pages`` each.
         """
         if isinstance(tau, HierarchySpec):
-            return sum(
-                self.tier(name).latency_cost(t)
-                for name, t in zip(tau.names, tau.taus)
-            )
+            total = 0.0
+            for name, t in zip(tau.names, tau.taus):
+                snap = self.tier(name)
+                total += snap.latency_cost(t)
+                scanned = snap.d_pushdown_scanned
+                if scanned > 0:
+                    total += tau.level(name).compute_tau_pages * scanned
+            return total
         return self.total.latency_cost(tau)
 
     def latency_seconds(
@@ -499,17 +621,20 @@ class HierarchySnapshot:
 
         ``overlap_migration`` drops the RTT of background migration rounds
         (``c_migration_hidden``), mirroring how ``prefetch`` drops the
-        double-buffered read rounds' RTT.
+        double-buffered read rounds' RTT.  A compute-capable tier's
+        pushdown-scanned pages add their tier-side processing time.
         """
         total = 0.0
         for name, snap in self.tiers:
-            tier = spec.level(name).tier
+            level = spec.level(name)
             c = snap.c_total
             if prefetch:
                 c -= snap.c_prefetch_hidden
             if overlap_migration:
                 c -= snap.c_migration_hidden
-            total += tier.latency_seconds(snap.d_total, max(c, 0))
+            total += level.tier.latency_seconds(snap.d_total, max(c, 0))
+            if level.compute_pps:
+                total += snap.d_pushdown_scanned / level.compute_pps
         return total
 
 

@@ -741,3 +741,168 @@ def eviction_waterfall_io(
         res[start] += s
         remaining -= s
     return list(zip(d, c, hidden))
+
+
+# ==========================================================================
+# Operator pushdown (compute-capable tiers)
+# ==========================================================================
+#
+# Farview/PIMDAL-style near-memory execution: a compute-capable TierLevel
+# (``compute_pps`` pages/s, ``pushdown_ops``) can run a filter or a partial
+# reduction over its resident pages and ship only results.  Ship-the-pages
+# and ship-the-compute then price against each other in the same L units:
+#
+#   ship:  L = n + tau * ceil(n / batch)
+#   push:  L = kept + tau * ceil(n / batch) + kappa * n        (filter)
+#          L = out  + tau * 1               + kappa * n        (reduce)
+#
+# with kappa = level.compute_tau_pages (one scanned page's tier compute in
+# L-pages) and kept = floor(n * sel) — the deterministic page-granular rule
+# shared with ``MemoryHierarchy.scan_filtered`` (``pushdown_keep``), which is
+# what makes these forms exact against the simulated ledger.
+
+
+@dataclasses.dataclass(frozen=True)
+class PushdownCosts:
+    """Exact ledger prediction of one pushed scan over ``scanned`` pages."""
+
+    d_ship: float  # result pages shipped back (d_pushdown)
+    c_rounds: int  # request rounds (c_pushdown)
+    scanned: float  # pages processed at the tier (d_pushdown + saved)
+    compute_l: float  # tier compute in L units (kappa * scanned)
+    compute_seconds: float  # tier compute wall time (scanned / compute_pps)
+
+    @property
+    def d_saved(self) -> float:
+        return self.scanned - self.d_ship
+
+    def latency_cost(self, tau: float) -> float:
+        """L = D + tau*C + kappa*scanned of the pushed execution."""
+        return self.d_ship + tau * self.c_rounds + self.compute_l
+
+
+def pushdown_costs(
+    n_pages: int,
+    selectivity: float,
+    level,
+    batch_pages: int | None = None,
+) -> PushdownCosts:
+    """Exact costs of pushing a ``selectivity`` filter over ``n_pages``
+    resident on compute-capable ``level`` (a ``TierLevel``), requested in
+    ``batch_pages`` chunks (default: one round).
+
+    Matches ``MemoryHierarchy.scan_filtered`` ledger-exactly:
+    ``d_pushdown = floor(n * sel)``, ``c_pushdown = ceil(n / batch)``,
+    ``d_pushdown_saved = n - floor(n * sel)``.
+    """
+    if n_pages < 0:
+        raise ValueError(f"n_pages must be >= 0, got {n_pages}")
+    if not math.isfinite(selectivity) or not 0.0 < selectivity <= 1.0:
+        raise ValueError(
+            f"selectivity must be finite and in (0, 1], got {selectivity}"
+        )
+    if not level.can_push("filter"):
+        raise ValueError(
+            f"tier {level.tier.name!r} cannot execute pushdown op 'filter'"
+        )
+    batch = int(n_pages) if batch_pages is None else int(batch_pages)
+    if n_pages and batch <= 0:
+        raise ValueError(f"batch_pages must be > 0, got {batch_pages}")
+    kept = float(math.floor(n_pages * selectivity))
+    rounds = math.ceil(n_pages / batch) if n_pages else 0
+    return PushdownCosts(
+        d_ship=kept,
+        c_rounds=rounds,
+        scanned=float(n_pages),
+        compute_l=level.compute_tau_pages * n_pages if n_pages else 0.0,
+        compute_seconds=level.compute_seconds(float(n_pages)),
+    )
+
+
+def pushdown_reduce_costs(n_pages: int, out_pages: float, level) -> PushdownCosts:
+    """Exact costs of a pushed partial reduction: one request round ships
+    ``out_pages`` result pages instead of ``n_pages`` raw ones
+    (``MemoryHierarchy.read_reduced`` semantics)."""
+    if n_pages < 0:
+        raise ValueError(f"n_pages must be >= 0, got {n_pages}")
+    if not level.can_push("reduce"):
+        raise ValueError(
+            f"tier {level.tier.name!r} cannot execute pushdown op 'reduce'"
+        )
+    return PushdownCosts(
+        d_ship=float(out_pages),
+        c_rounds=1 if n_pages else 0,
+        scanned=float(n_pages),
+        compute_l=level.compute_tau_pages * n_pages if n_pages else 0.0,
+        compute_seconds=level.compute_seconds(float(n_pages)),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PushdownChoice:
+    """A round-aware ship-pages vs. ship-compute arbitration verdict."""
+
+    op: str  # "filter" or "reduce"
+    push: bool  # True: execute at the tier; False: ship the pages
+    l_ship: float  # L of shipping the raw pages
+    l_push: float  # L of the pushed execution (inf on a non-capable tier)
+    d_saved: float  # pages that skip the trip when pushed (0 if shipped)
+    c_pushdown: int  # request rounds stamped when pushed (0 if shipped)
+    scanned: float  # pages the tier would process when pushed
+
+    @property
+    def l_delta(self) -> float:
+        """L change of the decision vs. ship-only (<= 0 by construction)."""
+        return min(self.l_push - self.l_ship, 0.0)
+
+    @property
+    def mode(self) -> str:
+        return "push" if self.push else "ship"
+
+
+def pushdown_or_ship(
+    n_pages: int,
+    selectivity: float,
+    level,
+    tau: float,
+    batch_pages: int | None = None,
+    op: str = "filter",
+    out_pages: float | None = None,
+) -> PushdownChoice:
+    """Price ship-the-pages against ship-the-compute for one stream.
+
+    ``op="filter"``: push ships ``floor(n * sel)`` pages in the same
+    ``ceil(n / batch)`` rounds as the ship path, plus tier compute on all
+    ``n`` scanned pages.  ``op="reduce"``: push ships ``out_pages`` result
+    pages in one round (``selectivity`` is ignored).  A tier that cannot
+    execute ``op`` always ships (``l_push = inf``); ties ship too, so the
+    chooser is never worse than ship-only and declines pushdown whenever the
+    tier's compute is too slow to pay for the volume it saves.
+    """
+    if n_pages < 0:
+        raise ValueError(f"n_pages must be >= 0, got {n_pages}")
+    batch = int(n_pages) if batch_pages is None else int(batch_pages)
+    if n_pages and batch <= 0:
+        raise ValueError(f"batch_pages must be > 0, got {batch_pages}")
+    ship_rounds = math.ceil(n_pages / batch) if n_pages else 0
+    l_ship = n_pages + tau * ship_rounds
+    if n_pages == 0 or not level.can_push(op):
+        return PushdownChoice(op=op, push=False, l_ship=l_ship,
+                              l_push=math.inf, d_saved=0.0, c_pushdown=0,
+                              scanned=0.0)
+    if op == "filter":
+        pc = pushdown_costs(n_pages, selectivity, level, batch_pages=batch)
+    elif op == "reduce":
+        if out_pages is None:
+            raise ValueError("op='reduce' needs out_pages=")
+        pc = pushdown_reduce_costs(n_pages, out_pages, level)
+    else:
+        raise ValueError(f"unknown pushdown op {op!r}")
+    l_push = pc.latency_cost(tau)
+    push = l_push < l_ship - 1e-12
+    return PushdownChoice(
+        op=op, push=push, l_ship=l_ship, l_push=l_push,
+        d_saved=pc.d_saved if push else 0.0,
+        c_pushdown=pc.c_rounds if push else 0,
+        scanned=pc.scanned if push else 0.0,
+    )

@@ -223,6 +223,15 @@ class Evictor:
     ``latency_seconds(overlap_migration=True)``.  Counters ``pages_demoted``
     and ``demote_batches`` expose the measured eviction effort (each batch is
     one migration round on each ledger it crosses).
+
+    ``promote`` enables the inverse flow for *re-hot* pages: each
+    ``maintain`` sweep moves up to that many pages per tier — pages a slower
+    tier holds that have been accessed more recently than the coldest
+    resident of the tier above — one tier up as one background migration
+    batch (same ``c_migration_hidden`` accounting as demotion).  Promotion
+    makes room above through the same scan-resistant victim selection, so it
+    can never evict a page an active scan window protects.  Counters
+    ``pages_promoted`` and ``promote_batches`` expose the effort.
     """
 
     def __init__(
@@ -232,6 +241,7 @@ class Evictor:
         *,
         overlap: bool = True,
         headroom: float = 0.0,
+        promote: float = 0.0,
     ) -> None:
         if not getattr(hierarchy, "is_hierarchy", False):
             raise ValueError(
@@ -240,13 +250,18 @@ class Evictor:
             )
         if headroom < 0:
             raise ValueError(f"headroom must be >= 0 pages, got {headroom}")
+        if promote < 0:
+            raise ValueError(f"promote must be >= 0 pages, got {promote}")
         self.hierarchy = hierarchy
         self.policy = make_policy(policy)
         self.overlap = bool(overlap)
         self.headroom = float(headroom)
+        self.promote = float(promote)
         self.pages_demoted = 0
         self.demote_batches = 0
         self.scan_spared = 0
+        self.pages_promoted = 0
+        self.promote_batches = 0
         # Active sequential-scan windows, keyed per cursor: pages a consumer
         # is about to read.  Victim selection skips them (scan resistance).
         self._scan_windows: Dict[Hashable, FrozenSet[int]] = {}
@@ -257,6 +272,8 @@ class Evictor:
             "pages_demoted": self.pages_demoted,
             "demote_batches": self.demote_batches,
             "scan_spared": self.scan_spared,
+            "pages_promoted": self.pages_promoted,
+            "promote_batches": self.promote_batches,
         }
 
     # -- scan resistance -----------------------------------------------------
@@ -336,11 +353,61 @@ class Evictor:
         self.demote_batches += 1
 
     def maintain(self) -> None:
-        """Restore ``headroom`` free pages on every non-bottom tier."""
-        if self.headroom <= 0:
+        """Restore ``headroom`` free pages on every non-bottom tier, then
+        promote re-hot pages back up (when ``promote`` is enabled)."""
+        if self.headroom > 0:
+            for t in range(len(self.hierarchy.tiers) - 1):
+                self.make_room(t, self.headroom)
+        self.promote_hot()
+
+    # -- re-hot promotion ----------------------------------------------------
+
+    def _promote_candidates(self, tier_index: int, limit: int) -> List[int]:
+        """Hottest pages on ``tier_index`` that outrank the tier above.
+
+        A page qualifies when its last batched access is strictly newer than
+        the coldest resident of the tier above (swapping the two improves
+        recency locality); on an empty upper tier, any accessed page does.
+        """
+        h = self.hierarchy
+        below = h.pages_on(tier_index)
+        if not below:
+            return []
+        above = h.pages_on(tier_index - 1)
+        floor = min((h.last_access(i) for i in above), default=0)
+        hot = [i for i in below if h.last_access(i) > floor]
+        hot.sort(key=lambda i: (-h.last_access(i), i))
+        return hot[:limit]
+
+    def promote_hot(self) -> None:
+        """One promotion sweep: re-hot pages move one tier up per call.
+
+        Room above is made through :meth:`make_room` — the same
+        scan-resistant victim selection as demotion — so a promotion can
+        displace cold pages but never a scan-protected one; when the upper
+        tier cannot clear enough space the batch is truncated to what fits.
+        """
+        if self.promote <= 0:
             return
-        for t in range(len(self.hierarchy.tiers) - 1):
-            self.make_room(t, self.headroom)
+        h = self.hierarchy
+        for t in range(len(h.tiers) - 1, 0, -1):
+            batch = self._promote_candidates(t, int(self.promote))
+            if not batch:
+                continue
+            self.make_room(t - 1, len(batch))
+            # Room-making may itself have cascaded demotions through tier
+            # ``t`` (clock/dead policies don't rank by recency), displacing
+            # some candidates: promote only pages still resident here.
+            batch = [i for i in batch
+                     if h.is_resident(i) and h.tier_of(i) == h.spec.names[t]]
+            free = h.capacity_left(t - 1)
+            if not math.isinf(free):
+                batch = batch[: max(int(free), 0)]
+            if not batch:
+                continue
+            h.promote(batch, background=self.overlap)
+            self.pages_promoted += len(batch)
+            self.promote_batches += 1
 
     def stream_flushed(self, page_ids: Sequence[int]) -> None:
         """Forward a BufferPool fully-flushed-stream hint to the policy."""

@@ -36,7 +36,8 @@ import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.arbiter import ArbiterItem, HierarchyItem, arbitrate, arbitrate_hierarchy
-from repro.core.cost_model import HierarchySpec, TierSpec
+from repro.core.cost_model import HierarchySpec, TierLevel, TierSpec
+from repro.core.policies import PushdownChoice
 from repro.engine.registry import (
     OperatorPlan,
     WorkloadStats,
@@ -53,6 +54,10 @@ class OperatorBudget:
 
     ``placement`` names the hierarchy tier the operator's spill is routed to
     (``None`` on a single-tier pipeline, where the pipeline tier applies).
+    ``pushdown`` is the arbiter's ship-pages vs. ship-compute verdict for
+    the operator's pushable stream at its awarded (pages, tier) — ``None``
+    when the operator has nothing to push.  ``modeled_latency`` includes the
+    verdict's ``l_delta`` so plan totals match the arbitration objective.
     """
 
     op: str
@@ -61,6 +66,32 @@ class OperatorBudget:
     plan: OperatorPlan
     modeled_latency: float
     placement: Optional[str] = None
+    pushdown: Optional[PushdownChoice] = None
+
+
+def pushdown_choice(
+    spec, stats: WorkloadStats, level: TierLevel, m: float, policy: str
+) -> Optional[PushdownChoice]:
+    """The operator's priced ship-vs-push verdict at one (pages, tier) point.
+
+    ``None`` when the operator declares no pushdown hook or has nothing to
+    push.  On a plain (single) tier, wrap the tier in a capability-free
+    ``TierLevel(tier=...)`` — the verdict is then always ship, but the
+    data-plane kwargs (e.g. BNLJ's ``inner_filter``) still apply, so a
+    filter annotation stays *semantically* physical everywhere.
+    """
+    if spec.pushdown is None:
+        return None
+    return spec.pushdown(stats, level, m, policy)
+
+
+def _modeled_latency(
+    spec, stats: WorkloadStats, level: TierLevel, m: float, policy: str
+) -> float:
+    """Modeled L = D + tau*C plus the pushdown verdict's l_delta (<= 0)."""
+    base = spec.model(stats, level.tier.tau_pages, m, policy)
+    ch = pushdown_choice(spec, stats, level, m, policy)
+    return base + (ch.l_delta if ch is not None else 0.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +205,10 @@ def _plan_pipeline(
         )
     tier_spec = resolve_tier(tier)
     tau = tier_spec.tau_pages
+    # Capability-free level: the ship-vs-push verdict on a single tier is
+    # always ship, but it still carries the filter annotation to the data
+    # plane (OperatorSpec.pushdown_kwargs).
+    level = TierLevel(tier=tier_spec)
     all_stats = _broadcast_stats(ops, stats)
     items = []
     for op, st in zip(ops, all_stats):
@@ -193,6 +228,7 @@ def _plan_pipeline(
             m_pages=m,
             plan=plan_operator(op, st, tier_spec, m, policy=policy),
             modeled_latency=get(op).model(st, tau, m, policy),
+            pushdown=pushdown_choice(get(op), st, level, m, policy),
         )
         for op, st, m in zip(ops, all_stats, alloc)
     )
@@ -222,8 +258,10 @@ def _plan_pipeline_hierarchy(
         items.append(HierarchyItem(
             name=op,
             min_pages=spec.min_pages,
-            latency_of=lambda m, t, spec=spec, st=st: spec.model(
-                st, taus[t], m, policy
+            # Pushdown-aware placement cost: a compute-capable tier's
+            # l_delta (<= 0) can beat a faster dumb tier.
+            latency_of=lambda m, t, spec=spec, st=st: _modeled_latency(
+                spec, st, hspec.levels[t], m, policy
             ),
             footprint_of=lambda m, t, fp=footprint, st=st: fp(st, taus[t], m),
         ))
@@ -237,8 +275,11 @@ def _plan_pipeline_hierarchy(
             stats=st,
             m_pages=m,
             plan=plan_operator(op, st, hspec.levels[t].tier, m, policy=policy),
-            modeled_latency=get(op).model(st, taus[t], m, policy),
+            modeled_latency=_modeled_latency(
+                get(op), st, hspec.levels[t], m, policy
+            ),
             placement=hspec.names[t],
+            pushdown=pushdown_choice(get(op), st, hspec.levels[t], m, policy),
         )
         for op, st, m, t in zip(ops, all_stats, alloc, placement)
     )

@@ -9,9 +9,13 @@ those queries:
 ``LogicalPlan``
   A tree of relational nodes — ``scan`` / ``filter`` / ``join`` /
   ``aggregate`` / ``sort`` — annotated with table statistics (sizes in
-  pages).  Filters are *stats annotations*: they scale the estimated pages
-  flowing upward (pushdown-at-scan assumption; the ROADMAP's
-  operator-pushdown item makes them physical).
+  pages).  Filters scale the estimated pages flowing upward; a filter
+  chain feeding a BNLJ probe side additionally compiles *physically* — the
+  join task carries ``pushdown_sel`` (and the predicate, when given), so
+  the arbiter can ship the filtered scan to a compute-capable tier.  All
+  other filters remain stats annotations (pushdown-at-scan assumption);
+  ``CompiledPlan.pushed_filters`` / ``annotation_filters`` record which is
+  which.
 
 ``compile_plan(session, plan)``
   Lowers the tree to a dependency-ordered task DAG over the registered
@@ -43,7 +47,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.engine.registry import WorkloadStats, get
 from repro.engine.session import OperatorTask, Session, TaskOutput
@@ -133,15 +138,35 @@ class LogicalPlan:
         ))
 
     def filter(self, child: Node, selectivity: float,
-               name: Optional[str] = None) -> Node:
-        """Scale the child's estimated pages by ``selectivity`` (0, 1]."""
-        if not 0.0 < selectivity <= 1.0:
+               name: Optional[str] = None,
+               predicate: Optional[Callable[..., bool]] = None) -> Node:
+        """Scale the child's estimated pages by ``selectivity`` (0, 1].
+
+        ``selectivity`` must be finite — ``nan``/``inf`` raise here instead
+        of corrupting every upstream estimate.  ``predicate(page) -> bool``
+        optionally carries the *actual* page predicate; when the filter is
+        compiled physically (BNLJ probe side), the predicate executes at the
+        data plane — at a compute-capable tier when the arbiter pushes it —
+        while ``selectivity`` stays the planning estimate.
+        """
+        selectivity = float(selectivity)
+        if not math.isfinite(selectivity) or not 0.0 < selectivity <= 1.0:
             raise ValueError(
-                f"filter selectivity must be in (0, 1], got {selectivity}"
+                f"filter selectivity must be finite and in (0, 1], "
+                f"got {selectivity}"
             )
+        options: Dict[str, Any] = {}
+        if predicate is not None:
+            if not callable(predicate):
+                raise TypeError(
+                    f"filter predicate must be callable, got "
+                    f"{type(predicate).__name__}"
+                )
+            options["predicate"] = predicate
         return self._add(Node(
             kind="filter", name=self._name("filter", name),
-            children=(self._node(child),), selectivity=float(selectivity),
+            children=(self._node(child),), selectivity=selectivity,
+            options=options,
         ))
 
     def join(self, left: Node, right: Node,
@@ -199,6 +224,10 @@ class JoinChoice:
     chosen_cost: float  # modeled L of the winning shape
     left_deep_cost: float  # modeled L of the hand-written tree
     candidates: Tuple[Tuple[str, float], ...]  # (description, modeled L)
+    # Filter nodes this cluster compiled physically onto a BNLJ probe side
+    # (the operator executes them — candidates for tier pushdown) rather
+    # than leaving them as pure stats annotations.
+    pushed_filters: Tuple[str, ...] = ()
 
 
 class _Cluster:
@@ -353,6 +382,12 @@ class CompiledPlan:
     root: OperatorTask
     plan: LogicalPlan
     join_choices: List[JoinChoice]
+    # Filter disposition across the whole plan: physically compiled onto a
+    # BNLJ probe side (arbiter decides ship vs. tier pushdown at plan time)
+    # vs. left as pure estimate annotations (ehj, build sides, non-leaf
+    # filters).  Names are logical-plan node names.
+    pushed_filters: List[str] = dataclasses.field(default_factory=list)
+    annotation_filters: List[str] = dataclasses.field(default_factory=list)
 
     def run(self, session: Session, **kwargs: Any):
         kwargs.setdefault("schedule", "dag")
@@ -389,6 +424,7 @@ def compile_plan(
         raise ValueError(f"join_op must be 'ehj' or 'bnlj', got {join_op!r}")
     tasks: List[OperatorTask] = []
     choices: List[JoinChoice] = []
+    pushed_filters: List[str] = []
 
     def stats_options(node: Node) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         """Split node options into WorkloadStats fields vs. task options."""
@@ -437,13 +473,32 @@ def compile_plan(
             return task.output, node.pages
         raise ValueError(f"unknown plan node kind {node.kind!r}")
 
+    def probe_filter(leaf: Node):
+        """(combined sel, predicate, raw pages, names) for a physicalizable
+        filter chain leaf, else None (the chain stays an annotation)."""
+        if leaf.kind != "filter":
+            return None
+        sel, names, preds = 1.0, [], []
+        n = leaf
+        while n.kind == "filter":
+            sel *= n.selectivity
+            if n.options.get("predicate") is not None:
+                preds.append(n.options["predicate"])
+            names.append(n.name)
+            n = n.children[0]
+        if preds and (len(preds) > 1 or len(names) > 1):
+            # Callables don't compose with each other or with scalar
+            # estimates; a mixed chain stays a stats annotation.
+            return None
+        return sel, (preds[0] if preds else None), max(n.pages, 1.0), names
+
     def lower_join_cluster(node: Node) -> Tuple[Any, float]:
         """Flatten a maximal join subtree, pick a shape, emit join tasks."""
         cluster = _Cluster(session, join_op, session.policy)
         cluster.collect(node)
+        choice: Optional[JoinChoice] = None
         if optimize and len(cluster.leaves) > 2:
             tree, choice = cluster.best(node.name)
-            choices.append(choice)
         else:
             tree = cluster._left_deep(range(len(cluster.leaves)))
         lowered = [lower(leaf) for leaf in cluster.leaves]
@@ -451,6 +506,7 @@ def compile_plan(
         stats_kw, task_kw = stats_options(node)
         rpp = leaf_rpp(node)
         seq = [0]
+        cluster_pushed: List[str] = []
 
         def emit(t) -> Tuple[Any, frozenset]:
             if isinstance(t, int):
@@ -471,6 +527,20 @@ def compile_plan(
                 kw.setdefault("rows_per_page", rpp)
             else:
                 inputs = {"outer": lv, "inner": rv}
+                # A filter chain feeding the probe (inner) side compiles
+                # physically: the operator scans the *raw* inner pages and
+                # applies the filter itself, so the arbiter can ship the
+                # scan to a compute-capable tier and return only survivors.
+                pf = probe_filter(cluster.leaves[t[1]]) \
+                    if isinstance(t[1], int) else None
+                if pf is not None:
+                    sel, pred, raw_pages, names = pf
+                    stats = dataclasses.replace(
+                        stats, size_s=raw_pages, pushdown_sel=sel,
+                    )
+                    if pred is not None:
+                        kw.setdefault("inner_filter", pred)
+                    cluster_pushed.extend(names)
             if prefetch:
                 kw.setdefault("prefetch", True)
             task = session.task(
@@ -480,6 +550,11 @@ def compile_plan(
             return task.output, s
 
         value, s = emit(tree)
+        if choice is not None:
+            choices.append(dataclasses.replace(
+                choice, pushed_filters=tuple(cluster_pushed),
+            ))
+        pushed_filters.extend(cluster_pushed)
         return value, cluster.size_of(s)
 
     value, _ = lower(root)
@@ -490,6 +565,17 @@ def compile_plan(
         )
     if not isinstance(value, TaskOutput) or value.task is not tasks[-1]:
         raise AssertionError("lowering must end at the root task")
+
+    def filter_names(node: Node, acc: List[str]) -> None:
+        if node.kind == "filter" and node.name not in acc:
+            acc.append(node.name)
+        for child in node.children:
+            filter_names(child, acc)
+
+    all_filters: List[str] = []
+    filter_names(root, all_filters)
+    annotation_filters = [n for n in all_filters if n not in set(pushed_filters)]
     return CompiledPlan(
         tasks=tasks, root=tasks[-1], plan=plan, join_choices=choices,
+        pushed_filters=pushed_filters, annotation_filters=annotation_filters,
     )

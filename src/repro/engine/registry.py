@@ -14,6 +14,7 @@ stack) is one ``register()`` call.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import (
     Any,
     Callable,
@@ -28,12 +29,15 @@ from typing import (
 
 from repro.core.cost_model import (
     HierarchySpec,
+    TierLevel,
     TierSpec,
     hierarchy_spec,
     resolve_tier_name,
 )
 from repro.core.policies import (
     BNLJPlan,
+    PushdownChoice,
+    pushdown_or_ship,
     EAggPlan,
     EHJPlan,
     EMSPlan,
@@ -71,7 +75,11 @@ class WorkloadStats:
     ``size_s`` the secondary (inner / probe), ``out`` the output estimate.
     ``selectivity`` is the BNLJ join selectivity ``f`` (beta = f*M);
     ``partitions``/``sigma`` are the EHJ radix count and spilled fraction;
-    ``k_cap`` optionally caps the EMS merge fan-in.
+    ``k_cap`` optionally caps the EMS merge fan-in.  ``pushdown_sel`` is the
+    estimated surviving fraction of a probe-side *filter* annotation on the
+    secondary input (BNLJ inner) — ``None`` means no filter; a set value
+    makes the filter physical and lets the arbiter price executing it at a
+    compute-capable tier (``OperatorSpec.pushdown``).
     """
 
     size_r: float = 0.0
@@ -81,6 +89,7 @@ class WorkloadStats:
     partitions: int = 16
     sigma: float = 0.5
     k_cap: Optional[int] = None
+    pushdown_sel: Optional[float] = None
 
 
 Planner = Callable[[WorkloadStats, float, float, str], OperatorPlan]
@@ -107,6 +116,19 @@ OutputPages = Callable[[WorkloadStats], float]
 # attributed to the operator's named spill streams (``OperatorSpec.streams``)
 # — what fractional placement splits across tiers and ``explain()`` renders.
 StreamFootprints = Callable[[WorkloadStats, float, float], Dict[str, float]]
+# Ship-pages vs. ship-compute arbitration hook: given the workload, the
+# placement tier's full TierLevel (capabilities included), the budget m, and
+# the policy, return the priced PushdownChoice — or None when the operator
+# has nothing to push (no filter annotation, no spilled partitions).  The
+# choice's l_delta (<= 0) is added to the operator's modeled L during
+# arbitration, so a slower-tau tier with compute can win placement.
+Pushdown = Callable[
+    [WorkloadStats, TierLevel, float, str], Optional[PushdownChoice]
+]
+# Data-plane kwargs realizing a PushdownChoice (e.g. BNLJ's
+# ``inner_filter``/``pushdown``); applied with setdefault so explicit task
+# options always win.
+PushdownKwargs = Callable[[WorkloadStats, PushdownChoice], Dict[str, Any]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +160,10 @@ class OperatorSpec:
     streams: Tuple[str, ...] = ()
     # ``footprint`` decomposed per stream (keys ⊆ ``streams``).
     stream_footprints: Optional[StreamFootprints] = None
+    # Ship-vs-push arbitration hook and the data-plane kwargs realizing its
+    # verdict; None for operators with nothing to execute at the tier.
+    pushdown: Optional[Pushdown] = None
+    pushdown_kwargs: Optional[PushdownKwargs] = None
 
     def bind_inputs(self, inputs: Mapping[str, Any]) -> Tuple[Any, ...]:
         """Resolve named inputs to ``run``'s positional argument order.
@@ -412,6 +438,70 @@ def _sfp_eagg(stats: WorkloadStats, tau: float, m: float) -> Dict[str, float]:
     return {"partitions": stats.sigma * stats.size_r, "output": stats.out}
 
 
+# Ship-pages vs. ship-compute hooks: price the operator's pushable stream at
+# the candidate placement tier with the closed forms (core.policies) and
+# return the verdict.  The l_delta (<= 0) folds into the arbiter's modeled L.
+
+
+def _scale_choice(ch: PushdownChoice, k: int) -> PushdownChoice:
+    """Scale a per-pass/per-partition verdict to ``k`` repetitions."""
+    if k == 1:
+        return ch
+    return dataclasses.replace(
+        ch, l_ship=ch.l_ship * k, l_push=ch.l_push * k,
+        d_saved=ch.d_saved * k, c_pushdown=ch.c_pushdown * k,
+        scanned=ch.scanned * k,
+    )
+
+
+def _pushdown_bnlj(
+    stats: WorkloadStats, level: TierLevel, m: float, policy: str
+) -> Optional[PushdownChoice]:
+    # The probe-side filter annotation: every outer pass re-reads the inner
+    # stream in p_s-page rounds; the per-pass verdict scales by the pass
+    # count (the decision itself is pass-invariant).
+    if stats.pushdown_sel is None:
+        return None
+    plan = _plan_bnlj(stats, level.tier.tau_pages, m, policy)
+    p_r = max(1, int(round(plan.outer_pages)))
+    p_s = max(1, int(round(plan.inner_pages)))
+    n = max(int(round(stats.size_s)), 0)
+    passes = max(math.ceil(stats.size_r / p_r), 1)
+    ch = pushdown_or_ship(
+        n, stats.pushdown_sel, level, level.tier.tau_pages, batch_pages=p_s
+    )
+    return _scale_choice(ch, passes)
+
+
+def _pushdown_eagg(
+    stats: WorkloadStats, level: TierLevel, m: float, policy: str
+) -> Optional[PushdownChoice]:
+    # P2 re-reads each spilled partition (~size_r/P raw pages); a pushed
+    # partial aggregation ships ~out/P group pages in one round instead.
+    plan = _plan_eagg(stats, level.tier.tau_pages, m, policy)
+    n_spilled = int(round(plan.sigma * plan.partitions))
+    if n_spilled <= 0:
+        return None
+    n_q = max(int(round(stats.size_r / plan.partitions)), 0)
+    if n_q <= 0:
+        return None
+    out_q = stats.out / plan.partitions
+    r_r2 = max(int(round(plan.p2[0])), 1) if plan.p2 else 1
+    ch = pushdown_or_ship(
+        n_q, 1.0, level, level.tier.tau_pages, batch_pages=r_r2,
+        op="reduce", out_pages=out_q,
+    )
+    return _scale_choice(ch, n_spilled)
+
+
+def _pdkw_bnlj(stats: WorkloadStats, ch: PushdownChoice) -> Dict[str, Any]:
+    return {"inner_filter": stats.pushdown_sel, "pushdown": ch.push}
+
+
+def _pdkw_eagg(stats: WorkloadStats, ch: PushdownChoice) -> Dict[str, Any]:
+    return {"pushdown": ch.push}
+
+
 # Estimated output pages at plan time: what the operator's result stream is
 # expected to occupy, per its WorkloadStats — the planning-time mirror of the
 # ``measured_stats`` feedback hooks above.
@@ -459,6 +549,7 @@ def _ensure_builtin() -> None:
         measured_stats=bnlj_mod.bnlj_measured, output_of=bnlj_mod.bnlj_output,
         output_pages=_out_pages_from_out,
         streams=bnlj_mod.STREAMS, stream_footprints=_sfp_bnlj,
+        pushdown=_pushdown_bnlj, pushdown_kwargs=_pdkw_bnlj,
     ))
     register(OperatorSpec(
         name="ems", plan_type=EMSPlan,
@@ -489,5 +580,6 @@ def _ensure_builtin() -> None:
         measured_stats=eagg_mod.eagg_measured, output_of=eagg_mod.eagg_output,
         output_pages=_out_pages_from_out,
         streams=eagg_mod.STREAMS, stream_footprints=_sfp_eagg,
+        pushdown=_pushdown_eagg, pushdown_kwargs=_pdkw_eagg,
     ))
     _builtin_registered = True

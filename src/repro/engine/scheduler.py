@@ -196,6 +196,84 @@ class TransferScheduler:
             flush(pending)
         return pages
 
+    def read_filtered(
+        self,
+        page_ids: Sequence[int],
+        *,
+        selectivity: Optional[float] = None,
+        predicate=None,
+        batch_pages: Optional[int] = None,
+        pushdown: bool = True,
+    ) -> List[np.ndarray]:
+        """Filtered stream read: push the filter to capable tiers, else ship.
+
+        The keep decision is made *globally* — a scalar ``selectivity`` uses
+        the deterministic positional rule over the whole ``page_ids`` list
+        (``repro.remote.simulator.pushdown_keep``), a ``predicate(page)`` is
+        evaluated per page — so the surviving pages are identical whatever
+        tier each page happens to sit on.  The stream is processed in
+        ``batch_pages`` chunks (default: one chunk); per chunk, each tier's
+        pages cost one round:
+
+          * a tier capable of the ``"filter"`` op (and ``pushdown=True``)
+            executes the filter in place and ships only survivors — a
+            ``c_pushdown`` round with ``d_pushdown_saved`` accounting;
+          * any other tier ships the whole group (a plain read round) and
+            the filter runs locally.
+
+        With ``pushdown=False``, or when no tier is capable (e.g. a bare
+        single tier), the rounds and volumes are byte-for-byte identical to
+        reading the stream plain in the same chunks — pushdown degrades to
+        the ship path, never changes results.
+        """
+        from repro.remote.simulator import _check_selectivity, pushdown_keep
+
+        ids = [int(i) for i in page_ids]
+        if not ids:
+            return []
+        if (selectivity is None) == (predicate is None):
+            raise ValueError(
+                "read_filtered needs exactly one of selectivity=, predicate="
+            )
+        batch = len(ids) if batch_pages is None else int(batch_pages)
+        if batch <= 0:
+            raise ValueError(f"batch_pages must be > 0, got {batch_pages}")
+        keep = None
+        if selectivity is not None:
+            sel = _check_selectivity(selectivity)
+            keep = frozenset(
+                i for pos, i in enumerate(ids) if pushdown_keep(pos, sel)
+            )
+        kept: Dict[int, np.ndarray] = {}
+        for start in range(0, len(ids), batch):
+            chunk = ids[start : start + batch]
+            if not self.is_hierarchy:
+                for i, page in zip(chunk, self.remote.read_batch(chunk)):
+                    if predicate(page) if predicate is not None else i in keep:
+                        kept[i] = page
+                continue
+            by_tier: Dict[str, List[int]] = {}
+            for i in chunk:
+                by_tier.setdefault(self.remote.tier_of(i), []).append(i)
+            for name in sorted(by_tier, key=self.remote.spec.index):
+                group = by_tier[name]
+                if pushdown and self.remote.spec.level(name).can_push("filter"):
+                    if predicate is not None:
+                        kids, kpages = self.remote.scan_filtered(
+                            name, group, predicate=predicate
+                        )
+                    else:
+                        kids, kpages = self.remote.scan_filtered(
+                            name, group, keep_ids=keep
+                        )
+                    kept.update(zip(kids, kpages))
+                else:
+                    for i, page in zip(group, self.remote.read_batch(group)):
+                        if predicate(page) if predicate is not None \
+                                else i in keep:
+                            kept[i] = page
+        return [kept[i] for i in ids if i in kept]
+
     def stream_flushed(self, page_ids: Sequence[int]) -> None:
         """Hint: a spill stream owning ``page_ids`` is fully flushed.
 

@@ -131,6 +131,10 @@ class TaskExplain:
     # Fractional placement: (stream, tier, estimated pages) per declared
     # stream — only populated when the task carries a per-stream placement.
     streams: Tuple[Tuple[str, str, float], ...] = ()
+    # Ship-vs-push verdict for the operator's pushable stream (None when the
+    # operator has nothing to push): the repro.core.policies.PushdownChoice
+    # the arbiter priced at this task's (pages, tier).
+    pushdown: Optional[Any] = None
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -138,6 +142,13 @@ class TaskExplain:
         d["streams"] = [
             {"stream": s, "tier": t, "footprint": fp} for s, t, fp in self.streams
         ]
+        ch = self.pushdown
+        d["pushdown"] = None if ch is None else {
+            "op": ch.op, "mode": ch.mode, "l_ship": ch.l_ship,
+            "l_push": None if math.isinf(ch.l_push) else ch.l_push,
+            "l_delta": ch.l_delta, "d_saved": ch.d_saved,
+            "c_pushdown": ch.c_pushdown, "scanned": ch.scanned,
+        }
         return d
 
 
@@ -215,6 +226,22 @@ class PlanReport:
                     f"{s}->{tn}({fp:g}p)" for s, tn, fp in t.streams
                 )
                 lines.append(f"  {t.label} streams: {split}")
+        for t in self.tasks:
+            ch = t.pushdown
+            if ch is None:
+                continue
+            if ch.push:
+                lines.append(
+                    f"  {t.label} pushdown: push({ch.op})@{t.placement} "
+                    f"D-saved={ch.d_saved:g} c_pushdown={ch.c_pushdown:g} "
+                    f"L{ch.l_delta:+.1f}"
+                )
+            else:
+                why = ("tier cannot execute it" if math.isinf(ch.l_push)
+                       else "compute too slow to pay for the trip")
+                lines.append(
+                    f"  {t.label} pushdown: ship({ch.op}) — {why}"
+                )
         lines.append(f"total modeled latency L = {self.total_modeled_latency:.1f}")
         return "\n".join(lines)
 
@@ -479,6 +506,18 @@ class Session:
         if self.hierarchy is not None and placement is not None:
             return self.hierarchy.level(placement).tier.tau_pages
         return self.tier.tau_pages
+
+    def _placement_level(self, placement: Optional[str]):
+        """The placement tier's full TierLevel, capabilities included.
+
+        A single-tier session gets a capability-free wrapper level, so
+        pushdown verdicts degrade to ship there.
+        """
+        from repro.core.cost_model import TierLevel
+
+        if self.hierarchy is not None and placement is not None:
+            return self.hierarchy.level(placement)
+        return TierLevel(tier=self.tier)
 
     @property
     def eviction_name(self) -> Optional[str]:
@@ -786,6 +825,7 @@ class Session:
                 capacity=capacity, min_pages=spec.min_pages,
                 eviction=ev_name, eviction_pages=ev_pages,
                 eviction_rounds=ev_rounds, streams=stream_rows,
+                pushdown=getattr(ob, "pushdown", None),
             ))
         if self.hierarchy is not None:
             footprints = tuple(
@@ -835,6 +875,12 @@ class Session:
         }
         args = spec.bind_inputs(resolved)
         kwargs = dict(task.options)
+        # Realize the arbiter's ship-vs-push verdict as data-plane kwargs
+        # (e.g. BNLJ's inner_filter/pushdown); explicit task options win.
+        choice = getattr(ob, "pushdown", None)
+        if choice is not None and spec.pushdown_kwargs is not None:
+            for key, value in spec.pushdown_kwargs(base_stats, choice).items():
+                kwargs.setdefault(key, value)
         if self.is_hierarchy:
             if task.placement is not None and spec.streams:
                 # Fractional placement: every stream to its explicit tier,
@@ -1094,6 +1140,7 @@ class Session:
         itself.
         """
         finished_task = tasks[done]
+        measured_sel = cur_stats[done].pushdown_sel
         if targets is None:
             targets = range(done + 1, len(tasks))
         for j in targets:
@@ -1109,6 +1156,14 @@ class Session:
                 cur_stats[j] = dataclasses.replace(
                     cur_stats[j], **{field: float(len(resolved))}
                 )
+                # A downstream task filtering the same annotated chain
+                # refines its selectivity estimate from the measured one,
+                # so the next re-arbitration re-decides ship-vs-push.
+                if (measured_sel is not None
+                        and cur_stats[j].pushdown_sel is not None):
+                    cur_stats[j] = dataclasses.replace(
+                        cur_stats[j], pushdown_sel=float(measured_sel)
+                    )
 
     def _replan_remaining(
         self,
@@ -1150,14 +1205,18 @@ class Session:
         the DAG scheduler's frontier replan (the frontier is not a list
         suffix once independent subtrees interleave).
         """
+        from repro.engine.pipeline import _modeled_latency
+
         finished_task = tasks[done]
         before_m = tuple(budgets[j].m_pages for j in remaining)
         before_p = tuple(budgets[j].placement for j in remaining)
         # Price the *old* split at the *updated* stats, so before/after in the
-        # event measure what the re-split itself bought.
+        # event measure what the re-split itself bought (pushdown verdicts
+        # re-derived at the measured selectivity, symmetric with the re-split).
         before_l = sum(
-            get(tasks[j].op).model(
-                cur_stats[j], self._placement_tau(budgets[j].placement),
+            _modeled_latency(
+                get(tasks[j].op), cur_stats[j],
+                self._placement_level(budgets[j].placement),
                 budgets[j].m_pages, self.policy,
             )
             for j in remaining
@@ -1177,6 +1236,7 @@ class Session:
             abs(nb.m_pages - budgets[j].m_pages) > 1e-9
             or nb.placement != budgets[j].placement
             or nb.plan != budgets[j].plan
+            or nb.pushdown != getattr(budgets[j], "pushdown", None)
             for j, nb in zip(remaining, new_budgets)
         )
         if not changed:
@@ -1225,7 +1285,12 @@ class Session:
         admitted tenant's residency whenever two or more queries share the
         hierarchy.
         """
-        from repro.engine.pipeline import OperatorBudget
+        from repro.core.cost_model import TierLevel
+        from repro.engine.pipeline import (
+            OperatorBudget,
+            _modeled_latency,
+            pushdown_choice,
+        )
 
         policy = self.policy
         if weights is None:
@@ -1236,6 +1301,7 @@ class Session:
             )
         if self.hierarchy is None:
             tau = self.tier.tau_pages
+            level = TierLevel(tier=self.tier)  # capability-free: always ship
             items = [
                 ArbiterItem(
                     name=t.op, min_pages=get(t.op).min_pages,
@@ -1251,6 +1317,7 @@ class Session:
                     op=t.op, stats=st, m_pages=m,
                     plan=plan_operator(t.op, st, self.tier, m, policy=policy),
                     modeled_latency=get(t.op).model(st, tau, m, policy),
+                    pushdown=pushdown_choice(get(t.op), st, level, m, policy),
                 )
                 for t, st, m in zip(tasks, stats, alloc)
             ]
@@ -1276,8 +1343,8 @@ class Session:
             footprint = spec.footprint or (lambda st_, tau_, m_: 0.0)
             items.append(HierarchyItem(
                 name=t.op, min_pages=spec.min_pages,
-                latency_of=lambda m, ti, s=spec, st=st, w=w: w * s.model(
-                    st, taus[ti], m, policy
+                latency_of=lambda m, ti, s=spec, st=st, w=w: w * _modeled_latency(
+                    s, st, hspec.levels[ti], m, policy
                 ),
                 footprint_of=lambda m, ti, fp=footprint, st=st: fp(
                     st, taus[ti], m
@@ -1293,8 +1360,13 @@ class Session:
                 op=t.op, stats=st, m_pages=m,
                 plan=plan_operator(t.op, st, hspec.levels[ti].tier, m,
                                    policy=policy),
-                modeled_latency=get(t.op).model(st, taus[ti], m, policy),
+                modeled_latency=_modeled_latency(
+                    get(t.op), st, hspec.levels[ti], m, policy
+                ),
                 placement=hspec.names[ti],
+                pushdown=pushdown_choice(
+                    get(t.op), st, hspec.levels[ti], m, policy
+                ),
             )
             for t, st, m, ti in zip(tasks, stats, alloc, placement)
         ]

@@ -10,7 +10,7 @@ output region is a single-stream :class:`repro.engine.BufferPool`.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional, Union
 
 import numpy as np
 
@@ -39,6 +39,9 @@ class JoinResult:
     d_write: float
     c_read: int
     c_write: int
+    # Probe-side filter telemetry (None when no inner_filter was applied):
+    # measured surviving fraction of the inner stream, for replan="measured".
+    inner_sel_measured: Optional[float] = None
 
 
 def bnlj_output(result: JoinResult) -> List[int]:
@@ -47,8 +50,13 @@ def bnlj_output(result: JoinResult) -> List[int]:
 
 
 def bnlj_measured(stats, result: JoinResult):
-    """Feed the measured output cardinality back into the workload stats."""
-    return dataclasses.replace(stats, out=float(len(result.output_page_ids)))
+    """Feed measured output cardinality (and probe selectivity) into stats."""
+    stats = dataclasses.replace(stats, out=float(len(result.output_page_ids)))
+    if result.inner_sel_measured is not None and hasattr(stats, "pushdown_sel"):
+        stats = dataclasses.replace(
+            stats, pushdown_sel=float(result.inner_sel_measured)
+        )
+    return stats
 
 
 def _block_join(r_rows: np.ndarray, s_rows: np.ndarray) -> np.ndarray:
@@ -78,6 +86,8 @@ def bnlj(
     plan: BNLJPlan,
     prefetch: bool = False,
     tier=None,
+    inner_filter: Union[float, None, object] = None,
+    pushdown: bool = False,
 ) -> JoinResult:
     """Run BNLJ with the given buffer plan; returns output + ledger deltas.
 
@@ -86,6 +96,14 @@ def bnlj(
     a scalar, or a per-stream spec over ``STREAMS`` (see ``stream_tiers``).
     ``outer`` / ``inner`` accept a ``Relation`` or a bare page-id list
     (a DAG upstream's output), coerced via ``as_relation``.
+
+    ``inner_filter`` applies a probe-side filter to the inner stream — a
+    scalar selectivity in (0, 1] (deterministic positional keep rule) or a
+    ``predicate(page) -> bool``.  With ``pushdown=False`` every inner page
+    still makes the round trip and is filtered locally; with
+    ``pushdown=True`` the filter executes at any capable tier holding inner
+    pages and only survivors are shipped (``c_pushdown`` rounds).  The join
+    output is identical either way — pushdown changes D, never results.
     """
     outer = as_relation(remote, outer)
     inner = as_relation(remote, inner)
@@ -98,11 +116,32 @@ def bnlj(
     before = sched.snapshot()
     out_pool = BufferPool(sched, r_out, outer.rows_per_page, tier=tiers["output"])
 
+    filt_kw = None
+    if inner_filter is not None:
+        filt_kw = (
+            {"predicate": inner_filter}
+            if callable(inner_filter)
+            else {"selectivity": float(inner_filter)}
+        )
+    inner_kept: Optional[int] = None
+
     for r_block in PageCursor(sched, outer.page_ids, p_r).blocks():
-        # Inner stream is sequential and predictable: prefetchable (§IV-E);
-        # a fresh cursor per outer block, so its first round is never hidden.
-        for s_block in PageCursor(sched, inner.page_ids, p_s, prefetch=prefetch).blocks():
-            out_pool.add(_block_join(r_block, s_block))
+        if filt_kw is None:
+            # Inner stream is sequential and predictable: prefetchable
+            # (§IV-E); a fresh cursor per outer block, so its first round is
+            # never hidden.
+            for s_block in PageCursor(sched, inner.page_ids, p_s, prefetch=prefetch).blocks():
+                out_pool.add(_block_join(r_block, s_block))
+        else:
+            # Filtered probe: same ``p_s``-page request rounds as the plain
+            # stream; survivors join in one block per request chunk.
+            pages = sched.read_filtered(
+                inner.page_ids, batch_pages=p_s, pushdown=pushdown, **filt_kw
+            )
+            inner_kept = len(pages)
+            for start in range(0, len(pages), p_s):
+                s_rows = np.concatenate(pages[start : start + p_s], axis=0)
+                out_pool.add(_block_join(r_block, s_rows))
     out_pool.flush_all()
 
     d = sched.delta(before)
@@ -113,6 +152,11 @@ def bnlj(
         d_write=d.d_write,
         c_read=d.c_read,
         c_write=d.c_write,
+        inner_sel_measured=(
+            None
+            if filt_kw is None or not inner.page_ids
+            else (inner_kept or 0) / len(inner.page_ids)
+        ),
     )
 
 

@@ -49,6 +49,9 @@ class AggResult:
     c_read: int
     c_write: int
     per_phase_rounds: Dict[str, int]
+    # How many spilled partitions were partially aggregated at the memory
+    # tier in P2 (0 when pushdown was off or no tier was reduce-capable).
+    pushdown_partitions: int = 0
 
 
 def eagg_output(result: AggResult) -> List[int]:
@@ -76,6 +79,11 @@ def _aggregate(rows: np.ndarray) -> np.ndarray:
     return np.stack([keys, sums.astype(np.int64), counts.astype(np.int64)], axis=1)
 
 
+def _reduce_partition(pages: List[np.ndarray]) -> np.ndarray:
+    """Tier-side reducer for one spilled partition (grace assumption)."""
+    return _aggregate(np.concatenate(pages, axis=0))
+
+
 def eagg(
     remote: RemoteMemory,
     rel: Relation,
@@ -83,6 +91,7 @@ def eagg(
     rows_per_page: int | None = None,
     prefetch: bool = False,
     tier=None,
+    pushdown: bool = False,
 ) -> AggResult:
     """Run the two-phase external hash aggregation under ``plan``.
 
@@ -90,6 +99,14 @@ def eagg(
     hierarchy, ``tier`` names the placement spilled partitions and group
     output are routed to — a scalar, or a per-stream spec over ``STREAMS``.
     ``rel`` accepts a ``Relation`` or a bare page-id list.
+
+    ``pushdown=True`` lets P2 partially aggregate a spilled partition *at*
+    the tier holding it: when every page of the partition is resident on one
+    ``"reduce"``-capable tier, a single ``read_reduced`` pushdown round
+    ships only the group pages instead of re-reading the raw spill.
+    Partitions that waterfalled across tiers, or sit on non-capable tiers,
+    fall back to the plain re-read — the group table is identical either
+    way (``_aggregate`` is deterministic), only D/C change.
     """
     rel = as_relation(remote, rel)
     tiers = stream_tiers(tier, STREAMS)
@@ -134,12 +151,30 @@ def eagg(
     r_r2, r_o2 = plan.p2
     read_pages = round(r_r2)
     ext_out_pool = BufferPool(sched, r_o2, rows_per_page, tier=tiers["output"])
+    pushdown_parts = 0
     for q in sorted(spilled):
         ids = spill_pool.pages(q)
         if not ids:
             continue
-        part_rows = PageCursor(sched, ids, read_pages, prefetch=prefetch).read_all()
-        groups = _aggregate(part_rows)
+        pushed = False
+        if pushdown and getattr(remote, "is_hierarchy", False):
+            homes = {remote.tier_of(i) for i in ids}
+            if len(homes) == 1:
+                home = homes.pop()
+                if remote.spec.level(home).can_push("reduce"):
+                    group_pages = remote.read_reduced(
+                        home, ids, _reduce_partition, rows_per_page
+                    )
+                    groups = (
+                        np.concatenate(group_pages, axis=0)
+                        if group_pages
+                        else np.empty((0, 3), dtype=np.int64)
+                    )
+                    pushdown_parts += 1
+                    pushed = True
+        if not pushed:
+            part_rows = PageCursor(sched, ids, read_pages, prefetch=prefetch).read_all()
+            groups = _aggregate(part_rows)
         group_rows += len(groups)
         ext_out_pool.add(groups)
     ext_out_pool.flush_all()
@@ -155,6 +190,7 @@ def eagg(
         c_read=d.c_read,
         c_write=d.c_write,
         per_phase_rounds=phase_rounds,
+        pushdown_partitions=pushdown_parts,
     )
 
 

@@ -28,6 +28,29 @@ from repro.core.cost_model import (
 )
 
 
+def pushdown_keep(position: int, selectivity: float) -> bool:
+    """Deterministic page-granular filter: keep the page at ``position``.
+
+    Zone-map-style Bresenham rule — keep page ``i`` iff
+    ``floor((i+1)*sel) > floor(i*sel)`` — so exactly ``floor(n*sel)`` of any
+    ``n`` consecutive positions survive *regardless of batching*.  Both the
+    simulator and the closed forms (:func:`repro.core.policies.pushdown_costs`)
+    use this rule, which is what makes them exactly comparable.
+    """
+    return math.floor((position + 1) * selectivity) > math.floor(
+        position * selectivity
+    )
+
+
+def _check_selectivity(selectivity) -> float:
+    s = float(selectivity)
+    if not math.isfinite(s) or not 0.0 < s <= 1.0:
+        raise ValueError(
+            f"filter selectivity must be finite and in (0, 1], got {selectivity}"
+        )
+    return s
+
+
 class RemoteMemory:
     """A remote tier holding pages, with round/volume accounting."""
 
@@ -386,6 +409,130 @@ class MemoryHierarchy:
                     self._placement[i] = nxt
                 cur = nxt
 
+    # -- operator pushdown (compute-capable tiers) ---------------------------
+
+    def _pushdown_level(self, tier: Union[int, str], op: str):
+        """Resolve + capability-check a tier for pushdown op ``op``."""
+        idx = self.spec.index(tier)
+        level = self.spec.levels[idx]
+        if not level.can_push(op):
+            raise ValueError(
+                f"tier {self.spec.names[idx]!r} cannot execute pushdown op "
+                f"{op!r} (compute_pps={level.compute_pps}, "
+                f"pushdown_ops={sorted(level.pushdown_ops)})"
+            )
+        return idx, level
+
+    def _resident_on(self, idx: int, page_ids: Sequence[int]) -> None:
+        stray = [i for i in page_ids if self._placement.get(i) != idx]
+        if stray:
+            raise ValueError(
+                f"pushdown needs every page resident on tier "
+                f"{self.spec.names[idx]!r}; not there: {stray[:8]}"
+                f"{'...' if len(stray) > 8 else ''}"
+            )
+
+    def scan_filtered(
+        self,
+        tier: Union[int, str],
+        page_ids: Sequence[int],
+        selectivity: Optional[float] = None,
+        predicate=None,
+        keep_ids: Optional[Iterable[int]] = None,
+        batch_pages: Optional[int] = None,
+    ) -> Tuple[List[int], List[np.ndarray]]:
+        """Execute a filter *at* a compute-capable tier; ship only survivors.
+
+        Every page in ``page_ids`` must be resident on ``tier`` and the tier
+        must be capable of the ``"filter"`` op (non-capable tiers raise).
+        The selection is one of: a scalar ``selectivity`` applied with the
+        deterministic positional rule (:func:`pushdown_keep`, positions
+        within ``page_ids``), a ``predicate(page) -> bool``, or an explicit
+        ``keep_ids`` set (the placement-aware scheduler fallback uses this to
+        preserve a globally consistent keep decision across tiers).
+
+        Accounting: every ``batch_pages`` chunk (default: all pages, one
+        round) is one pushdown request round — ``c_read``/``c_pushdown`` +1,
+        ``d_read``/``d_pushdown`` += survivors shipped, ``d_pushdown_saved``
+        += pages scanned at the tier but never shipped.  All scanned pages
+        count as accessed (the tier touched them).
+        """
+        modes = sum(x is not None for x in (selectivity, predicate, keep_ids))
+        if modes != 1:
+            raise ValueError(
+                "scan_filtered needs exactly one of selectivity=, "
+                "predicate=, keep_ids="
+            )
+        idx, _level = self._pushdown_level(tier, "filter")
+        ids = [int(i) for i in page_ids]
+        if not ids:
+            return [], []
+        self._resident_on(idx, ids)
+        if selectivity is not None:
+            sel = _check_selectivity(selectivity)
+        keep_set = None if keep_ids is None else frozenset(int(i) for i in keep_ids)
+        batch = len(ids) if batch_pages is None else int(batch_pages)
+        if batch <= 0:
+            raise ValueError(f"batch_pages must be > 0, got {batch_pages}")
+        rm = self.tiers[idx]
+        kept_ids: List[int] = []
+        kept_pages: List[np.ndarray] = []
+        for start in range(0, len(ids), batch):
+            chunk = ids[start : start + batch]
+            if predicate is not None:
+                kept = [i for i in chunk if predicate(rm._store[i])]
+            elif keep_set is not None:
+                kept = [i for i in chunk if i in keep_set]
+            else:
+                kept = [
+                    i for pos, i in enumerate(chunk, start=start)
+                    if pushdown_keep(pos, sel)
+                ]
+            rm.ledger.pushdown(
+                shipped=float(len(kept)), saved=float(len(chunk) - len(kept))
+            )
+            kept_ids.extend(kept)
+            kept_pages.extend(rm._store[i] for i in kept)
+        self._touch(ids)
+        return kept_ids, kept_pages
+
+    def read_reduced(
+        self,
+        tier: Union[int, str],
+        page_ids: Sequence[int],
+        reducer,
+        rows_per_page: int,
+    ) -> List[np.ndarray]:
+        """Execute a partial reduction *at* a compute-capable tier.
+
+        ``reducer(pages) -> rows`` runs over the resident pages at the tier
+        (all of ``page_ids`` must live on ``tier``, which must be capable of
+        the ``"reduce"`` op); the result rows are packed into
+        ``rows_per_page``-row pages and shipped back in **one** pushdown
+        round — ``ceil(rows / rows_per_page)`` result pages of ``d_read``
+        instead of ``len(page_ids)`` raw ones.  The shipped arrays are
+        materialized results, not store pages (the caller owns them).
+        """
+        idx, _level = self._pushdown_level(tier, "reduce")
+        ids = [int(i) for i in page_ids]
+        if not ids:
+            return []
+        if rows_per_page <= 0:
+            raise ValueError(f"rows_per_page must be > 0, got {rows_per_page}")
+        self._resident_on(idx, ids)
+        rm = self.tiers[idx]
+        rows = np.asarray(reducer([rm._store[i] for i in ids]))
+        out = [
+            rows[start : start + rows_per_page]
+            for start in range(0, len(rows), rows_per_page)
+        ]
+        rm.ledger.pushdown(
+            shipped=float(len(out)),
+            saved=float(max(len(ids) - len(out), 0)),
+        )
+        self._touch(ids)
+        return out
+
     def demote(self, page_ids: Sequence[int], background: bool = False) -> None:
         """Migrate a batch one tier down (all pages must share a tier)."""
         self._hop(page_ids, +1, background=background)
@@ -431,15 +578,33 @@ class MemoryHierarchy:
     def latency_seconds(
         self, prefetch: bool = False, overlap_migration: bool = False
     ) -> float:
-        """Eq. (1) summed over tiers, each with its own (BW, RTT)."""
+        """Eq. (1) summed over tiers, each with its own (BW, RTT).
+
+        Compute-capable tiers additionally pay their pushdown-scanned pages'
+        processing time (``d_pushdown_scanned / compute_pps``).
+        """
         return sum(
-            rm.latency_seconds(prefetch, overlap_migration=overlap_migration)
-            for rm in self.tiers
+            rm.ledger.latency_seconds(
+                rm.tier, prefetch=prefetch,
+                overlap_migration=overlap_migration,
+                compute_pps=lv.compute_pps,
+            )
+            for rm, lv in zip(self.tiers, self.spec.levels)
         )
 
     def latency_cost(self) -> float:
-        """Hierarchy-wide L: per-tier D + tau_t * C summed over tiers."""
-        return sum(rm.latency_cost() for rm in self.tiers)
+        """Hierarchy-wide L: per-tier D + tau_t * C summed over tiers.
+
+        Pushdown-scanned pages on compute-capable tiers are priced at that
+        tier's ``compute_tau_pages`` each (tier compute in L units).
+        """
+        total = 0.0
+        for rm, lv in zip(self.tiers, self.spec.levels):
+            total += rm.latency_cost()
+            scanned = rm.ledger.d_pushdown_scanned
+            if scanned > 0:
+                total += lv.compute_tau_pages * scanned
+        return total
 
     def reset_accounting(self) -> None:
         for rm in self.tiers:

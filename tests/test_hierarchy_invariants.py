@@ -6,10 +6,13 @@ random put/read/demote/promote/evict sequences against a capacity-bounded
 DRAM -> RDMA -> SSD hierarchy with a live evictor, pinning:
 
   * page ids are stable across migrations and no page is ever lost,
-    duplicated, or corrupted by routing/eviction;
-  * per-tier ledgers always sum to the ``HierarchySnapshot`` totals;
+    duplicated, or corrupted by routing/eviction/promotion;
+  * per-tier ledgers always sum to the ``HierarchySnapshot`` totals —
+    including the pushdown fields (``c_pushdown``/``d_pushdown``/
+    ``d_pushdown_saved``) stamped by compute-capable tiers;
   * ``c_migration_hidden <= c_total`` (and hidden counters never exceed the
-    rounds that carried them) on every tier and in aggregate;
+    rounds that carried them) on every tier and in aggregate, and
+    ``c_pushdown <= c_read <= c_total`` likewise;
   * a 1-tier hierarchy with eviction disabled reproduces the PR 4 ledgers
     byte-for-byte for all four operators;
   * eviction composes with measured replanning: per-task
@@ -30,6 +33,7 @@ from hypothesis import strategies as st
 
 from repro.core import TABLE_I, TESTBED
 from repro.core.arbiter import HierarchyItem, arbitrate_hierarchy
+from repro.core.cost_model import TierLevel
 from repro.core.policies import eviction_waterfall_io, tiered_latency_cost
 from repro.engine import (
     BufferPool,
@@ -71,15 +75,27 @@ def _check_invariants(h, contents):
     assert total.c_migration_hidden == sum(
         s.c_migration_hidden for s in per_tier
     )
+    assert total.c_pushdown == sum(s.c_pushdown for s in per_tier)
+    assert total.d_pushdown == sum(s.d_pushdown for s in per_tier)
+    assert total.d_pushdown_saved == sum(
+        s.d_pushdown_saved for s in per_tier
+    )
     assert snap.d_total == total.d_total and snap.c_total == total.c_total
     assert snap.c_migration_hidden == total.c_migration_hidden
+    assert snap.c_pushdown == total.c_pushdown
     # Hidden rounds are a subset of real rounds, tier by tier: a hidden
     # migration read/write happened on that ledger.
     for s in per_tier:
         assert s.c_migration_hidden <= s.c_total
         assert s.c_prefetch_hidden <= s.c_read
         assert s.c_prefetch_hidden + s.c_migration_hidden <= s.c_total
+        # Pushdown rounds/volumes are subsets of the read traffic that
+        # carried them; the saved volume never appears in d_read at all.
+        assert s.c_pushdown <= s.c_read
+        assert s.c_pushdown <= s.c_total
+        assert s.d_pushdown <= s.d_read
     assert total.c_migration_hidden <= total.c_total
+    assert total.c_pushdown <= total.c_total
     # No page lost, duplicated, or corrupted: every id resolves to exactly
     # one tier and reads back the array that was written.
     assert h.pages_resident == len(contents)
@@ -109,14 +125,21 @@ def _check_invariants(h, contents):
 def test_random_sequences_preserve_hierarchy_invariants(
     dram_cap, rdma_cap, policy, actions
 ):
-    h = make_hierarchy((TABLE_I["dram"], dram_cap), (TABLE_I["rdma"], rdma_cap),
-                       TABLE_I["ssd"])
-    evictor = Evictor(h, policy, overlap=True)
+    # The middle tier is compute-capable, so random pushdown scans stamp
+    # c_pushdown/d_pushdown alongside migrations; the evictor additionally
+    # promotes one re-hot page per maintain sweep.
+    h = make_hierarchy(
+        (TABLE_I["dram"], dram_cap),
+        TierLevel(TABLE_I["rdma"], float(rdma_cap), compute_pps=200_000.0,
+                  pushdown_ops=("filter",)),
+        TABLE_I["ssd"],
+    )
+    evictor = Evictor(h, policy, overlap=True, promote=1)
     h.evictor = evictor
     contents = {}  # page id -> fill value
     fill = 0
     for a in actions:
-        kind = a % 5
+        kind = a % 6
         if kind <= 1:  # write a batch (evictor makes room, then waterfall)
             n = a % 3 + 1
             pages = []
@@ -143,6 +166,12 @@ def test_random_sequences_preserve_hierarchy_invariants(
                     pass  # top/bottom tier or destination full: legal refusal
         elif kind == 4:  # explicit eviction pass
             evictor.make_room(a % 2, a % 3 + 1)
+        elif kind == 5:  # pushdown scan at the compute-capable tier
+            ids = h.pages_on("rdma")[: a % 3 + 1]
+            if ids:
+                h.scan_filtered("rdma", ids,
+                                selectivity=((a % 4) + 1) / 4.0,
+                                batch_pages=(a % 2) + 1)
         _check_invariants(h, contents)
     _check_invariants(h, contents)
     # Evictor counters agree with the hidden-round ledgers: every demote
@@ -362,18 +391,29 @@ def test_arbitrate_hierarchy_eviction_softens_capacity():
 
 def _fields(s):
     return (s.d_read, s.d_write, s.c_read, s.c_write, s.c_prefetch_hidden,
-            s.c_migration_hidden)
+            s.c_migration_hidden, s.c_pushdown, s.d_pushdown,
+            s.d_pushdown_saved)
 
 
 def test_eviction_composes_with_measured_replanning():
     """Per-task checkpoint deltas sum exactly to the run total with a live
-    LRU evictor — no eviction round double-counted across replan events."""
-    sess = Session([("dram", 72), ("rdma", 512), "ssd"], budget=40.0,
-                   eviction="lru")
+    LRU evictor — no eviction or pushdown round double-counted across
+    replan events."""
+    sess = Session(
+        [("dram", 72),
+         TierLevel(TABLE_I["rdma"], 512.0, compute_pps=200_000.0,
+                   pushdown_ops=("filter", "reduce")),
+         "ssd"],
+        budget=40.0, eviction="lru",
+    )
     build = make_relation(sess.remote, 32 * ROWS, ROWS, 64, seed=41)
     probe = make_relation(sess.remote, 64 * ROWS, ROWS, 64, seed=42)
     sort_ids = make_key_pages(sess.remote, 80, ROWS, seed=43)
     agg_rel = make_relation(sess.remote, 48 * ROWS, ROWS, 96, seed=44)
+    inner = make_relation(sess.remote, 24 * ROWS, ROWS, 64, seed=45,
+                          tier="rdma")
+    outer = make_relation(sess.remote, 12 * ROWS, ROWS, 64, seed=46,
+                          tier="rdma")
     tasks = [
         sess.task("ehj", WorkloadStats(size_r=32, size_s=64, out=8,
                                        partitions=8, sigma=0.5),
@@ -382,19 +422,27 @@ def test_eviction_composes_with_measured_replanning():
                   inputs={"page_ids": sort_ids}, rows_per_page=ROWS),
         sess.task("eagg", WorkloadStats(size_r=48, out=12, partitions=8,
                                         sigma=0.5), inputs={"rel": agg_rel}),
+        # A filtered probe forced through the pushdown data plane, so the
+        # checkpoint deltas must conserve the pushdown fields too.
+        sess.task("bnlj", WorkloadStats(size_r=12, size_s=24, out=6,
+                                        pushdown_sel=0.5),
+                  inputs={"outer": outer, "inner": inner},
+                  inner_filter=0.5, pushdown=True),
     ]
     res = sess.run(tasks, replan="measured")
-    # The run replanned and the evictor actually worked.
+    # The run replanned, the evictor actually worked, and the pushdown
+    # rounds actually happened.
     assert res.replan_events, "expected at least one replan event"
     assert sess.evictor.demote_batches > 0, "expected live evictions"
     assert any(tr.eviction_rounds > 0 for tr in res.per_task)
+    assert res.total.c_pushdown > 0, "expected live pushdown rounds"
     # Checkpoint/restore consistency: per-task deltas (including hidden
-    # migration rounds) sum exactly to the run total, field by field, on
-    # every tier.
+    # migration rounds and pushdown fields) sum exactly to the run total,
+    # field by field, on every tier.
     for name in sess.hierarchy.names:
         per_task_sum = tuple(
             sum(_fields(tr.delta.tier(name))[k] for tr in res.per_task)
-            for k in range(6)
+            for k in range(9)
         )
         assert per_task_sum == _fields(res.total.tier(name)), name
     # Eviction effort attribution matches the evictor's monotone counters.
@@ -452,6 +500,86 @@ def test_explain_surfaces_eviction_plan():
         t.eviction_rounds for t in report.tasks
     )
     assert report.to_dict()["eviction"] == "lru+overlap"
+
+
+# ---------------------------------------------------------------------------
+# Pushdown ledger identities
+# ---------------------------------------------------------------------------
+
+
+def test_single_tier_no_capability_pushdown_identical_to_plain_reads():
+    """``read_filtered(pushdown=True)`` on a capability-free hierarchy is
+    byte-for-byte the plain batched-read ledger, with zero pushdown stamps."""
+    plain = make_hierarchy(TIER)
+    pushed = make_hierarchy(TIER)
+    ids_plain = _seeded(plain, 10, tier=TIER.name)
+    ids_pushed = _seeded(pushed, 10, tier=TIER.name)
+    batch = 4
+    for start in range(0, len(ids_plain), batch):
+        plain.read_batch(ids_plain[start : start + batch])
+    sched = TransferScheduler(pushed)
+    kept = sched.read_filtered(ids_pushed, selectivity=0.5,
+                               batch_pages=batch, pushdown=True)
+    assert len(kept) == 5  # floor(10 * 0.5) survivors, filtered locally
+    a, b = plain.tiers[0].ledger.snapshot(), pushed.tiers[0].ledger.snapshot()
+    assert a == b  # dataclass equality: every field, pushdown ones included
+    assert b.c_pushdown == 0 and b.d_pushdown == 0 and b.d_pushdown_saved == 0
+
+
+# ---------------------------------------------------------------------------
+# Re-hot promotion
+# ---------------------------------------------------------------------------
+
+
+def test_evictor_promotes_rehot_pages_in_background():
+    h = make_hierarchy((TABLE_I["dram"], 4), (TABLE_I["rdma"], 16),
+                       TABLE_I["ssd"])
+    ev = Evictor(h, "lru", overlap=True, promote=2)
+    h.evictor = ev
+    cold = h.write_batch([_page(i) for i in range(4)], tier="dram")
+    below = h.write_batch([_page(10 + i) for i in range(3)], tier="rdma")
+    hidden_before = h.snapshot().total.c_migration_hidden
+    # Re-heat one rdma page past every dram resident, then trigger a sweep.
+    h.read_batch([below[0]])
+    ev.maintain()
+    assert h.tier_of(below[0]) == "dram"
+    assert ev.pages_promoted >= 1 and ev.promote_batches >= 1
+    assert ev.counters()["pages_promoted"] == ev.pages_promoted
+    # The promotion (and the demotion making room for it) ran as background
+    # migration batches: hidden rounds advanced on the ledgers it crossed.
+    assert h.snapshot().total.c_migration_hidden > hidden_before
+    assert all(h.is_resident(i) for i in cold + below)
+
+
+def test_promotion_never_evicts_scan_protected_page():
+    h = make_hierarchy((TABLE_I["dram"], 3), (TABLE_I["rdma"], 16),
+                       TABLE_I["ssd"])
+    ev = Evictor(h, "lru", overlap=True, promote=1)
+    protected = h.write_batch([_page(i) for i in range(3)], tier="dram")
+    below = h.write_batch([_page(9)], tier="rdma")
+    # Attach only once the working set exists, so write-triggered maintenance
+    # can't promote before the scan window is declared.
+    h.evictor = ev
+    # The dram residents are LRU-coldest but under an active scan window.
+    ev.scan_hint("scan", protected)
+    h.read_batch(below)  # re-hot: outranks every (stale) dram page
+    ev.promote_hot()
+    # The full dram tier is scan-protected: promotion found no room and was
+    # truncated rather than displacing a protected page.
+    assert all(h.tier_of(i) == "dram" for i in protected)
+    assert h.tier_of(below[0]) == "rdma"
+    assert ev.pages_promoted == 0
+    # Lifting the window lets the same sweep through.
+    ev.scan_done("scan")
+    ev.promote_hot()
+    assert h.tier_of(below[0]) == "dram"
+    assert ev.pages_promoted == 1
+
+
+def test_evictor_validates_promote():
+    h = make_hierarchy((TABLE_I["dram"], 4), TABLE_I["ssd"])
+    with pytest.raises(ValueError, match="promote"):
+        Evictor(h, "lru", promote=-1)
 
 
 # ---------------------------------------------------------------------------

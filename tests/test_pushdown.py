@@ -1,0 +1,392 @@
+"""Operator pushdown: closed forms, the chooser, and the arbitration path.
+
+Four layers, matching how the feature is built:
+
+* **Closed forms** (`pushdown_costs` / `pushdown_reduce_costs`) are
+  ledger-exact against the simulated hierarchy on every capable test tier —
+  field-for-field, not approximately.
+* **The chooser** (`pushdown_or_ship`) prices ship-the-pages against
+  ship-the-compute: pushes only when the tier's compute beats the volume it
+  saves, ships on ties and on non-capable tiers, and is never worse than
+  ship-only by construction.
+* **The data plane** (`TransferScheduler.read_filtered`) returns identical
+  survivors whether the filter is pushed or shipped; only the accounting
+  moves.
+* **The session/plan path**: the arbiter's verdict shows up in
+  ``explain()``, explicit task options override it, and the plan frontend
+  records which filters compiled physically vs. stayed annotations.
+"""
+
+import math
+
+import pytest
+
+from repro.core import TABLE_I
+from repro.core.cost_model import TierLevel, hierarchy_spec
+from repro.core.policies import (pushdown_costs, pushdown_or_ship,
+                                 pushdown_reduce_costs)
+from repro.engine import Session
+from repro.engine.plan import LogicalPlan, compile_plan
+from repro.engine.scheduler import TransferScheduler
+from repro.remote import MemoryHierarchy, make_relation
+
+ROWS = 8
+DOMAIN = 64
+
+# Wire rate of the rdma tier is ~25.9k pages/s: 200k pps beats it (pushdown
+# can win), 2k pps loses to it (the chooser must decline).
+FAST = 200_000.0
+SLOW = 2_000.0
+
+
+def _capable(tier, pps, ops=("filter", "reduce"), capacity=4096.0):
+    return TierLevel(tier=tier, capacity_pages=capacity, compute_pps=pps,
+                     pushdown_ops=ops)
+
+
+# ---------------------------------------------------------------------------
+# Closed forms vs. the simulated ledger
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier_name", ["rdma", "tcp", "ssd"])
+@pytest.mark.parametrize("batch", [1, 7, 50])
+def test_pushdown_costs_ledger_exact_per_tier(tier_name, batch):
+    level = _capable(TABLE_I[tier_name], FAST)
+    hier = MemoryHierarchy(hierarchy_spec((TABLE_I["dram"], 4.0), level))
+    rel = make_relation(hier, 50 * ROWS, ROWS, DOMAIN, seed=21,
+                        tier=tier_name)
+    sched = TransferScheduler(hier)
+
+    before = sched.snapshot()
+    kept = sched.read_filtered(rel.page_ids, selectivity=0.4,
+                               batch_pages=batch)
+    delta = sched.delta(before)
+    pc = pushdown_costs(50, 0.4, level, batch_pages=batch)
+    assert len(kept) == pc.d_ship == math.floor(50 * 0.4)
+    assert delta.d_read == pc.d_ship
+    assert delta.c_read == pc.c_rounds
+    assert delta.c_pushdown == pc.c_rounds
+    assert delta.d_pushdown == pc.d_ship
+    assert delta.d_pushdown_saved == pc.d_saved
+
+
+@pytest.mark.parametrize("tier_name", ["rdma", "tcp"])
+def test_pushdown_reduce_costs_ledger_exact(tier_name):
+    level = _capable(TABLE_I[tier_name], FAST)
+    hier = MemoryHierarchy(hierarchy_spec((TABLE_I["dram"], 4.0), level))
+    rel = make_relation(hier, 50 * ROWS, ROWS, DOMAIN, seed=22,
+                        tier=tier_name)
+    sched = TransferScheduler(hier)
+
+    before = sched.snapshot()
+    out = hier.read_reduced(tier_name, rel.page_ids,
+                            lambda pages: pages[0][:2], ROWS)
+    delta = sched.delta(before)
+    pr = pushdown_reduce_costs(50, float(len(out)), level)
+    assert delta.d_read == pr.d_ship
+    assert delta.c_read == pr.c_rounds == 1
+    assert delta.c_pushdown == pr.c_rounds
+    assert delta.d_pushdown == pr.d_ship
+    assert delta.d_pushdown_saved == pr.d_saved
+
+
+def test_pushdown_costs_latency_cost_is_eq1_plus_compute():
+    level = _capable(TABLE_I["rdma"], FAST)
+    pc = pushdown_costs(40, 0.5, level, batch_pages=10)
+    tau = 3.0
+    expected = pc.d_ship + tau * pc.c_rounds + level.compute_tau_pages * 40
+    assert pc.latency_cost(tau) == pytest.approx(expected)
+    assert pc.compute_seconds == pytest.approx(40 / FAST)
+
+
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"), 0.0, 1.5, -0.2])
+def test_pushdown_costs_rejects_bad_selectivity(bad):
+    level = _capable(TABLE_I["rdma"], FAST)
+    with pytest.raises(ValueError, match="selectivity"):
+        pushdown_costs(10, bad, level)
+
+
+def test_pushdown_costs_rejects_non_capable_tier():
+    level = TierLevel(tier=TABLE_I["rdma"], capacity_pages=64.0)
+    with pytest.raises(ValueError, match="cannot execute"):
+        pushdown_costs(10, 0.5, level)
+    with pytest.raises(ValueError, match="cannot execute"):
+        pushdown_reduce_costs(10, 2.0, level)
+
+
+# ---------------------------------------------------------------------------
+# The ship-pages vs. ship-compute chooser
+# ---------------------------------------------------------------------------
+
+
+def test_chooser_pushes_when_compute_beats_the_wire():
+    level = _capable(TABLE_I["rdma"], FAST)
+    tau = TABLE_I["rdma"].tau_pages
+    ch = pushdown_or_ship(50, 0.4, level, tau, batch_pages=10)
+    assert ch.push and ch.mode == "push"
+    assert ch.l_push < ch.l_ship
+    assert ch.l_delta == ch.l_push - ch.l_ship < 0
+    assert ch.c_pushdown == math.ceil(50 / 10)
+    assert ch.d_saved == 50 - math.floor(50 * 0.4)
+    assert ch.scanned == 50.0
+
+
+def test_chooser_declines_when_compute_is_slower_than_the_wire():
+    level = _capable(TABLE_I["rdma"], SLOW)
+    tau = TABLE_I["rdma"].tau_pages
+    ch = pushdown_or_ship(50, 0.4, level, tau, batch_pages=10)
+    assert not ch.push and ch.mode == "ship"
+    assert math.isfinite(ch.l_push) and ch.l_push > ch.l_ship
+    assert ch.l_delta == 0.0
+    assert ch.c_pushdown == 0 and ch.d_saved == 0.0
+
+
+def test_chooser_ships_on_non_capable_tier_with_infinite_l_push():
+    level = TierLevel(tier=TABLE_I["rdma"], capacity_pages=64.0)
+    ch = pushdown_or_ship(50, 0.4, level, tau=3.0)
+    assert not ch.push
+    assert math.isinf(ch.l_push)
+    assert ch.l_delta == 0.0
+
+
+def test_chooser_ships_on_exact_tie():
+    # Infinitely fast compute + selectivity 1 makes l_push == l_ship
+    # exactly: nothing saved, nothing spent.  Ties must ship.
+    level = _capable(TABLE_I["rdma"], math.inf)
+    ch = pushdown_or_ship(50, 1.0, level, tau=3.0, batch_pages=10)
+    assert ch.l_push == ch.l_ship
+    assert not ch.push and ch.l_delta == 0.0
+
+
+def test_chooser_never_worse_than_ship_across_grid():
+    tau = TABLE_I["rdma"].tau_pages
+    for pps in (FAST, SLOW, 30_000.0):
+        level = _capable(TABLE_I["rdma"], pps)
+        for sel in (0.1, 0.5, 1.0):
+            for batch in (1, 8, 64):
+                ch = pushdown_or_ship(64, sel, level, tau,
+                                      batch_pages=batch)
+                assert min(ch.l_push, ch.l_ship) <= ch.l_ship
+                assert ch.l_delta <= 0.0
+
+
+def test_chooser_reduce_and_edge_validation():
+    level = _capable(TABLE_I["rdma"], FAST)
+    ch = pushdown_or_ship(50, 1.0, level, tau=3.0, op="reduce",
+                          out_pages=2.0)
+    assert ch.push and ch.op == "reduce"
+    assert ch.d_saved == 48.0 and ch.c_pushdown == 1
+    with pytest.raises(ValueError, match="out_pages"):
+        pushdown_or_ship(50, 1.0, level, tau=3.0, op="reduce")
+    # An op the tier doesn't declare just ships; an op nothing knows how to
+    # price raises once a tier claims it.
+    shipped = pushdown_or_ship(50, 1.0, level, tau=3.0, op="project")
+    assert not shipped.push and math.isinf(shipped.l_push)
+    claims = _capable(TABLE_I["rdma"], FAST, ops=("project",))
+    with pytest.raises(ValueError, match="unknown pushdown op"):
+        pushdown_or_ship(50, 1.0, claims, tau=3.0, op="project")
+    empty = pushdown_or_ship(0, 0.5, level, tau=3.0)
+    assert not empty.push and empty.l_ship == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Data plane: pushed and shipped filters return identical survivors
+# ---------------------------------------------------------------------------
+
+
+def _two_tier_scheduler(pps):
+    level = _capable(TABLE_I["rdma"], pps, ops=("filter",))
+    hier = MemoryHierarchy(hierarchy_spec((TABLE_I["dram"], 8.0), level))
+    rel = make_relation(hier, 24 * ROWS, ROWS, DOMAIN, seed=31, tier="rdma")
+    # Split the stream across tiers so read_filtered exercises both the
+    # pushed (rdma) and the local (dram) paths in one call.
+    hier.promote(rel.page_ids[:6])
+    return TransferScheduler(hier), rel
+
+
+def test_read_filtered_pushdown_matches_ship_survivors():
+    for kwargs in ({"selectivity": 0.5},
+                   {"predicate": lambda page: page[0, 0] % 2 == 0}):
+        sched_a, rel_a = _two_tier_scheduler(FAST)
+        sched_b, rel_b = _two_tier_scheduler(FAST)
+        pushed = sched_a.read_filtered(rel_a.page_ids, batch_pages=5,
+                                       pushdown=True, **kwargs)
+        shipped = sched_b.read_filtered(rel_b.page_ids, batch_pages=5,
+                                        pushdown=False, **kwargs)
+        assert len(pushed) == len(shipped) > 0
+        for p, s in zip(pushed, shipped):
+            assert (p == s).all()
+        # Same survivors, different accounting: the pushed run stamps
+        # pushdown rounds and saves wire volume; the shipped run does not.
+        da = sched_a.snapshot()
+        db = sched_b.snapshot()
+        assert da.c_pushdown > 0 and da.d_pushdown_saved > 0
+        assert db.c_pushdown == 0 and db.d_pushdown_saved == 0
+        assert da.d_read < db.d_read
+
+
+def test_scan_filtered_requires_residency_and_capability():
+    level = _capable(TABLE_I["rdma"], FAST, ops=("filter",))
+    hier = MemoryHierarchy(hierarchy_spec((TABLE_I["dram"], 8.0), level))
+    rel = make_relation(hier, 8 * ROWS, ROWS, DOMAIN, seed=32, tier="rdma")
+    hier.promote(rel.page_ids[:2])
+    with pytest.raises(ValueError, match="resident"):
+        hier.scan_filtered("rdma", rel.page_ids, selectivity=0.5)
+    with pytest.raises(ValueError, match="cannot execute"):
+        hier.scan_filtered("dram", rel.page_ids[:2], selectivity=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Session arbitration + plan frontend
+# ---------------------------------------------------------------------------
+
+
+def _session(pps, budget=24.0):
+    remote = TierLevel(
+        tier=TABLE_I["rdma"], capacity_pages=4096.0, compute_pps=pps,
+        pushdown_ops=("filter", "reduce") if pps else (),
+    )
+    # dram too small to host the join spill: placement lands on the capable
+    # remote tier, where the verdict is priced.
+    return Session(hierarchy_spec((TABLE_I["dram"], 4.0), remote),
+                   budget=budget)
+
+
+def _compiled(sess, sel=0.4, predicate=None, **join_opts):
+    r = make_relation(sess.remote, 30 * ROWS, ROWS, DOMAIN, seed=11,
+                      tier="rdma")
+    s = make_relation(sess.remote, 50 * ROWS, ROWS, DOMAIN, seed=12,
+                      tier="rdma")
+    lp = LogicalPlan("pd")
+    r_n = lp.scan("R", r, rows_per_page=ROWS)
+    s_n = lp.filter(lp.scan("S", s, rows_per_page=ROWS), sel, name="sel_s",
+                    predicate=predicate)
+    lp.join(r_n, s_n, out_pages=20.0, name="J", selectivity=0.4,
+            **join_opts)
+    return compile_plan(sess, lp, join_op="bnlj")
+
+
+def _verdicts(report):
+    return {t.label: t.pushdown for t in report.tasks
+            if t.pushdown is not None}
+
+
+def test_session_arbiter_pushes_on_capable_tier_and_explains_it():
+    sess = _session(FAST)
+    cp = _compiled(sess)
+    assert cp.pushed_filters == ["sel_s"]
+    assert cp.annotation_filters == []
+    # Two-leaf clusters skip shape enumeration: no JoinChoice recorded.
+    assert cp.join_choices == []
+    report = cp.explain(sess)
+    (choice,) = _verdicts(report).values()
+    assert choice.push and choice.mode == "push"
+    assert "pushdown: push(filter)@rdma" in str(report)
+    res = cp.run(sess)
+    assert sess.remote.snapshot().c_pushdown > 0
+    assert res.per_task[-1].result.output_rows > 0
+
+
+def test_session_arbiter_declines_past_the_compute_crossover():
+    sess = _session(SLOW)
+    cp = _compiled(sess)
+    report = cp.explain(sess)
+    (choice,) = _verdicts(report).values()
+    assert not choice.push and math.isfinite(choice.l_push)
+    assert "compute too slow" in str(report)
+    cp.run(sess)
+    assert sess.remote.snapshot().c_pushdown == 0
+
+
+def test_session_explains_non_capable_tier():
+    sess = _session(None)
+    report = _compiled(sess).explain(sess)
+    (choice,) = _verdicts(report).values()
+    assert not choice.push and math.isinf(choice.l_push)
+    assert "tier cannot execute it" in str(report)
+
+
+def test_arbitrated_run_never_worse_and_output_identical():
+    for pps in (FAST, SLOW, None):
+        arb_sess = _session(pps)
+        arb = _compiled(arb_sess)
+        arb_res = arb.run(arb_sess)
+        ship_sess = _session(pps)
+        ship = _compiled(ship_sess, pushdown=False)
+        ship_res = ship.run(ship_sess)
+        assert (arb_res.per_task[-1].result.output_rows
+                == ship_res.per_task[-1].result.output_rows)
+        assert (arb_res.latency_seconds()
+                <= ship_res.latency_seconds() * (1 + 1e-9))
+        if pps == FAST:
+            assert (arb_res.latency_seconds()
+                    < ship_res.latency_seconds() * (1 - 1e-9))
+
+
+def test_explicit_task_option_overrides_arbiter_verdict():
+    sess = _session(FAST)
+    cp = _compiled(sess, pushdown=False)
+    cp.run(sess)
+    assert sess.remote.snapshot().c_pushdown == 0
+
+
+def test_plan_predicate_filter_reaches_the_operator():
+    sess = _session(FAST)
+    pred = lambda page: page[0, 0] % 2 == 0  # noqa: E731
+    cp = _compiled(sess, predicate=pred)
+    (join_task,) = [t for t in cp.tasks if t.op == "bnlj"]
+    assert join_task.options.get("inner_filter") is pred
+    res = cp.run(sess)
+    assert res.per_task[-1].result.output_rows > 0
+
+
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"), 0.0, 1.5])
+def test_plan_filter_rejects_non_finite_selectivity(bad):
+    lp = LogicalPlan("bad")
+    rel = list(range(4))
+    with pytest.raises(ValueError, match="selectivity"):
+        lp.filter(lp.scan("T", rel), bad)
+
+
+def test_plan_filter_rejects_non_callable_predicate():
+    lp = LogicalPlan("bad")
+    with pytest.raises(TypeError, match="callable"):
+        lp.filter(lp.scan("T", list(range(4))), 0.5, predicate=5)
+
+
+def test_three_leaf_cluster_records_disposition_on_its_join_choice():
+    sess = _session(FAST)
+    a = make_relation(sess.remote, 10 * ROWS, ROWS, DOMAIN, seed=41,
+                      tier="rdma")
+    b = make_relation(sess.remote, 20 * ROWS, ROWS, DOMAIN, seed=42,
+                      tier="rdma")
+    c = make_relation(sess.remote, 40 * ROWS, ROWS, DOMAIN, seed=43,
+                      tier="rdma")
+    lp = LogicalPlan("q3")
+    a_n = lp.scan("A", a, rows_per_page=ROWS)
+    b_n = lp.scan("B", b, rows_per_page=ROWS)
+    c_n = lp.filter(lp.scan("C", c, rows_per_page=ROWS), 0.3, name="fc")
+    j1 = lp.join(a_n, b_n, out_pages=8.0, selectivity=0.4)
+    lp.join(j1, c_n, out_pages=12.0, name="top", selectivity=0.4)
+    cp = compile_plan(sess, lp, join_op="bnlj")
+    (choice,) = cp.join_choices
+    # The cluster-level record and the plan-level record agree, and every
+    # filter lands in exactly one disposition bucket.
+    assert list(choice.pushed_filters) == cp.pushed_filters
+    assert sorted(cp.pushed_filters + cp.annotation_filters) == ["fc"]
+
+
+def test_ehj_plan_keeps_filters_as_annotations():
+    sess = _session(FAST)
+    r = make_relation(sess.remote, 30 * ROWS, ROWS, DOMAIN, seed=11,
+                      tier="rdma")
+    s = make_relation(sess.remote, 50 * ROWS, ROWS, DOMAIN, seed=12,
+                      tier="rdma")
+    lp = LogicalPlan("ehj")
+    r_n = lp.scan("R", r, rows_per_page=ROWS)
+    s_n = lp.filter(lp.scan("S", s, rows_per_page=ROWS), 0.4, name="sel_s")
+    lp.join(r_n, s_n, out_pages=20.0, name="J")
+    cp = compile_plan(sess, lp, join_op="ehj")
+    assert cp.pushed_filters == []
+    assert cp.annotation_filters == ["sel_s"]
