@@ -17,7 +17,7 @@ def run() -> list[Row]:
     for name in ("ssd", "tcp", "rdma", "dram"):
         tier = TABLE_I[name]
 
-        def total():
+        def total(tier=tier):
             return tier.latency_seconds_bytes(d_bytes, c)
 
         us, t = timed(total, repeats=1000)

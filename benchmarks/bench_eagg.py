@@ -54,7 +54,7 @@ def run() -> list[Row]:
         remop = plan_operator("eagg", stats, TIER, m_b)
         starved = plan_operator("eagg", stats, TIER, m_b, policy="conventional")
 
-        def run_pair():
+        def run_pair(starved=starved, remop=remop):
             res_s, rem_s, _ = _run(starved)
             res_r, rem_r, rel_r = _run(remop)
             assert res_s.group_rows == res_r.group_rows

@@ -34,7 +34,7 @@ def run() -> list[Row]:
         remop = plan_operator("ehj", stats, TIER, m_b)
         starved = plan_operator("ehj", stats, TIER, m_b, policy="conventional")
 
-        def run_pair():
+        def run_pair(starved=starved, remop=remop):
             w_s, lat_s, out_s = _run(starved)
             w_r, lat_r, out_r = _run(remop)
             assert out_s == out_r

@@ -36,7 +36,7 @@ def run() -> list[Row]:
     rows: list[Row] = []
     c_reds, l_reds = [], []
     for m, k, n in LLM_MATMULS:
-        def plan():
+        def plan(m=m, n=n, k=k):
             return plan_matmul_tiles(m, n, k, in_bytes=2)
 
         us, remop = timed(plan)

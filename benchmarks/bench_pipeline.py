@@ -95,7 +95,8 @@ def run() -> list[Row]:
         )
         even_plan = _even_pipeline(ops, stats, m_total)
 
-        def simulate_pair():
+        def simulate_pair(ops=ops, stats=stats, m_total=m_total,
+                          arb=arb, even_plan=even_plan):
             return (_simulate(ops, stats, m_total, plan=arb),
                     _simulate(ops, stats, m_total, plan=even_plan))
 

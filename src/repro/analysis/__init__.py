@@ -1,0 +1,47 @@
+"""Static contract analysis: the invariants CI used to trust to convention.
+
+REMOP's "ledger-exact closed forms" claim only holds while every counter on
+the :class:`repro.core.cost_model.TransferLedger` is threaded through every
+snapshot/delta/merge/reset/serialization path, every operator honors its
+registry contract, and the layering (closed forms below, engine above, one
+ledger mutator) stays intact.  Those invariants are purely structural — so
+this package checks them *statically*, from the AST, without importing the
+code under analysis:
+
+  * ``LED1xx`` — ledger-field completeness: a counter added to the ledger
+    must reach every carry site (``rules_ledger``),
+  * ``OPS2xx`` — operator contracts: module declarations, registry wiring,
+    run signatures, pushdown plumbing (``rules_operators``),
+  * ``LAY3xx`` — layering: core imports nothing above it, only the data
+    plane mutates ledgers, simulator paths stay deterministic
+    (``rules_layering``),
+  * ``PAR4xx`` — parity coverage: every public closed form keeps a test
+    witness (``rules_parity``).
+
+Run it with ``python -m repro.analysis`` (text or ``--format json``); see
+``--list-rules`` for the catalog and ``base.SUPPRESS_RE`` for the
+``# lint: ignore[CODE]`` suppression syntax.
+"""
+
+from repro.analysis.base import (
+    Finding,
+    Project,
+    Rule,
+    all_rules,
+    run_analysis,
+)
+# Importing the rule modules registers them with the rule registry.
+from repro.analysis import (  # noqa: F401  (registration side effect)
+    rules_layering,
+    rules_ledger,
+    rules_operators,
+    rules_parity,
+)
+
+__all__ = [
+    "Finding",
+    "Project",
+    "Rule",
+    "all_rules",
+    "run_analysis",
+]

@@ -1,0 +1,101 @@
+"""CLI: ``python -m repro.analysis [--root DIR] [--format text|json] ...``.
+
+Exit status is 1 when any unsuppressed finding exists (CI blocks on it),
+0 otherwise.  ``--show-suppressed`` additionally lists findings that a
+``# lint: ignore[CODE]`` comment silenced — useful for auditing that the
+repo is clean with *zero* suppressions, not clean by silencing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import Project, all_rules, run_analysis
+
+
+def _default_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is three levels up from
+    # the package directory.
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static contract checks for the REMOP repro "
+        "(ledger completeness, operator contracts, layering, parity).",
+    )
+    parser.add_argument(
+        "--root",
+        type=Path,
+        default=None,
+        help="project root containing src/repro and tests/ "
+        "(default: this checkout)",
+    )
+    parser.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="output format (default: text)",
+    )
+    parser.add_argument(
+        "--select",
+        action="append",
+        default=None,
+        metavar="CODE",
+        help="only run rules whose code starts with CODE "
+        "(repeatable; e.g. --select LED --select OPS204)",
+    )
+    parser.add_argument(
+        "--show-suppressed",
+        action="store_true",
+        help="also list findings silenced by # lint: ignore[...] comments",
+    )
+    parser.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print the rule catalog and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.code}  {r.summary}")
+        return 0
+
+    root = args.root if args.root is not None else _default_root()
+    project = Project(root)
+    findings, suppressed = run_analysis(project, select=args.select)
+
+    if args.format == "json":
+        print(
+            json.dumps(
+                {
+                    "root": str(root),
+                    "findings": [f.to_dict() for f in findings],
+                    "suppressed": [f.to_dict() for f in suppressed],
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in findings:
+            print(f.render())
+        if args.show_suppressed:
+            for f in suppressed:
+                print(f"{f.render()}  [suppressed]")
+        n, s = len(findings), len(suppressed)
+        print(
+            f"{n} finding{'s' if n != 1 else ''}"
+            f" ({s} suppressed)" if s else
+            f"{n} finding{'s' if n != 1 else ''}"
+        )
+
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

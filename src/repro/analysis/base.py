@@ -1,0 +1,273 @@
+"""Analysis framework: findings, the project model, rules, suppressions.
+
+Everything here is pure AST work — the analyzed code is never imported, so
+the linter can check a broken tree (that is rather the point) and fixture
+mini-packages in tests can seed violations without polluting ``sys.path``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+# Trailing-comment suppression: ``x = 1  # lint: ignore[LED104]`` silences
+# the named code(s) on that line; codes are comma-separated.  Suppressed
+# findings are still collected (reported separately), so "lints clean with
+# zero suppressions" is checkable.
+SUPPRESS_RE = re.compile(r"#\s*lint:\s*ignore\[([A-Z0-9,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to ``path:line``."""
+
+    code: str  # e.g. "LED104"
+    path: str  # project-root-relative, posix separators
+    line: int
+    message: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "code": self.code,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "suppressed": self.suppressed,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One registered rule family entry: a code, its docs, and its checker.
+
+    ``check(project)`` yields raw findings (suppression is applied by the
+    runner, not by rules).  One checker function may own several codes —
+    register one :class:`Rule` per code so ``--list-rules`` and the README
+    catalog stay complete — the registry de-duplicates checkers at run time.
+    """
+
+    code: str
+    summary: str
+    check: Callable[["Project"], Iterable[Finding]]
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def rule(code: str, summary: str) -> Callable[[Callable], Callable]:
+    """Register ``check`` under ``code``; returns the function unchanged."""
+
+    def deco(check: Callable[["Project"], Iterable[Finding]]) -> Callable:
+        if code in _RULES:
+            raise ValueError(f"rule {code!r} already registered")
+        _RULES[code] = Rule(code=code, summary=summary, check=check)
+        return check
+
+    return deco
+
+
+def all_rules() -> Tuple[Rule, ...]:
+    return tuple(_RULES[c] for c in sorted(_RULES))
+
+
+class Project:
+    """A repo-shaped tree under analysis: ``<root>/src/repro`` + ``tests``.
+
+    Loads and parses each file once; missing files/directories are simply
+    absent (fixture mini-packages carry only the files their seeded
+    violation needs — a rule finding nothing to check reports nothing).
+    """
+
+    def __init__(self, root: Path) -> None:
+        self.root = Path(root)
+        self._sources: Dict[Path, str] = {}
+        self._trees: Dict[Path, Optional[ast.Module]] = {}
+
+    @property
+    def src(self) -> Path:
+        return self.root / "src" / "repro"
+
+    @property
+    def tests_dir(self) -> Path:
+        return self.root / "tests"
+
+    def rel(self, path: Path) -> str:
+        return path.relative_to(self.root).as_posix()
+
+    def source(self, path: Path) -> str:
+        if path not in self._sources:
+            self._sources[path] = path.read_text()
+        return self._sources[path]
+
+    def tree(self, path: Path) -> Optional[ast.Module]:
+        """Parse ``path``; ``None`` when the file is missing or unparsable
+        (a syntax error is the compiler's finding to make, not ours)."""
+        if path not in self._trees:
+            try:
+                self._trees[path] = ast.parse(self.source(path))
+            except (OSError, SyntaxError):
+                self._trees[path] = None
+        return self._trees[path]
+
+    def src_files(self, *parts: str) -> List[Path]:
+        """All ``.py`` files under ``src/repro/<parts...>``, sorted."""
+        base = self.src.joinpath(*parts)
+        if not base.is_dir():
+            return []
+        return sorted(p for p in base.rglob("*.py") if p.is_file())
+
+    def test_files(self) -> List[Path]:
+        if not self.tests_dir.is_dir():
+            return []
+        return sorted(self.tests_dir.glob("*.py"))
+
+    def module_path(self, dotted: str) -> Path:
+        """``repro.remote.bnlj`` -> ``<root>/src/repro/remote/bnlj.py``."""
+        rel = Path(*dotted.split("."))
+        cand = self.root / "src" / rel.with_suffix(".py")
+        if cand.is_file():
+            return cand
+        return self.root / "src" / rel / "__init__.py"
+
+    # -- suppressions --------------------------------------------------------
+
+    def suppressed_codes(self, path: Path, line: int) -> frozenset:
+        """Codes silenced by a ``# lint: ignore[...]`` comment on ``line``."""
+        try:
+            text = self.source(path).splitlines()[line - 1]
+        except (OSError, IndexError):
+            return frozenset()
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            return frozenset()
+        return frozenset(c.strip() for c in m.group(1).split(",") if c.strip())
+
+
+def run_analysis(
+    project: Project, select: Optional[Iterable[str]] = None
+) -> Tuple[List[Finding], List[Finding]]:
+    """Run every registered rule; returns ``(findings, suppressed)``.
+
+    ``select`` filters by code or code prefix (``LED``, ``OPS204``); both
+    lists are sorted by (path, line, code) for stable output.
+    """
+    prefixes = None if select is None else tuple(select)
+    checks: List[Callable[[Project], Iterable[Finding]]] = []
+    seen = set()
+    for r in all_rules():
+        if prefixes is not None and not any(
+            r.code.startswith(p) for p in prefixes
+        ):
+            continue
+        if r.check not in seen:
+            seen.add(r.check)
+            checks.append(r.check)
+
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    for check in checks:
+        for f in check(project):
+            if prefixes is not None and not any(
+                f.code.startswith(p) for p in prefixes
+            ):
+                continue
+            codes = project.suppressed_codes(project.root / f.path, f.line)
+            if f.code in codes:
+                suppressed.append(dataclasses.replace(f, suppressed=True))
+            else:
+                active.append(f)
+    key = lambda f: (f.path, f.line, f.code)  # noqa: E731
+    return sorted(active, key=key), sorted(suppressed, key=key)
+
+
+# -- shared AST helpers ------------------------------------------------------
+
+
+def class_def(tree: Optional[ast.Module], name: str) -> Optional[ast.ClassDef]:
+    if tree is None:
+        return None
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def func_def(
+    body: Iterable[ast.stmt], name: str
+) -> Optional[ast.FunctionDef]:
+    for node in body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def dataclass_fields(cls: Optional[ast.ClassDef]) -> List[Tuple[str, int]]:
+    """Annotated class-level fields ``(name, line)``, declaration order."""
+    if cls is None:
+        return []
+    out: List[Tuple[str, int]] = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(
+            node.target, ast.Name
+        ):
+            if not node.target.id.startswith("_"):
+                out.append((node.target.id, node.lineno))
+    return out
+
+
+def attr_chain(node: ast.AST) -> List[str]:
+    """``a.b.c`` -> ``["a", "b", "c"]``; empty when not a pure name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return []
+
+
+def call_keywords(call: ast.Call) -> Dict[str, ast.expr]:
+    return {kw.arg: kw.value for kw in call.keywords if kw.arg is not None}
+
+
+def const_str_tuple(node: ast.expr) -> Optional[Tuple[str, ...]]:
+    """A literal tuple/list of string constants, else ``None``."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    vals = []
+    for el in node.elts:
+        if not (isinstance(el, ast.Constant) and isinstance(el.value, str)):
+            return None
+        vals.append(el.value)
+    return tuple(vals)
+
+
+def const_str_dict(node: ast.expr) -> Optional[Dict[str, str]]:
+    """A literal ``{str: str}`` dict, else ``None``."""
+    if not isinstance(node, ast.Dict):
+        return None
+    out: Dict[str, str] = {}
+    for k, v in zip(node.keys, node.values):
+        if not (
+            isinstance(k, ast.Constant)
+            and isinstance(k.value, str)
+            and isinstance(v, ast.Constant)
+            and isinstance(v.value, str)
+        ):
+            return None
+        out[k.value] = v.value
+    return out
+
+
+def walk_calls(node: ast.AST) -> Iterator[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            yield sub

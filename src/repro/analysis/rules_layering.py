@@ -1,0 +1,185 @@
+"""LAY3xx — layering invariants across the whole src/repro tree.
+
+Three conventions hold the architecture together:
+
+  * ``core/`` is the closed-form layer — it may depend on nothing above it
+    (an import of ``repro.engine`` or ``repro.remote`` from ``core`` would
+    let simulator behaviour leak into the formulas it is proven against),
+  * ledger mutation is the data plane's monopoly: only the store that owns a
+    ledger (``remote/simulator.py``) and the tier router
+    (``engine/scheduler.py``) may call its mutators or poke its counters —
+    everyone else reads snapshots/deltas, which is what keeps "per-tenant
+    shares sum byte-for-byte to the totals" provable,
+  * simulator paths (``core/``, ``engine/``, ``remote/``) are deterministic:
+    no wall clock, no unseeded randomness — every BENCH_*.json number and
+    every ledger-exactness test depends on replayability.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.base import Finding, Project, attr_chain, rule
+
+# The only files allowed to mutate a TransferLedger in place: the store that
+# owns the ledgers and the scheduler that routes rounds into them.
+LEDGER_MUTATORS = {
+    ("remote", "simulator.py"),
+    ("engine", "scheduler.py"),
+}
+
+# TransferLedger's mutating methods (reads like snapshot()/delta() are fine).
+MUTATING_METHODS = {"read", "write", "pushdown", "merge", "reset"}
+
+# Packages that form the deterministic simulator stack.
+DETERMINISTIC_PKGS = ("core", "engine", "remote")
+
+# Wall-clock and unseeded-randomness call patterns (suffix of the dotted
+# chain).  ``default_rng`` is handled separately: seeded calls are fine.
+NONDET_CALLS = {
+    ("time", "time"),
+    ("time", "monotonic"),
+    ("time", "perf_counter"),
+    ("time", "time_ns"),
+    ("datetime", "now"),
+    ("datetime", "utcnow"),
+}
+
+
+def _imports_random(tree: ast.Module) -> Set[str]:
+    """Names under which the stdlib ``random`` module is visible."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "random":
+                    names.add(a.asname or "random")
+        elif isinstance(node, ast.ImportFrom) and node.module == "random":
+            names.update(a.asname or a.name for a in node.names)
+    return names
+
+
+def check_layering(project: Project) -> Iterator[Finding]:
+    # LAY301 — core/ imports nothing from the layers above it.
+    for path in project.src_files("core"):
+        tree = project.tree(path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mods = [node.module]
+            for mod in mods:
+                if mod.startswith(("repro.engine", "repro.remote")):
+                    yield Finding(
+                        "LAY301", project.rel(path), node.lineno,
+                        f"core/ must not import the layers above it "
+                        f"(import of {mod})",
+                    )
+
+    # LAY302 + LAY303 — scan every module in the deterministic stack.
+    for pkg in DETERMINISTIC_PKGS:
+        for path in project.src_files(pkg):
+            tree = project.tree(path)
+            if tree is None:
+                continue
+            rel = project.rel(path)
+            is_mutator_file = any(
+                path == project.src.joinpath(*parts)
+                for parts in LEDGER_MUTATORS
+            )
+            random_names = _imports_random(tree)
+            for node in ast.walk(tree):
+                yield from _check_ledger_mutation(
+                    node, rel, is_mutator_file
+                )
+                yield from _check_nondeterminism(node, rel, random_names)
+
+
+def _check_ledger_mutation(
+    node: ast.AST, rel: str, allowed: bool
+) -> Iterator[Finding]:
+    if allowed:
+        return
+    # ``<expr>.ledger.read(...)`` and friends.
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        if node.func.attr in MUTATING_METHODS:
+            base = node.func.value
+            if isinstance(base, ast.Attribute) and base.attr == "ledger":
+                yield Finding(
+                    "LAY302", rel, node.lineno,
+                    f"direct ledger mutation "
+                    f"(.ledger.{node.func.attr}(...)) outside the data "
+                    f"plane — route it through TransferScheduler",
+                )
+    # ``<expr>.ledger.c_read += 1`` / ``= 0`` style counter pokes.
+    targets = []
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, ast.AugAssign):
+        targets = [node.target]
+    for t in targets:
+        if isinstance(t, ast.Attribute):
+            base = t.value
+            if isinstance(base, ast.Attribute) and base.attr == "ledger":
+                yield Finding(
+                    "LAY302", rel, t.lineno,
+                    f"direct ledger counter assignment "
+                    f"(.ledger.{t.attr}) outside the data plane",
+                )
+
+
+def _check_nondeterminism(
+    node: ast.AST, rel: str, random_names: Set[str]
+) -> Iterator[Finding]:
+    if not isinstance(node, ast.Call):
+        return
+    chain = attr_chain(node.func)
+    if len(chain) < 2:
+        return
+    tail = tuple(chain[-2:])
+    if tail in NONDET_CALLS:
+        yield Finding(
+            "LAY303", rel, node.lineno,
+            f"nondeterministic call {'.'.join(chain)}() in a simulator "
+            f"path — thread explicit inputs instead",
+        )
+        return
+    # Unseeded numpy Generator / legacy global RNG draws.
+    if "random" in chain[:-1] and chain[0] not in random_names:
+        fn = chain[-1]
+        if fn == "default_rng":
+            if not node.args and not node.keywords:
+                yield Finding(
+                    "LAY303", rel, node.lineno,
+                    f"{'.'.join(chain)}() without a seed in a simulator "
+                    f"path — pass an explicit seed",
+                )
+        elif fn == "seed":
+            pass  # explicit seeding is the fix, not the bug
+        else:
+            yield Finding(
+                "LAY303", rel, node.lineno,
+                f"global-RNG draw {'.'.join(chain)}() in a simulator path "
+                f"— use a seeded default_rng(...)",
+            )
+        return
+    # stdlib ``random`` module calls (any draw off the global RNG).
+    if chain[0] in random_names and len(chain) == 2 and chain[1] != "seed":
+        yield Finding(
+            "LAY303", rel, node.lineno,
+            f"stdlib random call {'.'.join(chain)}() in a simulator path "
+            f"— use a seeded numpy Generator",
+        )
+
+
+_SUMMARIES = {
+    "LAY301": "core/ must not import repro.engine or repro.remote",
+    "LAY302": "only simulator.py and scheduler.py may mutate ledgers",
+    "LAY303": "simulator paths must stay deterministic (no clock/global RNG)",
+}
+for _code, _summary in _SUMMARIES.items():
+    rule(_code, _summary)(check_layering)

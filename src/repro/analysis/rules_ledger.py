@@ -1,0 +1,232 @@
+"""LED1xx — ledger-field completeness (core/cost_model.py).
+
+The transfer ledger is the repo's ground truth: closed forms are proven
+*against* it, so a counter that exists on :class:`TransferLedger` but is
+dropped by one carry site (snapshot, delta, merge, reset, the snapshot
+mirror, ``__add__``, ``_sum_snapshots``, the :class:`HierarchySnapshot`
+aggregate, ``to_dict``, or the hidden-round terms of ``latency_seconds``)
+silently under-counts — exactly the hand-edit drift PRs 6 and 9 risked when
+they added ``c_migration_hidden`` and the pushdown counters by touching
+five sites apiece.  These rules make every carry site mechanical.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from repro.analysis.base import (
+    Finding,
+    Project,
+    attr_chain,
+    call_keywords,
+    class_def,
+    dataclass_fields,
+    func_def,
+    rule,
+    walk_calls,
+)
+
+COST_MODEL = ("core", "cost_model.py")
+
+
+def _snapshot_ctor_kwargs(fn: Optional[ast.FunctionDef], ctor: str) -> Optional[Set[str]]:
+    """Keyword names of the ``ctor(...)`` call(s) inside ``fn``."""
+    if fn is None:
+        return None
+    names: Set[str] = set()
+    found = False
+    for call in walk_calls(fn):
+        chain = attr_chain(call.func)
+        if chain and chain[-1] == ctor:
+            found = True
+            names |= set(call_keywords(call))
+    return names if found else None
+
+
+def _self_attr_targets(fn: Optional[ast.FunctionDef]) -> Set[str]:
+    """Attributes of ``self`` assigned (plain or augmented) inside ``fn``."""
+    if fn is None:
+        return set()
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        targets: List[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        for t in targets:
+            chain = attr_chain(t)
+            if len(chain) == 2 and chain[0] == "self":
+                out.add(chain[1])
+    return out
+
+
+def _dict_keys(fn: Optional[ast.FunctionDef]) -> Optional[Set[str]]:
+    """String keys of every dict literal inside ``fn`` (None if no dict)."""
+    if fn is None:
+        return None
+    keys: Set[str] = set()
+    found = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            found = True
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+    return keys if found else None
+
+
+def _attrs_read(fn: Optional[ast.FunctionDef]) -> Set[str]:
+    if fn is None:
+        return set()
+    return {n.attr for n in ast.walk(fn) if isinstance(n, ast.Attribute)}
+
+
+def _missing(fields: List[str], carried: Optional[Set[str]]) -> List[str]:
+    if carried is None:
+        return list(fields)
+    return [f for f in fields if f not in carried]
+
+
+def check_ledger(project: Project) -> Iterator[Finding]:
+    path = project.src.joinpath(*COST_MODEL)
+    tree = project.tree(path)
+    if tree is None:
+        return
+    rel = project.rel(path)
+
+    ledger = class_def(tree, "TransferLedger")
+    snap = class_def(tree, "LedgerSnapshot")
+    hier = class_def(tree, "HierarchySnapshot")
+    if ledger is None or snap is None:
+        return
+
+    lfields = [n for n, _ in dataclass_fields(ledger)]
+    sfields = [n for n, _ in dataclass_fields(snap)]
+
+    # LED101 — the snapshot must mirror the ledger field-for-field.
+    for name, line in dataclass_fields(ledger):
+        if name not in sfields:
+            yield Finding(
+                "LED101", rel, line,
+                f"TransferLedger.{name} has no LedgerSnapshot mirror field",
+            )
+    for name, line in dataclass_fields(snap):
+        if name not in lfields:
+            yield Finding(
+                "LED101", rel, line,
+                f"LedgerSnapshot.{name} has no TransferLedger counter "
+                f"backing it",
+            )
+
+    def site(cls: ast.ClassDef, meth: str) -> Optional[ast.FunctionDef]:
+        return func_def(cls.body, meth)
+
+    def report(code: str, fn: Optional[ast.FunctionDef], owner: str,
+               meth: str, missing: List[str], what: str) -> Iterator[Finding]:
+        line = fn.lineno if fn is not None else (
+            ledger.lineno if owner == "TransferLedger" else snap.lineno
+        )
+        if fn is None:
+            yield Finding(
+                code, rel, line,
+                f"{owner} has no {meth}() carry site",
+            )
+        elif missing:
+            yield Finding(
+                code, rel, line,
+                f"{owner}.{meth} drops counter(s) {missing} ({what})",
+            )
+
+    # LED102/103 — snapshot()/delta() must construct a complete snapshot.
+    for code, meth in (("LED102", "snapshot"), ("LED103", "delta")):
+        fn = site(ledger, meth)
+        carried = _snapshot_ctor_kwargs(fn, "LedgerSnapshot")
+        yield from report(code, fn, "TransferLedger", meth,
+                          _missing(lfields, carried),
+                          "LedgerSnapshot(...) keyword per counter")
+
+    # LED104 — merge() must accumulate every counter.
+    fn = site(ledger, "merge")
+    yield from report("LED104", fn, "TransferLedger", "merge",
+                      _missing(lfields, _self_attr_targets(fn)),
+                      "self.<counter> += other.<counter>")
+
+    # LED105 — reset() must zero every counter.
+    fn = site(ledger, "reset")
+    yield from report("LED105", fn, "TransferLedger", "reset",
+                      _missing(lfields, _self_attr_targets(fn)),
+                      "assignment per counter")
+
+    # LED106 — LedgerSnapshot.__add__ must carry every field.
+    fn = site(snap, "__add__")
+    yield from report("LED106", fn, "LedgerSnapshot", "__add__",
+                      _missing(sfields,
+                               _snapshot_ctor_kwargs(fn, "LedgerSnapshot")),
+                      "LedgerSnapshot(...) keyword per field")
+
+    # LED107 — _sum_snapshots (the HierarchySnapshot aggregate seed).
+    fn = func_def(tree.body, "_sum_snapshots")
+    if fn is not None:
+        missing = _missing(sfields, _snapshot_ctor_kwargs(fn, "LedgerSnapshot"))
+        if missing:
+            yield Finding(
+                "LED107", rel, fn.lineno,
+                f"_sum_snapshots drops counter(s) {missing}",
+            )
+
+    # LED108 — HierarchySnapshot must mirror every field as an aggregate.
+    if hier is not None:
+        have = {n.name for n in hier.body if isinstance(n, ast.FunctionDef)}
+        for name in sfields:
+            if name not in have:
+                yield Finding(
+                    "LED108", rel, hier.lineno,
+                    f"HierarchySnapshot has no aggregate property for "
+                    f"ledger counter {name!r}",
+                )
+
+    # LED109 — to_dict() serialization must carry every counter.
+    fn = site(snap, "to_dict")
+    yield from report("LED109", fn, "LedgerSnapshot", "to_dict",
+                      _missing(sfields, _dict_keys(fn)),
+                      "dict key per counter")
+
+    # LED110 — hidden-round counters must enter the latency_seconds round
+    # accounting (they exist precisely to be subtracted from paying rounds).
+    hidden = [f for f in lfields if f.startswith("c_") and f.endswith("_hidden")]
+    for owner, cls in (("TransferLedger", ledger), ("HierarchySnapshot", hier)):
+        if cls is None:
+            continue
+        fn = site(cls, "latency_seconds")
+        if fn is None:
+            yield Finding(
+                "LED110", rel, cls.lineno,
+                f"{owner} has no latency_seconds() round accounting",
+            )
+            continue
+        read = _attrs_read(fn)
+        for f in hidden:
+            if f not in read:
+                yield Finding(
+                    "LED110", rel, fn.lineno,
+                    f"{owner}.latency_seconds never discounts hidden "
+                    f"round counter {f!r}",
+                )
+
+
+_SUMMARIES = {
+    "LED101": "TransferLedger and LedgerSnapshot fields must mirror 1:1",
+    "LED102": "TransferLedger.snapshot() must carry every counter",
+    "LED103": "TransferLedger.delta() must carry every counter",
+    "LED104": "TransferLedger.merge() must accumulate every counter",
+    "LED105": "TransferLedger.reset() must zero every counter",
+    "LED106": "LedgerSnapshot.__add__ must carry every field",
+    "LED107": "_sum_snapshots must sum every field",
+    "LED108": "HierarchySnapshot must aggregate every ledger counter",
+    "LED109": "LedgerSnapshot.to_dict must serialize every counter",
+    "LED110": "hidden-round counters must enter latency_seconds accounting",
+}
+for _code, _summary in _SUMMARIES.items():
+    rule(_code, _summary)(check_ledger)

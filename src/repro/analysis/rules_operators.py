@@ -1,0 +1,314 @@
+"""OPS2xx — operator contracts (engine/registry.py <-> remote/*.py).
+
+Every spill operator is one :class:`OperatorSpec` registration plus a data
+plane module; the session API, the arbiter, and the plan frontend all trust
+that the two agree: the module's declared ``INPUTS``/``INPUT_STATS``/
+``STREAMS`` are what the registration wires, the run function's signature
+binds those inputs positionally, and the pushdown hooks emit kwargs the run
+function actually accepts.  Each of those used to be checked only by the
+first integration test that happened to exercise the operator; these rules
+check the contract itself.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.base import (
+    Finding,
+    Project,
+    attr_chain,
+    call_keywords,
+    class_def,
+    const_str_dict,
+    const_str_tuple,
+    dataclass_fields,
+    func_def,
+    rule,
+    walk_calls,
+)
+
+REGISTRY = ("engine", "registry.py")
+
+
+def _module_aliases(fn: ast.FunctionDef) -> Dict[str, str]:
+    """``bnlj_mod = importlib.import_module("repro.remote.bnlj")`` bindings."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(fn):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt = node.targets[0]
+        if not isinstance(tgt, ast.Name):
+            continue
+        val = node.value
+        if not isinstance(val, ast.Call):
+            continue
+        chain = attr_chain(val.func)
+        if chain[-1:] == ["import_module"] and val.args:
+            arg = val.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                out[tgt.id] = arg.value
+    return out
+
+
+def _registrations(tree: ast.Module) -> List[ast.Call]:
+    """Every ``register(OperatorSpec(...))`` call's inner OperatorSpec call."""
+    specs: List[ast.Call] = []
+    for call in walk_calls(tree):
+        chain = attr_chain(call.func)
+        if chain[-1:] != ["register"] or not call.args:
+            continue
+        inner = call.args[0]
+        if isinstance(inner, ast.Call) and attr_chain(inner.func)[-1:] == [
+            "OperatorSpec"
+        ]:
+            specs.append(inner)
+    return specs
+
+
+def _module_const(tree: ast.Module, name: str) -> Tuple[Optional[ast.expr], int]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    return node.value, node.lineno
+        if isinstance(node, ast.AnnAssign) and isinstance(
+            node.target, ast.Name
+        ) and node.target.id == name:
+            return node.value, node.lineno
+    return None, 0
+
+
+def _return_dict_keys(fn: ast.FunctionDef) -> Optional[Set[str]]:
+    """String keys of dict literals returned by ``fn`` (None if opaque)."""
+    keys: Set[str] = set()
+    found = False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and node.value is not None:
+            if isinstance(node.value, ast.Dict):
+                found = True
+                for k in node.value.keys:
+                    if isinstance(k, ast.Constant) and isinstance(
+                        k.value, str
+                    ):
+                        keys.add(k.value)
+            else:
+                return None  # opaque return: can't verify statically
+    return keys if found else None
+
+
+def check_operators(project: Project) -> Iterator[Finding]:
+    reg_path = project.src.joinpath(*REGISTRY)
+    reg_tree = project.tree(reg_path)
+    if reg_tree is None:
+        return
+    reg_rel = project.rel(reg_path)
+
+    stats_fields = {
+        n for n, _ in dataclass_fields(class_def(reg_tree, "WorkloadStats"))
+    }
+    ensure = func_def(reg_tree.body, "_ensure_builtin")
+    aliases = _module_aliases(ensure) if ensure is not None else {}
+
+    for spec in _registrations(reg_tree):
+        kw = call_keywords(spec)
+        name_node = kw.get("name")
+        op = (
+            name_node.value
+            if isinstance(name_node, ast.Constant)
+            and isinstance(name_node.value, str)
+            else "<?>"
+        )
+
+        # Which data-plane module does this spec register?  Follow ``run=``.
+        run_chain = attr_chain(kw.get("run", ast.Name(id="", ctx=ast.Load())))
+        mod_alias = run_chain[0] if len(run_chain) == 2 else None
+        dotted = aliases.get(mod_alias or "")
+        if dotted is None:
+            yield Finding(
+                "OPS203", reg_rel, spec.lineno,
+                f"operator {op!r}: run= must reference a data-plane module "
+                f"imported in _ensure_builtin (got "
+                f"{'.'.join(run_chain) or 'nothing'})",
+            )
+            continue
+        mod_path = project.module_path(dotted)
+        mod_tree = project.tree(mod_path)
+        if mod_tree is None:
+            yield Finding(
+                "OPS201", reg_rel, spec.lineno,
+                f"operator {op!r}: data-plane module {dotted} not found",
+            )
+            continue
+        mod_rel = project.rel(mod_path)
+
+        # OPS201 — module-level contract declarations.
+        inputs_node, inputs_line = _module_const(mod_tree, "INPUTS")
+        stats_node, stats_line = _module_const(mod_tree, "INPUT_STATS")
+        streams_node, streams_line = _module_const(mod_tree, "STREAMS")
+        inputs = const_str_tuple(inputs_node) if inputs_node else None
+        input_stats = const_str_dict(stats_node) if stats_node else None
+        streams = const_str_tuple(streams_node) if streams_node else None
+        for decl, node, val in (
+            ("INPUTS", inputs_node, inputs),
+            ("INPUT_STATS", stats_node, input_stats),
+            ("STREAMS", streams_node, streams),
+        ):
+            if node is None:
+                yield Finding(
+                    "OPS201", mod_rel, 1,
+                    f"operator module {dotted} does not declare {decl}",
+                )
+            elif val is None:
+                yield Finding(
+                    "OPS201", mod_rel, node.lineno,
+                    f"operator module {dotted}: {decl} must be a literal of "
+                    f"string constants (statically checkable)",
+                )
+
+        # OPS202 — INPUT_STATS maps exactly the INPUTS onto WorkloadStats.
+        if inputs is not None and input_stats is not None:
+            extra = sorted(set(input_stats) - set(inputs))
+            missing = [i for i in inputs if i not in input_stats]
+            if extra or missing:
+                yield Finding(
+                    "OPS202", mod_rel, stats_line,
+                    f"operator {op!r}: INPUT_STATS keys must equal INPUTS "
+                    f"(missing {missing}, unknown {extra})",
+                )
+            if stats_fields:
+                bad = sorted(
+                    v for v in input_stats.values() if v not in stats_fields
+                )
+                if bad:
+                    yield Finding(
+                        "OPS202", mod_rel, stats_line,
+                        f"operator {op!r}: INPUT_STATS values {bad} are not "
+                        f"WorkloadStats fields",
+                    )
+
+        # OPS203 — the registration must wire the module's own declarations.
+        for spec_kw, decl in (
+            ("inputs", "INPUTS"),
+            ("input_stats", "INPUT_STATS"),
+            ("streams", "STREAMS"),
+        ):
+            node = kw.get(spec_kw)
+            chain = attr_chain(node) if node is not None else []
+            if chain != [mod_alias, decl]:
+                got = ".".join(chain) if chain else (
+                    "nothing" if node is None else "a non-reference"
+                )
+                yield Finding(
+                    "OPS203", reg_rel, spec.lineno,
+                    f"operator {op!r}: {spec_kw}= must wire "
+                    f"{mod_alias}.{decl} (got {got})",
+                )
+
+        # OPS204 — run signature binds INPUTS positionally after the store.
+        run_fn = (
+            func_def(mod_tree.body, run_chain[1])
+            if len(run_chain) == 2
+            else None
+        )
+        if run_fn is None:
+            yield Finding(
+                "OPS204", mod_rel, 1,
+                f"operator {op!r}: run function "
+                f"{run_chain[-1] if run_chain else '<?>'} not found in "
+                f"{dotted}",
+            )
+        elif inputs is not None:
+            pos = [a.arg for a in run_fn.args.posonlyargs + run_fn.args.args]
+            got = tuple(pos[1 : 1 + len(inputs)])
+            if len(pos) < 1 + len(inputs) or got != inputs:
+                yield Finding(
+                    "OPS204", mod_rel, run_fn.lineno,
+                    f"operator {op!r}: {run_fn.name}() must take INPUTS "
+                    f"{list(inputs)} positionally after the store "
+                    f"(signature has {list(got)})",
+                )
+
+        # OPS205 — pushdown pricing and its data-plane kwargs come in pairs.
+        has_pd = "pushdown" in kw
+        has_pdkw = "pushdown_kwargs" in kw
+        if has_pd != has_pdkw:
+            present, absent = (
+                ("pushdown", "pushdown_kwargs")
+                if has_pd
+                else ("pushdown_kwargs", "pushdown")
+            )
+            yield Finding(
+                "OPS205", reg_rel, spec.lineno,
+                f"operator {op!r}: {present}= without {absent}= — a priced "
+                f"verdict the data plane can't realize (or kwargs with no "
+                f"pricing)",
+            )
+
+        # OPS206 — pushdown kwargs must be accepted by the run function.
+        pdkw_node = kw.get("pushdown_kwargs")
+        if pdkw_node is not None and run_fn is not None:
+            pdkw_chain = attr_chain(pdkw_node)
+            pdkw_fn = (
+                func_def(reg_tree.body, pdkw_chain[-1]) if pdkw_chain else None
+            )
+            if pdkw_fn is not None:
+                keys = _return_dict_keys(pdkw_fn)
+                if keys is not None:
+                    accepted = {
+                        a.arg
+                        for a in run_fn.args.args + run_fn.args.kwonlyargs
+                    }
+                    bad = sorted(keys - accepted)
+                    if bad:
+                        yield Finding(
+                            "OPS206", reg_rel, pdkw_fn.lineno,
+                            f"operator {op!r}: pushdown kwargs {bad} are not "
+                            f"parameters of {run_fn.name}()",
+                        )
+
+        # OPS207 — stream footprint decomposition covers exactly STREAMS.
+        sfp_node = kw.get("stream_footprints")
+        if sfp_node is not None and streams is not None:
+            sfp_chain = attr_chain(sfp_node)
+            sfp_fn = (
+                func_def(reg_tree.body, sfp_chain[-1]) if sfp_chain else None
+            )
+            if sfp_fn is not None:
+                keys = _return_dict_keys(sfp_fn)
+                if keys is not None and keys != set(streams):
+                    yield Finding(
+                        "OPS207", reg_rel, sfp_fn.lineno,
+                        f"operator {op!r}: stream_footprints keys "
+                        f"{sorted(keys)} must equal declared STREAMS "
+                        f"{list(streams)}",
+                    )
+
+        # OPS208 — the cost-model hooks the arbiter/explain need, together.
+        if "model" in kw and "costs" not in kw:
+            yield Finding(
+                "OPS208", reg_rel, spec.lineno,
+                f"operator {op!r}: model= without costs= — explain() cannot "
+                f"decompose L = D + tau*C",
+            )
+        if streams and "stream_footprints" not in kw:
+            yield Finding(
+                "OPS208", reg_rel, spec.lineno,
+                f"operator {op!r}: declares spill streams {list(streams)} "
+                f"but wires no stream_footprints=",
+            )
+
+
+_SUMMARIES = {
+    "OPS201": "operator modules must declare literal INPUTS/INPUT_STATS/STREAMS",
+    "OPS202": "INPUT_STATS must map exactly INPUTS onto WorkloadStats fields",
+    "OPS203": "registrations must wire the module's own declarations",
+    "OPS204": "run signatures must bind INPUTS positionally after the store",
+    "OPS205": "pushdown pricing and pushdown kwargs must be paired",
+    "OPS206": "pushdown kwargs must be parameters of the run function",
+    "OPS207": "stream_footprints must decompose exactly the declared STREAMS",
+    "OPS208": "cost-model hooks (model/costs, streams/footprints) pair up",
+}
+for _code, _summary in _SUMMARIES.items():
+    rule(_code, _summary)(check_operators)

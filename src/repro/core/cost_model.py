@@ -205,6 +205,25 @@ class LedgerSnapshot:
     def latency_cost(self, tau: float) -> float:
         return latency_cost(self.d_total, self.c_total, tau)
 
+    def to_dict(self) -> Dict[str, float]:
+        """Counter-per-key serialization (bench JSON, server responses).
+
+        Spelled as an explicit dict literal — not ``dataclasses.asdict`` —
+        so the LED109 contract check can verify statically that every
+        counter survives serialization.
+        """
+        return {
+            "d_read": self.d_read,
+            "d_write": self.d_write,
+            "c_read": self.c_read,
+            "c_write": self.c_write,
+            "c_prefetch_hidden": self.c_prefetch_hidden,
+            "c_migration_hidden": self.c_migration_hidden,
+            "c_pushdown": self.c_pushdown,
+            "d_pushdown": self.d_pushdown,
+            "d_pushdown_saved": self.d_pushdown_saved,
+        }
+
 
 @dataclasses.dataclass
 class TransferLedger:
@@ -546,6 +565,13 @@ class HierarchySnapshot:
     def zero(cls, spec: "HierarchySpec") -> "HierarchySnapshot":
         """An all-zero snapshot shaped like ``spec`` (accumulator seed)."""
         return cls(tiers=tuple((n, LedgerSnapshot()) for n in spec.names))
+
+    def to_dict(self) -> Dict[str, Dict[str, float]]:
+        """Per-tier counter dicts keyed by tier name, plus the aggregate
+        under ``"total"`` (which per-tier shares sum to by construction)."""
+        out = {name: snap.to_dict() for name, snap in self.tiers}
+        out["total"] = self.total.to_dict()
+        return out
 
     # Aggregate pass-throughs (keep operator reporting tier-agnostic).
     @property

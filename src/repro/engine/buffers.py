@@ -100,7 +100,7 @@ class BufferPool:
         for stream in list(self._bufs):
             if self._counts.get(stream, 0):
                 self._drain(stream, force=True)
-        for stream, page_ids in self._pages.items():
+        for page_ids in self._pages.values():
             self.sched.stream_flushed(page_ids)
 
     def buffered_rows(self, stream: Hashable = 0) -> int:

@@ -622,7 +622,7 @@ class Server:
         if not owner:
             return
         need: Dict[int, float] = {}
-        for task, ob in zip(ten.tasks, ten.grants):
+        for _task, ob in zip(ten.tasks, ten.grants):
             if ob is None or ob.placement is None:
                 continue
             ti = self.spec.index(ob.placement)

@@ -800,7 +800,7 @@ class Session:
                     for s in spec.streams
                 )
             if stream_rows:
-                for s, s_tier, s_fp in stream_rows:
+                for _s, s_tier, s_fp in stream_rows:
                     usage[s_tier] = usage.get(s_tier, 0.0) + s_fp
             else:
                 usage[tier_name] = usage.get(tier_name, 0.0) + fp

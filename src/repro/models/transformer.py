@@ -294,7 +294,7 @@ def segment_forward(params: Params, cfg: ModelConfig, seg: StackSegment,
         carry = (x, jnp.zeros((), jnp.float32))
         cache_list = []
         for l in range(seg.repeats):
-            layer_params = jax.tree.map(lambda a: a[l], params)
+            layer_params = jax.tree.map(lambda a, l=l: a[l], params)
             carry, c = fn(carry, layer_params)
             cache_list.append(c)
         (x, aux) = carry
@@ -320,7 +320,7 @@ def segment_decode(params: Params, cfg: ModelConfig, seg: StackSegment,
     if _UNROLL:
         cache_list = []
         for l in range(seg.repeats):
-            xs_l = jax.tree.map(lambda a: a[l], (params, caches))
+            xs_l = jax.tree.map(lambda a, l=l: a[l], (params, caches))
             x, c = step(x, xs_l)
             cache_list.append(c)
         return x, jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)

@@ -1,0 +1,7 @@
+"""Fixture: core/ reaching up into the engine layer (seeded LAY301)."""
+
+from repro.engine import registry  # seeded: upward import
+
+
+def peek():
+    return registry

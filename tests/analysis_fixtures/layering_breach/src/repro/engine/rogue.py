@@ -1,0 +1,5 @@
+"""Fixture: ledger mutation outside the data plane (seeded LAY302)."""
+
+
+def sneak(store, pages):
+    store.ledger.read(pages)  # seeded: direct mutation

@@ -1,0 +1,7 @@
+"""Fixture: wall-clock read on a simulator path (seeded LAY303)."""
+
+import time
+
+
+def stamp():
+    return time.time()  # seeded: nondeterministic call

@@ -1,0 +1,49 @@
+"""Fixture: a complete two-counter ledger whose snapshot() drops c_read.
+
+Every other carry site (delta, merge, reset, __add__, to_dict,
+latency_seconds) is complete, so the analyzer must report exactly one
+LED102 finding at the snapshot definition.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerSnapshot:
+    d_read: float = 0.0
+    c_read: int = 0
+
+    def __add__(self, other):
+        return LedgerSnapshot(
+            d_read=self.d_read + other.d_read,
+            c_read=self.c_read + other.c_read,
+        )
+
+    def to_dict(self):
+        return {"d_read": self.d_read, "c_read": self.c_read}
+
+
+@dataclasses.dataclass
+class TransferLedger:
+    d_read: float = 0.0
+    c_read: int = 0
+
+    def snapshot(self):
+        return LedgerSnapshot(d_read=self.d_read)  # seeded: drops c_read
+
+    def delta(self, since):
+        return LedgerSnapshot(
+            d_read=self.d_read - since.d_read,
+            c_read=self.c_read - since.c_read,
+        )
+
+    def merge(self, other):
+        self.d_read += other.d_read
+        self.c_read += other.c_read
+
+    def reset(self):
+        self.d_read = 0.0
+        self.c_read = 0
+
+    def latency_seconds(self, tier):
+        return 0.0

@@ -1,0 +1,37 @@
+"""Fixture registry: one correct-looking registration of a drifted module."""
+
+import dataclasses
+import importlib
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadStats:
+    size_r: float = 0.0
+    size_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    name: str
+    run: object
+    inputs: tuple
+    input_stats: dict
+    streams: tuple
+
+
+_REGISTRY = {}
+
+
+def register(spec):
+    _REGISTRY[spec.name] = spec
+
+
+def _ensure_builtin():
+    bnlj_mod = importlib.import_module("repro.remote.bnlj")
+    register(OperatorSpec(
+        name="bnlj",
+        run=bnlj_mod.bnlj,
+        inputs=bnlj_mod.INPUTS,
+        input_stats=bnlj_mod.INPUT_STATS,
+        streams=bnlj_mod.STREAMS,
+    ))

@@ -1,0 +1,14 @@
+"""Fixture operator whose run signature dropped a declared input.
+
+INPUTS declares ("outer", "inner") but the run function only binds
+``outer`` — the analyzer must report exactly one OPS204 finding at its
+definition line.
+"""
+
+INPUTS = ("outer", "inner")
+INPUT_STATS = {"outer": "size_r", "inner": "size_s"}
+STREAMS = ()
+
+
+def bnlj(store, outer, plan):  # seeded: "inner" missing from the signature
+    return None

@@ -1,0 +1,9 @@
+"""Fixture: one witnessed closed form, one without a test (seeded PAR401)."""
+
+
+def covered_latency(d, c, tau):
+    return d + tau * c
+
+
+def lonely_latency(d, c, tau):  # seeded: no test references this
+    return d + tau * c

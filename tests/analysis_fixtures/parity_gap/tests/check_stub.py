@@ -1,0 +1,7 @@
+"""Fixture test file (named check_* so the real pytest run skips it)."""
+
+from repro.core.policies import covered_latency
+
+
+def check_covered():
+    assert covered_latency(1.0, 2.0, 0.5) == 2.0

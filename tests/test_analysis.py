@@ -1,0 +1,158 @@
+"""Tests for the static contract analyzer (src/repro/analysis).
+
+Each fixture mini-package under ``tests/analysis_fixtures/`` seeds exactly
+one violation per rule family; the tests pin the reported code, file, and
+line, so a rule that drifts (stops firing, or fires somewhere else) fails
+here before it silently stops guarding the real tree.  The self-check test
+then asserts the real repo lints clean with zero suppressions — the
+merge-bar the CI ``static-analysis`` job enforces.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import Project, all_rules, run_analysis
+
+FIXTURES = Path(__file__).resolve().parent / "analysis_fixtures"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _line_of(path: Path, needle: str) -> int:
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        if needle in line:
+            return i
+    raise AssertionError(f"{needle!r} not found in {path}")
+
+
+def _lint(root: Path, select=None):
+    return run_analysis(Project(root), select=select)
+
+
+# -- rule catalog ------------------------------------------------------------
+
+
+def test_rule_catalog_covers_all_four_families():
+    codes = [r.code for r in all_rules()]
+    assert len(codes) == len(set(codes))
+    families = {c[:3] for c in codes}
+    assert families == {"LED", "OPS", "LAY", "PAR"}
+    assert all(r.summary for r in all_rules())
+
+
+# -- seeded fixtures: one violation per family, code/file/line pinned --------
+
+
+def test_ledger_fixture_reports_dropped_counter():
+    root = FIXTURES / "ledger_drop"
+    findings, suppressed = _lint(root)
+    assert suppressed == []
+    assert [f.code for f in findings] == ["LED102"]
+    f = findings[0]
+    assert f.path == "src/repro/core/cost_model.py"
+    assert f.line == _line_of(root / f.path, "def snapshot")
+    assert "c_read" in f.message
+
+
+def test_operator_fixture_reports_signature_drift():
+    root = FIXTURES / "operator_drift"
+    findings, suppressed = _lint(root)
+    assert suppressed == []
+    assert [f.code for f in findings] == ["OPS204"]
+    f = findings[0]
+    assert f.path == "src/repro/remote/bnlj.py"
+    assert f.line == _line_of(root / f.path, "def bnlj")
+    assert "inner" in f.message
+
+
+def test_layering_fixture_reports_all_three_breaches():
+    root = FIXTURES / "layering_breach"
+    findings, suppressed = _lint(root)
+    assert suppressed == []
+    by_code = {f.code: f for f in findings}
+    assert sorted(by_code) == ["LAY301", "LAY302", "LAY303"]
+
+    f = by_code["LAY301"]
+    assert f.path == "src/repro/core/bad.py"
+    assert f.line == _line_of(root / f.path, "from repro.engine")
+
+    f = by_code["LAY302"]
+    assert f.path == "src/repro/engine/rogue.py"
+    assert f.line == _line_of(root / f.path, "store.ledger.read")
+
+    f = by_code["LAY303"]
+    assert f.path == "src/repro/remote/noisy.py"
+    assert f.line == _line_of(root / f.path, "time.time()")
+
+
+def test_parity_fixture_reports_unwitnessed_form():
+    root = FIXTURES / "parity_gap"
+    findings, suppressed = _lint(root)
+    assert suppressed == []
+    assert [f.code for f in findings] == ["PAR401"]
+    f = findings[0]
+    assert f.path == "src/repro/core/policies.py"
+    assert f.line == _line_of(root / f.path, "def lonely_latency")
+    assert "lonely_latency" in f.message
+
+
+# -- selection and suppression ----------------------------------------------
+
+
+def test_select_filters_by_code_prefix():
+    findings, _ = _lint(FIXTURES / "layering_breach", select=["LAY302"])
+    assert [f.code for f in findings] == ["LAY302"]
+    findings, _ = _lint(FIXTURES / "layering_breach", select=["LED"])
+    assert findings == []
+
+
+def test_suppression_comment_moves_finding_to_suppressed(tmp_path):
+    root = tmp_path / "ledger_drop"
+    shutil.copytree(FIXTURES / "ledger_drop", root)
+    target = root / "src" / "repro" / "core" / "cost_model.py"
+    lines = target.read_text().splitlines()
+    i = _line_of(target, "def snapshot") - 1
+    lines[i] = lines[i] + "  # lint: ignore[LED102]"
+    target.write_text("\n".join(lines) + "\n")
+
+    findings, suppressed = _lint(root)
+    assert findings == []
+    assert [f.code for f in suppressed] == ["LED102"]
+    assert suppressed[0].suppressed is True
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+def _run_cli(*args):
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+    )
+
+
+def test_cli_json_output_and_blocking_exit_code():
+    proc = _run_cli("--root", str(FIXTURES / "ledger_drop"), "--format", "json")
+    assert proc.returncode == 1, proc.stderr
+    payload = json.loads(proc.stdout)
+    assert [f["code"] for f in payload["findings"]] == ["LED102"]
+    assert payload["suppressed"] == []
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0, proc.stderr
+    assert "LED102" in proc.stdout and "PAR401" in proc.stdout
+
+
+# -- the merge bar: the real repo lints clean, with zero suppressions --------
+
+
+def test_repo_lints_clean_with_zero_suppressions():
+    findings, suppressed = _lint(REPO_ROOT)
+    assert findings == [], "\n" + "\n".join(f.render() for f in findings)
+    assert suppressed == [], "\n" + "\n".join(f.render() for f in suppressed)

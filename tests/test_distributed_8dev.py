@@ -34,8 +34,7 @@ shape = ShapeSpec("t", seq_len=32, global_batch=8, kind="train")
 batch = jax.tree.map(jnp.asarray, next(synthetic_batches(cfg, shape, seed=0)))
 opt = AdamWConfig(lr=1e-3, total_steps=10, warmup_steps=1)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 sharder = Sharder(mesh, sequence_parallel=True)
 state = steps_lib.init_state(cfg, jax.random.key(0))
 st_shard = steps_lib.state_shardings(state["params"], mesh, sharder)
@@ -75,8 +74,7 @@ caches = tf.pad_caches(cfg, caches, 16)
 want, _ = tf.decode_step(params, cfg, caches, tokens[:, 11],
                          jnp.asarray(11, jnp.int32))
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 sharder = Sharder(mesh, sequence_parallel=False)
 p_shard = shlib.named_sharding_tree(shlib.param_specs(params, sharder), mesh)
 c_shard = specs_lib.cache_shardings(cfg, sharder, caches)
@@ -109,15 +107,13 @@ cfg = reduced(ARCHS["qwen3-0.6b"], n_kv_heads=4)
 params = tf.init_params(jax.random.key(0), cfg)
 store = CheckpointStore({str(tmp_path)!r})
 
-mesh1 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh1 = jax.make_mesh((2, 4), ("data", "model"))
 s1 = Sharder(mesh1)
 shard1 = shlib.named_sharding_tree(shlib.param_specs(params, s1), mesh1)
 p1 = jax.tree.map(lambda x, s: jax.device_put(x, s), params, shard1)
 store.save(7, p1, {{"step": 7}}, blocking=True)
 
-mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = jax.make_mesh((4, 2), ("data", "model"))
 s2 = Sharder(mesh2)
 shard2 = shlib.named_sharding_tree(shlib.param_specs(params, s2), mesh2)
 step, restored, meta = store.restore_latest(params, shard2)
@@ -140,8 +136,7 @@ cfg = reduced(ARCHS["deepseek-v2-lite-16b"], n_experts=8, experts_per_token=2,
 params = tf.init_params(jax.random.key(0), cfg)
 tokens = jax.random.randint(jax.random.key(1), (4, 16), 0, cfg.vocab_size)
 batch = {"tokens": tokens, "targets": tokens}
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 sharder = Sharder(mesh, sequence_parallel=False)
 def loss(p):
     with use_sharder(sharder):

@@ -47,7 +47,7 @@ def test_all_80_cells_present_and_clean():
 
 def test_skips_follow_task_rules():
     cells = _load_all()
-    for (arch, shape, mesh), c in cells.items():
+    for (arch, shape, _mesh), c in cells.items():
         applicable, _ = shape_applicable(ARCHS[arch], SHAPES[shape])
         if c["status"] == "skipped":
             assert not applicable, f"{arch}/{shape} skipped but applicable"

@@ -181,7 +181,8 @@ def test_ledger_snapshot_delta_roundtrip():
     assert s0.c_total + d.c_total == led.c_total
     assert s0.d_total + d.d_total == led.d_total
     # A snapshot is immutable — later traffic must not leak into it.
-    with pytest.raises(Exception):
+    # dataclasses raises FrozenInstanceError, an AttributeError subclass.
+    with pytest.raises(AttributeError):
         s0.c_read = 99
 
 

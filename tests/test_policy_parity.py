@@ -1,0 +1,214 @@
+"""Parity witnesses for the closed forms PAR401 found untested.
+
+Each public name in ``core/policies.py`` must be proven, not just exported:
+the smooth optimizer models against their exact (ceil-based) counterparts on
+divisibility-friendly inputs where the two coincide, the phase-coefficient /
+latency forms against their Table V/VI definitions, and the pushdown costs
+ledger-for-ledger against the simulator's compute-capable tiers.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import HierarchySpec, TierLevel, TierSpec
+from repro.core.policies import (
+    BNLJPlan,
+    EAggPlan,
+    EHJPlan,
+    EMSPlan,
+    PushdownChoice,
+    PushdownCosts,
+    bnlj_costs,
+    bnlj_costs_exact,
+    bnlj_latency,
+    eagg_data_costs,
+    eagg_latency,
+    eagg_optimal_round_costs,
+    eagg_phase_coeffs,
+    eagg_plan,
+    eagg_round_costs,
+    ehj_data_costs,
+    ehj_latency,
+    ehj_optimal_round_costs,
+    ehj_phase_coeffs,
+    ehj_plan,
+    ehj_round_costs,
+    ems_costs,
+    ems_costs_exact,
+    ems_latency,
+    ems_passes,
+    ems_run_formation_costs,
+    ems_total_costs,
+    pushdown_costs,
+    pushdown_or_ship,
+    pushdown_reduce_costs,
+)
+from repro.remote.simulator import MemoryHierarchy
+
+TAU = 3.5
+
+
+def _compute_level(pps: float = 1e6) -> TierLevel:
+    return TierLevel(
+        TierSpec("rdma", bandwidth=6.8e9, rtt=1e-6),
+        compute_pps=pps,
+        pushdown_ops=frozenset({"filter", "reduce"}),
+    )
+
+
+# -- BNLJ --------------------------------------------------------------------
+
+
+def test_bnlj_costs_match_exact_on_divisible_sizes():
+    # m=40, r_in=0.75 -> 30 input pages; p_r=2/3 -> P_R=20, P_S=10, R_out=10.
+    plan = BNLJPlan(m=40.0, r_in=0.75, p_r=2.0 / 3.0)
+    assert plan.outer_pages == pytest.approx(20.0)
+    assert plan.output_pages == pytest.approx(10.0)
+    # All block counts divide evenly, so smooth == exact.
+    d, c = bnlj_costs(100.0, 50.0, 20.0, plan)
+    d_x, c_x = bnlj_costs_exact(100, 50, 20.0, 20, 10, 10)
+    assert d == pytest.approx(d_x) == pytest.approx(370.0)
+    assert c == pytest.approx(c_x) == pytest.approx(32.0)
+
+
+def test_bnlj_latency_is_definition_3():
+    plan = BNLJPlan(m=40.0, r_in=0.75, p_r=2.0 / 3.0)
+    d, c = bnlj_costs(100.0, 50.0, 20.0, plan)
+    assert bnlj_latency(100.0, 50.0, 20.0, plan, TAU) == pytest.approx(
+        d + TAU * c
+    )
+
+
+# -- EMS ---------------------------------------------------------------------
+
+
+def test_ems_passes_log_k_of_runs():
+    # 64 pages, 8-page memory -> 8 runs; fan-in 4 -> ceil(log4 8) = 2 passes.
+    assert ems_passes(64.0, 8.0, 4) == 2
+    assert ems_passes(8.0, 8.0, 4) == 0  # fits in memory: no merge
+    assert ems_passes(64.0, 8.0, 8) == 1
+
+
+def test_ems_costs_match_exact_on_divisible_split():
+    # R_in = 4 pages over k=4 runs -> 1 page per run; R_out = 4.
+    plan = EMSPlan(m=8.0, k=4, r_in=0.5)
+    d, c, p = ems_costs(64.0, 8.0, plan)
+    d_x, c_x, p_x = ems_costs_exact(64, 8, 4, 4)
+    assert p == p_x == 2
+    assert d == pytest.approx(d_x) == pytest.approx(256.0)
+    assert c == pytest.approx(c_x) == pytest.approx(160.0)
+
+
+def test_ems_latency_and_totals_compose():
+    plan = EMSPlan(m=8.0, k=4, r_in=0.5)
+    d_m, c_m, _ = ems_costs(64.0, 8.0, plan)
+    assert ems_latency(64.0, 8.0, plan, TAU) == pytest.approx(d_m + TAU * c_m)
+    d_rf, c_rf = ems_run_formation_costs(64.0, 8.0)
+    d_t, c_t = ems_total_costs(64.0, 8.0, plan)
+    assert d_t == pytest.approx(d_m + d_rf)
+    assert c_t == pytest.approx(c_m + c_rf)
+
+
+# -- EHJ ---------------------------------------------------------------------
+
+
+def test_ehj_phase_coeffs_are_table_v_numerators():
+    b, q, out, p, sigma = 100.0, 80.0, 40.0, 16, 0.25
+    p1, p2, p3 = ehj_phase_coeffs(b, q, out, p, sigma)
+    assert p1 == pytest.approx((b, sigma * sigma * p * b))
+    assert p2 == pytest.approx((q, sigma * sigma * p * q, (1 - sigma) * out))
+    assert p3 == pytest.approx((sigma * (b + q), sigma * out))
+
+
+def test_ehj_plan_round_costs_match_table_vi_closed_forms():
+    b, q, out, m_b, p, sigma = 100.0, 80.0, 40.0, 32.0, 16, 0.25
+    plan = ehj_plan(b, q, out, m_b, p, sigma)
+    assert isinstance(plan, EHJPlan)
+    got = ehj_round_costs(b, q, out, plan)
+    want = ehj_optimal_round_costs(b, q, out, m_b, p, sigma)
+    assert got == pytest.approx(want)
+
+
+def test_ehj_latency_is_definition_3():
+    b, q, out, m_b, p, sigma = 100.0, 80.0, 40.0, 32.0, 16, 0.25
+    plan = ehj_plan(b, q, out, m_b, p, sigma)
+    d = sum(ehj_data_costs(b, q, out, sigma))
+    c = sum(ehj_round_costs(b, q, out, plan))
+    assert ehj_latency(b, q, out, plan, TAU) == pytest.approx(d + TAU * c)
+
+
+# -- EAgg --------------------------------------------------------------------
+
+
+def test_eagg_phase_coeffs_are_table_v_analogues():
+    n, out, p, sigma = 120.0, 30.0, 8, 0.5
+    p1, p2 = eagg_phase_coeffs(n, out, p, sigma)
+    assert p1 == pytest.approx((n, sigma * sigma * p * n, (1 - sigma) * out))
+    assert p2 == pytest.approx((sigma * n, sigma * out))
+
+
+def test_eagg_plan_round_costs_match_closed_forms():
+    n, out, m_b, p, sigma = 120.0, 30.0, 24.0, 8, 0.5
+    plan = eagg_plan(n, out, m_b, p, sigma)
+    assert isinstance(plan, EAggPlan)
+    got = eagg_round_costs(n, out, plan)
+    want = eagg_optimal_round_costs(n, out, m_b, p, sigma)
+    assert got == pytest.approx(want)
+
+
+def test_eagg_latency_is_definition_3():
+    n, out, m_b, p, sigma = 120.0, 30.0, 24.0, 8, 0.5
+    plan = eagg_plan(n, out, m_b, p, sigma)
+    d = sum(eagg_data_costs(n, out, sigma))
+    c = sum(eagg_round_costs(n, out, plan))
+    assert eagg_latency(n, out, plan, TAU) == pytest.approx(d + TAU * c)
+
+
+# -- Pushdown ----------------------------------------------------------------
+
+
+def test_pushdown_costs_match_simulator_ledger():
+    level = _compute_level()
+    hier = MemoryHierarchy(HierarchySpec(levels=(level,)))
+    n, sel, batch = 100, 0.3, 25
+    ids = hier.write_batch(
+        [np.full((4,), i, dtype=np.float32) for i in range(n)], tier=0
+    )
+    before = hier.tiers[0].ledger.snapshot()
+    hier.scan_filtered(0, ids, selectivity=sel, batch_pages=batch)
+    delta = hier.tiers[0].ledger.delta(before)
+
+    pc = pushdown_costs(n, sel, level, batch_pages=batch)
+    assert isinstance(pc, PushdownCosts)
+    assert delta.d_pushdown == pytest.approx(pc.d_ship) == pytest.approx(30.0)
+    assert delta.c_pushdown == pc.c_rounds == 4
+    assert delta.d_pushdown_saved == pytest.approx(pc.d_saved)
+    assert delta.d_pushdown_scanned == pytest.approx(pc.scanned)
+    assert pc.latency_cost(TAU) == pytest.approx(
+        pc.d_ship + TAU * pc.c_rounds + pc.compute_l
+    )
+
+
+def test_pushdown_reduce_costs_ship_one_round():
+    pc = pushdown_reduce_costs(50, 2.0, _compute_level())
+    assert (pc.d_ship, pc.c_rounds, pc.scanned) == (2.0, 1, 50.0)
+    assert pc.d_saved == pytest.approx(48.0)
+
+
+def test_pushdown_or_ship_arbitration():
+    fast = _compute_level(pps=1e9)
+    choice = pushdown_or_ship(100, 0.1, fast, tau=TAU, batch_pages=25)
+    assert isinstance(choice, PushdownChoice)
+    assert choice.push and choice.mode == "push"
+    assert choice.l_push < choice.l_ship
+    assert choice.l_delta <= 0.0
+    assert choice.c_pushdown == 4
+
+    # A tier with no compute capability always ships.
+    bare = TierLevel(TierSpec("ssd", bandwidth=0.53e9, rtt=100e-6))
+    ship = pushdown_or_ship(100, 0.1, bare, tau=TAU, batch_pages=25)
+    assert not ship.push and ship.mode == "ship"
+    assert math.isinf(ship.l_push)
+    assert ship.d_saved == 0.0 and ship.c_pushdown == 0

@@ -128,7 +128,7 @@ def test_adamw_quadratic_convergence():
     params = {"x": jnp.array([5.0, -3.0])}
     opt = init_opt_state(params)
     step = jnp.zeros((), jnp.int32)
-    for i in range(200):
+    for _ in range(200):
         grads = {"x": 2 * params["x"]}
         params, opt, _ = adamw_update(cfg, params, grads, opt, step)
         step = step + 1
