@@ -1,0 +1,118 @@
+"""Execution backend vs simulator: same answers, plus a wall clock.
+
+Runs the same tiny EMS + EHJ pipeline twice per scenario — once on the
+simulated :class:`MemoryHierarchy` and once on the real
+:class:`~repro.remote.backend.ExecutionBackend` (jax arrays on device,
+Pallas ``merge_sort``/``dispatch`` kernels, actually-timed host<->device
+copies) — and reports both clocks side by side:
+
+  * ``simulated_seconds`` / ``latency_cost``: the deterministic Eq.-(1)
+    numbers, identical between the two runs by construction (asserted), and
+    the only keys the CI regression gate prices;
+  * ``wall_seconds``: what the backend measured, machine-dependent and
+    explicitly never gated (see ``scripts/check_regression.py``).
+
+Parity booleans (ledger + byte-identical outputs) are part of the report so
+a CI artifact diff shows at a glance if the backend ever drifts from the
+simulation it claims to mirror.  Writes ``BENCH_backend.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import TABLE_I
+from repro.engine import Session, WorkloadStats
+from repro.engine.registry import hierarchy_spec
+from repro.remote import MemoryHierarchy, make_backend
+from repro.remote.simulator import make_key_pages, make_relation
+from benchmarks.common import Row
+
+ROWS = 4
+M_TOTAL = 24.0
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                         "BENCH_backend.json")
+
+SCENARIOS = [
+    ("tcp", (TABLE_I["tcp"],)),
+    ("dram_rdma_ssd", ((TABLE_I["dram"], 16), (TABLE_I["rdma"], 128),
+                       TABLE_I["ssd"])),
+]
+
+
+def _tasks(sess: Session):
+    """Tiny on purpose: interpret-mode Pallas gathers step row by row."""
+    ids = make_key_pages(sess.remote, 24, ROWS, seed=3)
+    build = make_relation(sess.remote, 8 * ROWS, ROWS, 16, seed=4)
+    probe = make_relation(sess.remote, 16 * ROWS, ROWS, 16, seed=5)
+    return [
+        sess.task("ems", WorkloadStats(size_r=24, k_cap=4),
+                  inputs={"page_ids": ids}, rows_per_page=ROWS),
+        sess.task("ehj", WorkloadStats(size_r=8, size_s=16, out=6,
+                                       partitions=4, sigma=0.5),
+                  inputs={"build": build, "probe": probe}),
+    ]
+
+
+def _run(remote):
+    sess = Session(remote, budget=M_TOTAL)
+    return sess, sess.run(_tasks(sess))
+
+
+def _outputs(sess, res):
+    pages = []
+    for op, result, _ in res.per_op:
+        ids = result.run_page_ids if op == "ems" else result.output_page_ids
+        pages.append(sess.remote.peek_batch(ids))
+    return pages
+
+
+def run() -> List[Row]:
+    rows_out: List[Row] = []
+    report = {"schema": 1, "m_total": M_TOTAL, "scenarios": []}
+    for name, levels in SCENARIOS:
+        sim_sess, sim = _run(MemoryHierarchy(hierarchy_spec(*levels)))
+        backend = make_backend(*levels)
+        t0 = time.perf_counter()
+        bk_sess, bkr = _run(backend)
+        us = (time.perf_counter() - t0) * 1e6
+
+        ledger_parity = (
+            dataclasses.asdict(sim.total) == dataclasses.asdict(bkr.total))
+        output_parity = all(
+            len(pa) == len(pb) and all(
+                a.dtype == b.dtype and np.array_equal(a, b)
+                for a, b in zip(pa, pb))
+            for pa, pb in zip(_outputs(sim_sess, sim), _outputs(bk_sess, bkr)))
+        assert ledger_parity and output_parity, f"backend drifted on {name}"
+
+        simulated = sim.latency_seconds()
+        rows_out.append((f"backend_{name}_wall_over_simulated", us,
+                         round(bkr.wall_seconds / simulated, 4)))
+        report["scenarios"].append({
+            "name": name,
+            "simulated_seconds": simulated,
+            "latency_cost": sim.latency_cost(),
+            "wall_seconds": bkr.wall_seconds,
+            "parity": {"ledger": ledger_parity, "output": output_parity},
+            "kernel_calls": backend.wall.kernel_calls,
+            "kernel_fallbacks": backend.wall.kernel_fallbacks,
+            "wall": backend.wall.to_dict(),
+        })
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows_out
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

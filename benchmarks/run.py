@@ -15,12 +15,12 @@ import os
 import sys
 import traceback
 
-from benchmarks import (bench_bnlj, bench_cost_model, bench_eagg, bench_ehj,
-                        bench_ems, bench_endtoend, bench_kernel_policy,
-                        bench_pipeline, bench_prefetch, bench_pushdown,
-                        bench_registry, bench_sensitivity, bench_serving,
-                        bench_session, bench_table3, bench_table4,
-                        bench_table6, bench_tiering, bench_tpch)
+from benchmarks import (bench_backend, bench_bnlj, bench_cost_model,
+                        bench_eagg, bench_ehj, bench_ems, bench_endtoend,
+                        bench_kernel_policy, bench_pipeline, bench_prefetch,
+                        bench_pushdown, bench_registry, bench_sensitivity,
+                        bench_serving, bench_session, bench_table3,
+                        bench_table4, bench_table6, bench_tiering, bench_tpch)
 from benchmarks.common import emit
 
 MODULES = [
@@ -43,13 +43,14 @@ MODULES = [
     ("tpch", bench_tpch),
     ("pushdown", bench_pushdown),
     ("tpu_policies", bench_kernel_policy),
+    ("exec_backend", bench_backend),
 ]
 
 # The CI `bench-smoke` subset: the registry/operator/arbiter surfaces this
 # repo actively grows, fast enough for every push (~tens of seconds).
 QUICK = {"engine_registry", "table1_eq1", "table3", "table4", "table6",
          "fig6a_ehj", "eagg", "pipeline_arbiter", "tiering", "session_replan",
-         "serving", "tpch", "pushdown"}
+         "serving", "tpch", "pushdown", "exec_backend"}
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                          "BENCH_run.json")

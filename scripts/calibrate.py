@@ -1,0 +1,147 @@
+"""Calibrate per-tier (bandwidth, RTT, tau) from measured transfer sweeps.
+
+The simulator prices every transfer with the Table-I constants baked into
+:data:`repro.core.TABLE_I` — ``L = D/BW + C*RTT`` (Eq. 1).  This script runs
+*real* host<->device transfer sweeps through the execution backend
+(:class:`repro.remote.backend.ExecutionBackend`), reads the measured seconds
+off its :class:`WallClock`, and fits the same linear model per tier and
+direction:
+
+    seconds(bytes) = bytes / bandwidth + rounds * rtt
+
+via least squares over a sweep of batch sizes (each batch is one round, so
+the per-round intercept is the fitted RTT and the slope is 1/bandwidth).
+``tau = bandwidth * rtt / page_bytes`` follows from the fit, giving a
+measured counterpart to the ``TierSpec.tau_pages`` the arbiter plans with.
+
+On a CPU-only host every "tier" is the same memcpy path, so the fitted
+constants describe the *host*, not the modeled fabric — the point of the
+report is the assumed-vs-fitted ratio, which says exactly how far the
+simulation constants are from the machine the backend runs on.
+
+Usage:
+    PYTHONPATH=src python scripts/calibrate.py --out calibration.json
+    PYTHONPATH=src python scripts/calibrate.py --quick        # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import TABLE_I
+from repro.remote.backend import make_backend
+
+DEFAULT_TIERS = ("dram", "rdma", "tcp", "ssd")
+SWEEP = (1, 2, 4, 8, 16, 32)
+QUICK_SWEEP = (1, 2, 4, 8)
+
+
+def _fit(bytes_per_round: Sequence[float], seconds: Sequence[float]):
+    """Least-squares fit of seconds = bytes/bandwidth + rtt (one round each)."""
+    slope, intercept = np.polyfit(np.asarray(bytes_per_round, dtype=float),
+                                  np.asarray(seconds, dtype=float), 1)
+    bandwidth = float("inf") if slope <= 0 else 1.0 / slope
+    return bandwidth, max(float(intercept), 0.0)
+
+
+def sweep_tier(name: str, batch_sizes: Sequence[int], repeats: int,
+               elems_per_page: int) -> Dict:
+    """Measure write (h2d) and read (d2h) rounds on a 1-tier backend."""
+    spec = TABLE_I[name]
+    rng = np.random.default_rng(0)
+    sizes: List[float] = []
+    h2d: List[float] = []
+    d2h: List[float] = []
+    for n_pages in batch_sizes:
+        pages = [rng.integers(0, 2**30, size=elems_per_page, dtype=np.int32)
+                 for _ in range(n_pages)]
+        best_w = best_r = float("inf")
+        for _ in range(repeats):
+            backend = make_backend(spec)
+            tier = backend.tiers[0]
+            wall = backend.wall.tiers[name]
+            ids = tier.write_batch(pages)
+            best_w = min(best_w, wall.h2d_seconds)
+            tier.read_batch(ids)
+            best_r = min(best_r, wall.d2h_seconds)
+            tier.free(ids)
+        sizes.append(n_pages * elems_per_page * 4)
+        h2d.append(best_w)
+        d2h.append(best_r)
+
+    bw_w, rtt_w = _fit(sizes, h2d)
+    bw_r, rtt_r = _fit(sizes, d2h)
+    # One symmetric figure per tier, like the TierSpec it calibrates.
+    fitted_bw = min(bw_w, bw_r)
+    fitted_rtt = max(rtt_w, rtt_r)
+    return {
+        "tier": name,
+        "assumed": {"bandwidth": spec.bandwidth, "rtt": spec.rtt,
+                    "tau_pages": spec.tau_pages},
+        "fitted": {
+            "bandwidth": fitted_bw,
+            "rtt": fitted_rtt,
+            "tau_pages": fitted_bw * fitted_rtt / spec.page_bytes,
+            "h2d": {"bandwidth": bw_w, "rtt": rtt_w},
+            "d2h": {"bandwidth": bw_r, "rtt": rtt_r},
+        },
+        "ratio": {
+            "bandwidth": fitted_bw / spec.bandwidth,
+            "rtt": (fitted_rtt / spec.rtt) if spec.rtt else float("inf"),
+        },
+        "sweep": {"bytes_per_round": sizes, "h2d_seconds": h2d,
+                  "d2h_seconds": d2h, "repeats": repeats},
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiers", default=",".join(DEFAULT_TIERS),
+                    help="comma-separated Table-I tier names")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="repeats per batch size; the minimum is kept")
+    ap.add_argument("--elems-per-page", type=int, default=16384,
+                    help="int32 elements per page (default 64 KiB pages)")
+    ap.add_argument("--quick", action="store_true",
+                    help="short sweep, 1 repeat (CI smoke)")
+    ap.add_argument("--out", default="calibration.json",
+                    help="JSON report path")
+    args = ap.parse_args(argv)
+
+    batch_sizes = QUICK_SWEEP if args.quick else SWEEP
+    repeats = 1 if args.quick else args.repeats
+    tiers = [t.strip() for t in args.tiers.split(",") if t.strip()]
+    for t in tiers:
+        if t not in TABLE_I:
+            ap.error(f"unknown tier {t!r}; Table I has {sorted(TABLE_I)}")
+
+    report = {
+        "elems_per_page": args.elems_per_page,
+        "batch_sizes": list(batch_sizes),
+        "tiers": [sweep_tier(t, batch_sizes, repeats, args.elems_per_page)
+                  for t in tiers],
+    }
+
+    hdr = (f"{'tier':>6} {'assumed BW':>12} {'fitted BW':>12} "
+           f"{'assumed RTT':>12} {'fitted RTT':>12} {'fitted tau':>11}")
+    print(hdr)
+    print("-" * len(hdr))
+    for row in report["tiers"]:
+        a, f = row["assumed"], row["fitted"]
+        print(f"{row['tier']:>6} {a['bandwidth']:>12.3g} "
+              f"{f['bandwidth']:>12.3g} {a['rtt']:>12.3g} "
+              f"{f['rtt']:>12.3g} {f['tau_pages']:>11.3g}")
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"\nwrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,12 @@ Three conventions hold the architecture together:
     shares sum byte-for-byte to the totals" provable,
   * simulator paths (``core/``, ``engine/``, ``remote/``) are deterministic:
     no wall clock, no unseeded randomness — every BENCH_*.json number and
-    every ledger-exactness test depends on replayability.
+    every ledger-exactness test depends on replayability.  One carve-out:
+    ``remote/backend.py`` is the execution backend whose whole job is timing
+    real transfers and kernels, so wall-clock reads are allowed *there and
+    only there*; its RNG discipline is still checked, and the simulator
+    (``remote/simulator.py``) and router (``engine/scheduler.py``) stay
+    fully clock-free.
 """
 
 from __future__ import annotations
@@ -34,6 +39,15 @@ MUTATING_METHODS = {"read", "write", "pushdown", "merge", "reset"}
 
 # Packages that form the deterministic simulator stack.
 DETERMINISTIC_PKGS = ("core", "engine", "remote")
+
+# The one file allowed to read the wall clock: the execution backend, which
+# *measures* transfers instead of simulating them.  The exemption covers
+# clock calls only — unseeded RNG stays a violation even here, and every
+# other deterministic-stack file (simulator.py, scheduler.py included) keeps
+# the full check.
+WALLCLOCK_EXEMPT = {
+    ("remote", "backend.py"),
+}
 
 # Wall-clock and unseeded-randomness call patterns (suffix of the dotted
 # chain).  ``default_rng`` is handled separately: seeded calls are fine.
@@ -91,12 +105,18 @@ def check_layering(project: Project) -> Iterator[Finding]:
                 path == project.src.joinpath(*parts)
                 for parts in LEDGER_MUTATORS
             )
+            clock_exempt = any(
+                path == project.src.joinpath(*parts)
+                for parts in WALLCLOCK_EXEMPT
+            )
             random_names = _imports_random(tree)
             for node in ast.walk(tree):
                 yield from _check_ledger_mutation(
                     node, rel, is_mutator_file
                 )
-                yield from _check_nondeterminism(node, rel, random_names)
+                yield from _check_nondeterminism(
+                    node, rel, random_names, clock_exempt
+                )
 
 
 def _check_ledger_mutation(
@@ -133,7 +153,8 @@ def _check_ledger_mutation(
 
 
 def _check_nondeterminism(
-    node: ast.AST, rel: str, random_names: Set[str]
+    node: ast.AST, rel: str, random_names: Set[str],
+    clock_exempt: bool = False,
 ) -> Iterator[Finding]:
     if not isinstance(node, ast.Call):
         return
@@ -142,6 +163,8 @@ def _check_nondeterminism(
         return
     tail = tuple(chain[-2:])
     if tail in NONDET_CALLS:
+        if clock_exempt:
+            return  # the backend's job is timing; RNG checks still apply
         yield Finding(
             "LAY303", rel, node.lineno,
             f"nondeterministic call {'.'.join(chain)}() in a simulator "
@@ -179,7 +202,7 @@ def _check_nondeterminism(
 _SUMMARIES = {
     "LAY301": "core/ must not import repro.engine or repro.remote",
     "LAY302": "only simulator.py and scheduler.py may mutate ledgers",
-    "LAY303": "simulator paths must stay deterministic (no clock/global RNG)",
+    "LAY303": "simulator paths must stay deterministic (no clock/global RNG; remote/backend.py alone may read the clock)",
 }
 for _code, _summary in _SUMMARIES.items():
     rule(_code, _summary)(check_layering)

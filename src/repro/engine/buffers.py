@@ -166,9 +166,16 @@ class PageCursor:
         return int(self._buf[-1])
 
     def take_upto(self, bound: Optional[int]) -> np.ndarray:
-        """Consume buffered elements ``<= bound`` (all of them when ``None``)."""
+        """Consume buffered elements ``<= bound`` (all of them when ``None``).
+
+        The empty result keeps the buffered dtype when one is known — an
+        execution backend streams real (possibly non-int64) pages through
+        the same cursors, and a dtype-mismatched empty would poison the
+        consumer's concatenation.
+        """
         if self.buffered == 0:
-            return np.empty((0,), dtype=np.int64)
+            dtype = np.int64 if self._buf is None else self._buf.dtype
+            return np.empty((0,), dtype=dtype)
         if bound is None:
             out, self._buf = self._buf, self._buf[:0]
             return out

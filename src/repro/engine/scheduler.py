@@ -138,6 +138,43 @@ class TransferScheduler:
         """Forget ``label`` (missing labels are ignored)."""
         self._checkpoints.pop(label, None)
 
+    # -- execution-backend surface -------------------------------------------
+    #
+    # A target may be an execution backend (repro.remote.backend): pages then
+    # mirror as device arrays, transfers are timed host<->device copies, and
+    # operator compute can run Pallas kernels.  The scheduler routes those
+    # capabilities exactly like it routes transfer rounds — operators ask the
+    # scheduler, never the store — and degrades to the deterministic numpy
+    # reference on simulator targets.  Nothing here reads a clock: the
+    # scheduler stays on the LAY303-deterministic side of the boundary.
+
+    @property
+    def wall(self):
+        """The target's measured wall clock, or ``None`` on a simulator."""
+        return getattr(self.remote, "wall", None)
+
+    def sort_keys(self, keys: np.ndarray) -> np.ndarray:
+        """Sort a 1-D key block: the backend's kernel hook, else numpy.
+
+        Both paths return byte-identical sorted keys (bare keys carry no
+        payload); only wall-clock accounting differs.
+        """
+        fn = getattr(self.remote, "sort_keys", None)
+        if fn is not None:
+            return fn(keys)
+        return np.sort(keys, kind="stable")
+
+    def partitions(self, rows: np.ndarray, parts: np.ndarray):
+        """Group a row block by partition id, ascending, stable within groups.
+
+        Returns ``[(q, rows_of_q), ...]`` — on a backend via the dispatch
+        kernels, else the numpy reference; outputs are byte-identical.
+        """
+        fn = getattr(self.remote, "partition_rows", None)
+        if fn is not None:
+            return fn(rows, parts)
+        return [(int(q), rows[parts == q]) for q in np.unique(parts)]
+
     # -- transfer rounds -----------------------------------------------------
 
     def read(

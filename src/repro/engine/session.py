@@ -309,6 +309,11 @@ class SessionRunResult:
     # subtrees overlapped under per-tier processor sharing — never more than
     # the serial ``latency_seconds()``; equal for a linear chain.
     makespan_seconds: Optional[float] = None
+    # Execution-backend targets only: measured wall-clock seconds of the real
+    # host<->device transfers + Pallas kernel time this run spent (read off
+    # the backend's WallClock — the session itself never touches a clock).
+    # ``None`` on simulator targets; never regression-gated in CI.
+    wall_seconds: Optional[float] = None
 
     @property
     def per_op(self) -> List[Tuple[str, Any, Any]]:
@@ -1000,6 +1005,7 @@ class Session:
         self._run_seq += 1
         run_label = f"session-run{self._run_seq}"
         sched = self.scheduler
+        wall0 = None if sched.wall is None else sched.wall.total_seconds
         sched.checkpoint(run_label)
         try:
             for i, task in enumerate(tasks):
@@ -1031,6 +1037,9 @@ class Session:
             per_task=per_task, total=total, plan=pplan, replan_events=events,
             tier=self.tier, hierarchy=self.hierarchy,
             overlap_migration=self.overlap_migration,
+            wall_seconds=(
+                None if wall0 is None else sched.wall.total_seconds - wall0
+            ),
         )
 
     def _run_dag(
@@ -1068,6 +1077,7 @@ class Session:
         self._run_seq += 1
         run_label = f"session-run{self._run_seq}"
         sched = self.scheduler
+        wall0 = None if sched.wall is None else sched.wall.total_seconds
         sched.checkpoint(run_label)
         try:
             for _ in range(n):
@@ -1116,6 +1126,9 @@ class Session:
             tier=self.tier, hierarchy=self.hierarchy,
             overlap_migration=self.overlap_migration,
             schedule="dag", makespan_seconds=playback_dag(chunks, deps),
+            wall_seconds=(
+                None if wall0 is None else sched.wall.total_seconds - wall0
+            ),
         )
 
     # -- mid-pipeline re-arbitration ------------------------------------------

@@ -9,18 +9,22 @@ import jax.numpy as jnp
 
 from repro.kernels.dispatch.dispatch import gather_rows
 from repro.kernels.merge_sort.ops import argsort_by_key
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("n_experts", "capacity", "interpret"))
 def remop_dispatch(x: jnp.ndarray, expert_ids: jnp.ndarray, n_experts: int,
-                   capacity: int, interpret: bool = True):
+                   capacity: int, interpret: bool | None = None):
     """Partition assignment rows into per-expert buffers (EHJ build phase).
 
     x: [A, d] rows (token features repeated per expert choice);
     expert_ids: [A].  Returns (expert_in [E, C, d], slot [A]).
     """
+    interpret = resolve_interpret(interpret)
     a, d = x.shape
-    order = argsort_by_key(expert_ids, interpret=interpret)  # expert-major, stable
+    # Expert-major, stable; expert ids are static-bounded by n_experts.
+    order = argsort_by_key(expert_ids, interpret=interpret,
+                           max_key=n_experts - 1)
     sorted_ids = expert_ids[order]
     # Rank within expert among sorted assignments.
     counts = jnp.bincount(expert_ids, length=n_experts)
@@ -45,8 +49,9 @@ def remop_dispatch(x: jnp.ndarray, expert_ids: jnp.ndarray, n_experts: int,
 
 @functools.partial(jax.jit, static_argnames=("top_k", "interpret"))
 def remop_combine(expert_out: jnp.ndarray, slot: jnp.ndarray,
-                  weights: jnp.ndarray, top_k: int, interpret: bool = True):
+                  weights: jnp.ndarray, top_k: int, interpret: bool | None = None):
     """Gather expert outputs back to token order and weight-sum over top-k."""
+    interpret = resolve_interpret(interpret)
     e, c, d = expert_out.shape
     a = slot.shape[0]
     flat = expert_out.reshape(e * c, d)

@@ -8,6 +8,7 @@ import jax
 
 from repro.core.cost_model import TPU_V5E
 from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.runtime import resolve_interpret
 
 
 def plan_blocks(s: int, t: int, hd: int, dtype_bytes: int = 2,
@@ -39,7 +40,8 @@ def plan_blocks(s: int, t: int, hd: int, dtype_bytes: int = 2,
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
 def remop_flash_attention(q, k, v, bq: int | None = None, bk: int | None = None,
-                          interpret: bool = True):
+                          interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     b, h, s, hd = q.shape
     t = k.shape[2]
     if bq is None or bk is None:

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.planner import MatmulTilePlan, conventional_matmul_tiles, plan_matmul_tiles
 from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.runtime import resolve_interpret
 
 
 def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
@@ -34,8 +35,9 @@ def plan_for(a_shape, b_shape, dtype=jnp.bfloat16, policy: str = "remop",
 
 @functools.partial(jax.jit, static_argnames=("policy", "interpret", "out_dtype"))
 def remop_matmul(a: jnp.ndarray, b: jnp.ndarray, policy: str = "remop",
-                 interpret: bool = True, out_dtype=None) -> jnp.ndarray:
+                 interpret: bool | None = None, out_dtype=None) -> jnp.ndarray:
     """Blocked matmul with REMOP-planned tiles (pads to tile multiples)."""
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     _, n = b.shape
     plan = plan_for(a.shape, b.shape, a.dtype, policy)

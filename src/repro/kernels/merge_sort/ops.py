@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.planner import plan_sort
 from repro.kernels.merge_sort.merge_sort import merge_pass, sort_blocks
+from repro.kernels.runtime import resolve_interpret
 
 
 def _next_pow2(n: int) -> int:
@@ -17,12 +18,14 @@ def _next_pow2(n: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=("run_items", "interpret"))
 def remop_sort(keys: jnp.ndarray, values: jnp.ndarray | None = None,
-               run_items: int | None = None, interpret: bool = True):
+               run_items: int | None = None, interpret: bool | None = None):
     """Sort (keys[, values]) ascending via blocked bitonic merge sort.
 
     `run_items` (power of two) is the in-core run size; defaults to the
-    REMOP sort plan's run for the key dtype.
+    REMOP sort plan's run for the key dtype.  ``interpret=None`` auto-detects
+    the Pallas mode (compiled on TPU/GPU, interpreter on CPU).
     """
+    interpret = resolve_interpret(interpret)
     n = keys.shape[0]
     if values is None:
         values = jnp.arange(n, dtype=jnp.int32)
@@ -46,13 +49,31 @@ def remop_sort(keys: jnp.ndarray, values: jnp.ndarray | None = None,
     return kp[:n], vp[:n]
 
 
-def argsort_by_key(keys: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+def argsort_by_key(keys: jnp.ndarray, interpret: bool | None = None,
+                   max_key: int | None = None) -> jnp.ndarray:
     """Stable argsort via unique composite keys (key-major, index-minor).
 
-    Requires max(keys) * n + n < 2^31 (int32 composite) — always true for the
-    MoE use (expert ids are small); asserted at trace time via shapes only.
+    Requires ``max(keys) * n + n < 2**31`` (the composite is built in int32).
+    The precondition is checked at trace time from static bounds: ``max_key``
+    when given (a static promise about the key range — e.g. ``n_experts - 1``
+    for MoE expert ids), else the key dtype's maximum.  A violated bound
+    raises ``ValueError`` instead of silently overflowing into a wrong
+    permutation.
     """
-    n = keys.shape[0]
+    n = int(keys.shape[0])
+    if keys.dtype.kind not in "iu":
+        raise ValueError(
+            f"argsort_by_key needs integer keys, got dtype {keys.dtype}"
+        )
+    bound = int(jnp.iinfo(keys.dtype).max) if max_key is None else int(max_key)
+    if bound < 0:
+        raise ValueError(f"max_key must be >= 0, got {max_key}")
+    if n and bound * n + n >= 2**31:
+        raise ValueError(
+            f"argsort_by_key composite overflows int32: "
+            f"max_key({bound}) * n({n}) + n >= 2**31 — pass a tighter "
+            f"static max_key= bound for the actual key range"
+        )
     composite = keys.astype(jnp.int32) * jnp.int32(n) + jnp.arange(n, dtype=jnp.int32)
     _, idx = remop_sort(composite, jnp.arange(n, dtype=jnp.int32),
                         interpret=interpret)

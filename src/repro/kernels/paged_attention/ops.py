@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.core.planner import plan_kv_pages
 from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.runtime import resolve_interpret
 
 
 def planned_page(context_len: int, kv_heads: int, head_dim: int,
@@ -19,12 +20,13 @@ def planned_page(context_len: int, kv_heads: int, head_dim: int,
 
 @functools.partial(jax.jit, static_argnames=("page", "interpret"))
 def remop_paged_attention(q, k_cache, v_cache, lengths, page: int | None = None,
-                          interpret: bool = True):
+                          interpret: bool | None = None):
     """Decode attention over an HBM-paged KV cache.
 
     q: [B, KV, G, hd]; caches [B, S, KV, hd]; lengths [B].
     Pads S to a page multiple (masked by lengths).
     """
+    interpret = resolve_interpret(interpret)
     b, s, kv, hd = k_cache.shape
     page = page or min(s, 128)
     pad = (-s) % page

@@ -1,0 +1,33 @@
+"""Runtime helpers shared by the kernel wrappers (`*/ops.py`)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """Whether kernel wrappers should default to Pallas interpret mode.
+
+    Compiled Mosaic/Triton lowering needs a real accelerator; on CPU the
+    interpreter is the only way to run the kernels at all, so it stays the
+    default there.  On TPU/GPU the compiled path is the point of shipping
+    kernels, so interpretation is opt-in.
+    """
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a wrapper's ``interpret=`` argument to a concrete mode.
+
+    ``None`` (the wrappers' default) auto-detects from the jax backend:
+    interpret mode on CPU (identical to the historical ``interpret=True``
+    default there), compiled execution on TPU/GPU.  An explicit
+    ``True``/``False`` always wins.  Runs at trace time — ``interpret`` is a
+    static argument everywhere it reaches a ``pallas_call``.
+    """
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)

@@ -7,8 +7,9 @@ import functools
 import jax
 
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.runtime import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def remop_ssd_scan(states, decays, interpret: bool = True):
-    return ssd_scan(states, decays, interpret=interpret)
+def remop_ssd_scan(states, decays, interpret: bool | None = None):
+    return ssd_scan(states, decays, interpret=resolve_interpret(interpret))

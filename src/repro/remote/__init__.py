@@ -25,4 +25,17 @@ __all__ = [
     "ems_sort", "ems_oracle", "SortResult",
     "ehj", "ehj_oracle", "HashJoinResult",
     "eagg", "eagg_oracle", "AggResult",
+    "ExecutionBackend", "BackendTier", "WallClock", "make_backend",
 ]
+
+_BACKEND_NAMES = {"ExecutionBackend", "BackendTier", "WallClock", "make_backend"}
+
+
+def __getattr__(name):
+    # The execution backend imports jax + the Pallas kernels; load it lazily
+    # so simulator-only consumers never pay (or require) the kernel stack.
+    if name in _BACKEND_NAMES:
+        from repro.remote import backend
+
+        return getattr(backend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

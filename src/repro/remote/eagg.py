@@ -128,12 +128,11 @@ def eagg(
     for rows in PageCursor(sched, rel.page_ids, round(r_r1),
                            prefetch=prefetch).blocks():
         parts = _hash_part(rows[:, 0], p)
-        for q in np.unique(parts):
-            sel = rows[parts == q]
-            if int(q) in spilled:
-                spill_pool.add(sel, stream=int(q))
+        for q, sel in sched.partitions(rows, parts):
+            if q in spilled:
+                spill_pool.add(sel, stream=q)
             else:
-                resident[int(q)].append(sel)
+                resident[q].append(sel)
     spill_pool.flush_all()
     out_pool = BufferPool(sched, r_o1, rows_per_page, tier=tiers["output"])
     group_rows = 0

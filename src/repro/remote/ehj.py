@@ -106,12 +106,11 @@ def ehj(
     for rows in PageCursor(sched, build.page_ids, round(r_r1),
                            prefetch=prefetch).blocks():
         parts = hash_part(rows[:, 0])
-        for q in np.unique(parts):
-            sel = rows[parts == q]
-            if int(q) in spilled:
-                build_pool.add(sel, stream=int(q))
+        for q, sel in sched.partitions(rows, parts):
+            if q in spilled:
+                build_pool.add(sel, stream=q)
             else:
-                resident_build[int(q)].append(sel)
+                resident_build[q].append(sel)
     build_pool.flush_all()
     resident_tables = {
         q: (np.concatenate(v, axis=0) if v else np.empty((0, 2), dtype=np.int64))
@@ -130,12 +129,11 @@ def ehj(
     for rows in PageCursor(sched, probe.page_ids, round(r_r2),
                            prefetch=prefetch).blocks():
         parts = hash_part(rows[:, 0])
-        for q in np.unique(parts):
-            sel = rows[parts == q]
-            if int(q) in spilled:
-                stage_pool.add(sel, stream=int(q))
+        for q, sel in sched.partitions(rows, parts):
+            if q in spilled:
+                stage_pool.add(sel, stream=q)
             else:
-                matched = _block_join(resident_tables[int(q)], sel)
+                matched = _block_join(resident_tables[q], sel)
                 if len(matched):
                     output_rows += len(matched)
                     out_pool.add(matched)  # single resident-output stream

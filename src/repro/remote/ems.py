@@ -80,13 +80,13 @@ def _merge_group(
         bounds = [b for c in active if (b := c.safe_bound()) is not None]
         bound = min(bounds) if bounds else None
         taken = [c.take_upto(bound) for c in active]
-        merged = np.sort(np.concatenate(taken), kind="stable")
+        merged = sched.sort_keys(np.concatenate(taken))
         if len(merged) == 0:
             # Bound excluded everything buffered: force the binding cursor on.
             binding = min(
                 active, key=lambda c: c.safe_bound() or np.iinfo(np.int64).max
             )
-            out_pool.add(np.sort(binding.take_upto(None)))
+            out_pool.add(sched.sort_keys(binding.take_upto(None)))
         else:
             out_pool.add(merged)
     out_pool.flush_all()
@@ -124,7 +124,7 @@ def ems_sort(
             pages = sched.read(ids)  # 1 round
         else:
             pages = remote.peek_batch(ids)
-        data = np.sort(np.concatenate([p.ravel() for p in pages]), kind="stable")
+        data = sched.sort_keys(np.concatenate([p.ravel() for p in pages]))
         out_pages = [data[i : i + rows_per_page] for i in range(0, len(data), rows_per_page)]
         if count_run_formation:
             runs.append(sched.write(out_pages, tier=tiers["runs"]))  # 1 round

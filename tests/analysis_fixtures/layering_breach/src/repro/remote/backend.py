@@ -1,0 +1,16 @@
+"""Fixture: the wall-clock carve-out file.
+
+``remote/backend.py`` may read the clock (that is its job), so the
+``time.perf_counter`` call below must NOT be reported — but unseeded
+randomness is still a LAY303 breach even here.
+"""
+
+import time
+
+import numpy as np
+
+
+def timed_noise():
+    t0 = time.perf_counter()  # allowed: backend carve-out
+    rng = np.random.default_rng()  # seeded: unseeded RNG still flagged
+    return rng.random(), time.perf_counter() - t0

@@ -1,0 +1,91 @@
+"""The CI regression gate must never gate wall-clock measurements.
+
+``scripts/check_regression.py`` compares committed ``BENCH_*.json`` baselines
+against fresh runs, but only over *deterministic simulator outputs* — the
+``modeled_latency`` / ``simulated_seconds`` / ``latency_cost`` keys.  The
+execution backend now writes measured ``wall_seconds`` (and the bench harness
+has always written ``us_per_call``) next to those numbers; both vary with the
+CI machine, so a 10x wall-clock swing must sail through while a 1% simulated
+regression still fails.  These tests pin that boundary.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_regression", REPO_ROOT / "scripts" / "check_regression.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+checker = _load_checker()
+
+
+def _metrics(payload) -> dict:
+    return dict(checker._walk(payload))
+
+
+def test_metric_keys_are_exactly_the_three_simulated_ones():
+    assert tuple(sorted(checker.METRIC_KEYS)) == (
+        "latency_cost", "modeled_latency", "simulated_seconds",
+    )
+    for wall_key in ("wall_seconds", "us_per_call"):
+        assert wall_key not in checker.METRIC_KEYS
+
+
+def test_wall_clock_keys_are_never_walked():
+    payload = {
+        "rows": [
+            {
+                "name": "ems/backend",
+                "us_per_call": 1234.5,
+                "wall_seconds": 9.87,
+                "derived": {
+                    "simulated_seconds": 0.5,
+                    "wall_seconds": 11.0,
+                    "wall": {"kernel_seconds": 3.0, "us_per_call": 7.0},
+                },
+            }
+        ],
+        "wall_seconds": 42.0,
+    }
+    metrics = _metrics(payload)
+    assert metrics == {"rows[ems/backend].derived.simulated_seconds": 0.5}
+
+
+def test_wall_clock_regression_passes_while_simulated_fails(tmp_path, capsys):
+    def bench(simulated, wall):
+        return {"rows": [{"name": "x", "derived": {
+            "simulated_seconds": simulated, "wall_seconds": wall}}]}
+
+    base = tmp_path / "base.json"
+    cur = tmp_path / "cur.json"
+    base.write_text(json.dumps(bench(1.0, 1.0)))
+
+    # 10x wall-clock growth, simulated flat: the gate must pass.
+    cur.write_text(json.dumps(bench(1.0, 10.0)))
+    assert checker.main([str(base), str(cur)]) == 0
+
+    # Simulated +20% beyond the 10% threshold: the gate must fail.
+    cur.write_text(json.dumps(bench(1.2, 1.0)))
+    assert checker.main([str(base), str(cur)]) == 1
+    err = capsys.readouterr().err
+    assert "simulated_seconds" in err
+    assert "wall_seconds" not in err
+
+
+def test_nested_metric_subtrees_still_gated():
+    # Everything *under* a gated key is gated (per-tier latency splits), but
+    # a wall_seconds sibling inside that subtree is a leaf under the gated
+    # key and therefore gated too — wall keys must stay out of gated trees.
+    payload = {"latency_cost": {"dram": 1.0, "ssd": 2.0}}
+    assert _metrics(payload) == {
+        "latency_cost.dram": 1.0, "latency_cost.ssd": 2.0,
+    }

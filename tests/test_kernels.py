@@ -86,9 +86,60 @@ def test_sort_property(n, run, seed):
 
 def test_argsort_stable_matches_jnp():
     keys = jax.random.randint(jax.random.key(7), (512,), 0, 8, jnp.int32)
-    got = argsort_by_key(keys)
+    got = argsort_by_key(keys, max_key=7)
     np.testing.assert_array_equal(np.asarray(got),
                                   np.asarray(jnp.argsort(keys, stable=True)))
+
+
+def test_argsort_small_dtype_needs_no_max_key():
+    # int16 keys bound the composite statically: iinfo.max * n + n < 2^31.
+    keys = jax.random.randint(jax.random.key(17), (256,), 0, 1 << 14, jnp.int32)
+    got = argsort_by_key(keys.astype(jnp.int16))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argsort(keys, stable=True)))
+
+
+def test_argsort_overflow_guard_raises():
+    # max(keys)*n + n >= 2^31: the old code silently wrapped the composite
+    # and returned a wrong permutation; the guard must refuse at trace time.
+    n = 1 << 12
+    keys = jnp.full((n,), (1 << 20), jnp.int32)
+    with pytest.raises(ValueError, match="overflows int32"):
+        argsort_by_key(keys)  # dtype bound: iinfo(int32).max * n overflows
+    with pytest.raises(ValueError, match="overflows int32"):
+        argsort_by_key(keys, max_key=1 << 20)  # honest bound still overflows
+    with pytest.raises(ValueError, match="max_key must be >= 0"):
+        argsort_by_key(keys, max_key=-1)
+
+
+def test_argsort_max_key_boundary_is_exact():
+    # Largest admissible bound for this n: (max_key + 1) * n == 2^31 - n.
+    n = 512
+    max_key = (2**31 - n) // n - 1
+    keys = jax.random.randint(jax.random.key(23), (n,), 0, max_key + 1, jnp.int32)
+    got = argsort_by_key(keys, max_key=max_key)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argsort(keys, stable=True)))
+    with pytest.raises(ValueError, match="overflows int32"):
+        argsort_by_key(keys, max_key=max_key + 1)
+
+
+def test_interpret_default_autodetects_backend():
+    from repro.kernels.runtime import default_interpret, resolve_interpret
+
+    on_cpu = jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+    assert default_interpret() is on_cpu
+    assert resolve_interpret(None) is on_cpu
+    # Explicit values always win over the auto-detect.
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # The new default must behave exactly like the historical interpret=True
+    # call sites on CPU: same results out of the wrapper either way.
+    keys = jax.random.randint(jax.random.key(29), (128,), 0, 1 << 10, jnp.int32)
+    default_sorted, _ = remop_sort(keys, run_items=32)
+    explicit_sorted, _ = remop_sort(keys, run_items=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(default_sorted),
+                                  np.asarray(explicit_sorted))
 
 
 def test_sort_carries_values():
